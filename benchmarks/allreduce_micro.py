@@ -1,0 +1,117 @@
+"""Paper Figs. 4 & 6: Allreduce latency vs message size per design.
+
+Two complementary modes:
+  * analytic — α-β(-γ) model on TPU v5e constants for: MPI (default,
+    host-staged reduction), MPI-Opt (the paper's RHD + on-chip kernel
+    reduction), NCCL2 analogue (vendor psum), ring (Baidu), PS (gRPC).
+  * measured — wall-clock of the actual ppermute implementations on 8
+    XLA host devices (semantics identical to TPU; absolute numbers are
+    CPU-bound, relative step-count effects are visible). Runs in a
+    subprocess so the main process keeps one device.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from repro.core import cost_model as cm
+
+SIZES = [8, 1024, 64 * 1024, 1 << 20, 16 << 20, 64 << 20, 256 << 20]
+P_DEVICES = 16
+
+
+def analytic_rows():
+    rows = []
+    for n in SIZES:
+        mpi_def = cm.allreduce_latency_host_staged("rhd_rsa", n, P_DEVICES)
+        mpi_opt = cm.allreduce_latency("rhd_rsa", n, P_DEVICES)
+        ring = cm.allreduce_latency("ring_rsa", n, P_DEVICES)
+        vendor = cm.allreduce_latency("psum", n, P_DEVICES)
+        ps = cm.allreduce_latency("ps_gather", n, P_DEVICES)
+        rows.append({
+            "bytes": n,
+            "MPI_default_us": mpi_def * 1e6,
+            "MPI_Opt_us": mpi_opt * 1e6,
+            "ring_us": ring * 1e6,
+            "NCCL2_us": vendor * 1e6,
+            "PS_us": ps * 1e6,
+            "opt_vs_default": mpi_def / mpi_opt,
+            "opt_vs_vendor": vendor / mpi_opt,
+        })
+    return rows
+
+
+_MEASURE_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time, json
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import reducers
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+out = []
+for n_bytes in {sizes!r}:
+    n = max(n_bytes // 4, 1)
+    x = jnp.ones((8 * n,), jnp.float32)
+    row = {{"bytes": n_bytes}}
+    for strat in ["psum", "ring_rsa", "rhd_rsa", "ps_gather"]:
+        fn = jax.jit(jax.shard_map(
+            lambda xl: reducers.allreduce(xl, ("data",), strat),
+            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+            axis_names={{"data"}}, check_vma=False))
+        r = fn(x); r.block_until_ready()
+        reps = 20 if n_bytes < (1 << 20) else 5
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r = fn(x)
+        r.block_until_ready()
+        row[strat + "_us"] = (time.perf_counter() - t0) / reps * 1e6
+    out.append(row)
+print(json.dumps(out))
+"""
+
+
+def measured_rows(sizes=None):
+    sizes = sizes or [8, 64 * 1024, 1 << 20, 16 << 20]
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _MEASURE_SNIPPET.format(src=os.path.abspath(src), sizes=sizes)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run(csv=True, measure=True):
+    rows = analytic_rows()
+    lines = []
+    for r in rows:
+        lines.append(f"allreduce_micro.analytic.MPI_default,"
+                     f"{r['MPI_default_us']:.2f},bytes={r['bytes']}")
+        lines.append(f"allreduce_micro.analytic.MPI_Opt,"
+                     f"{r['MPI_Opt_us']:.2f},bytes={r['bytes']} "
+                     f"opt_vs_default={r['opt_vs_default']:.1f}x "
+                     f"opt_vs_vendor={r['opt_vs_vendor']:.1f}x")
+        lines.append(f"allreduce_micro.analytic.NCCL2,"
+                     f"{r['NCCL2_us']:.2f},bytes={r['bytes']}")
+        lines.append(f"allreduce_micro.analytic.PS,"
+                     f"{r['PS_us']:.2f},bytes={r['bytes']}")
+    if measure:
+        for r in measured_rows():
+            for k, v in r.items():
+                if k.endswith("_us"):
+                    lines.append(f"allreduce_micro.measured.{k[:-3]},"
+                                 f"{v:.1f},bytes={r['bytes']} host-cpu")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

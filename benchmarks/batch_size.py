@@ -1,0 +1,77 @@
+"""Paper Fig. 2: effect of batch size on single-device throughput.
+
+Measured: reduced ResNet-50 forward+backward on the host CPU device
+across batch sizes (the qualitative diminishing-returns curve).
+Analytic: full ResNet-50 on v5e — throughput saturates once the batch
+amortises fixed per-step overheads, reproducing the paper's "faster
+accelerators need larger batches to saturate, sweet spot ~64" insight.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.models import cnn
+from repro.models.cnn import PAPER_MODELS
+
+BATCHES = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def measured(batches=(1, 2, 4, 8), image=48, steps=3):
+    spec = cnn.CnnSpec("resnet50", image_size=image)
+    params = cnn.resnet50_params(jax.random.PRNGKey(0))
+
+    rows = []
+    for b in batches:
+        batch = {"images": jnp.ones((b, image, image, 3)),
+                 "labels": jnp.zeros((b,), jnp.int32)}
+
+        @jax.jit
+        def step(p, batch):
+            loss, _ = cnn.cnn_loss(cnn.resnet50_forward, p, batch, spec)
+            return jax.grad(
+                lambda q: cnn.cnn_loss(cnn.resnet50_forward, q, batch,
+                                       spec)[0])(p)
+
+        g = step(params, batch)
+        jax.block_until_ready(g)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            g = step(params, batch)
+        jax.block_until_ready(g)
+        dt = (time.perf_counter() - t0) / steps
+        rows.append((b, b / dt, dt))
+    return rows
+
+
+def analytic(model="resnet50", overhead_s=450e-6, mfu=0.45):
+    """images/sec vs batch with a fixed per-step overhead (dispatch,
+    optimizer, collectives setup) — the saturation curve of Fig. 2."""
+    info = PAPER_MODELS[model]
+    rows = []
+    for b in BATCHES:
+        compute = 3 * info["gflops"] * 1e9 * b / \
+            (hw.V5E.peak_bf16_flops * mfu)
+        t = compute + overhead_s
+        rows.append((b, b / t))
+    return rows
+
+
+def run(csv=True, measure=True):
+    lines = []
+    for b, ips in analytic():
+        lines.append(f"batch_size.analytic.resnet50,{1e6 * b / ips:.1f},"
+                     f"batch={b} images_per_s={ips:.0f}")
+    if measure:
+        for b, ips, dt in measured():
+            lines.append(f"batch_size.measured.resnet50_reduced,"
+                         f"{dt * 1e6:.0f},batch={b} images_per_s={ips:.1f}"
+                         f" host-cpu")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

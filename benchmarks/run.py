@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV (plus a header per section).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+--fast skips the measured (subprocess, multi-minute) entries and keeps
+the analytic ones.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (allreduce_micro, batch_size, fusion_sweep,
+                            plan_cache, scaling, tf_cnn_analogue)
+
+    sections = [
+        ("Fig2_batch_size", lambda: batch_size.run(
+            measure=not args.fast)),
+        ("Fig4_6_allreduce_micro", lambda: allreduce_micro.run(
+            measure=not args.fast)),
+        ("Fig3_7_8_9_scaling", scaling.run),
+        ("SecIIIC_fusion_sweep", fusion_sweep.run),
+        ("SecVB_plan_cache", plan_cache.run),
+    ]
+    if not args.fast:
+        sections.append(("SecIV_tf_cnn_analogue", tf_cnn_analogue.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            for line in fn():
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"# {title} FAILED:")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,81 @@
+"""The paper in one script: train the SAME model with every gradient-
+aggregation design and show (1) identical learning curves — the algorithm
+is semantics-preserving, (2) the communication schedule each one compiles
+to, (3) the projected TPU-v5e latency of each (α-β model).
+
+    PYTHONPATH=src python examples/allreduce_comparison.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+
+from repro.configs import get_spec
+from repro.core import AggregatorConfig, cost_model
+from repro.data.synthetic import SyntheticText
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train import TrainStepConfig, make_train_step
+
+STRATEGIES = ["psum", "ring_rsa", "rhd_rsa", "ps_gather", "hierarchical"]
+LABEL = {
+    "psum": "vendor library (NCCL2 analogue)",
+    "ring_rsa": "Baidu ring allreduce",
+    "rhd_rsa": "paper's MPI-Opt (recursive halving/doubling)",
+    "ps_gather": "gRPC parameter-server pattern",
+    "hierarchical": "two-level intra/inter-pod (beyond paper)",
+}
+
+
+def main():
+    mesh = make_host_mesh(pods=2, data=4, model=1)
+    spec = get_spec("smollm-360m").reduced()
+    model = build_model(spec)
+    data = SyntheticText(spec.vocab_size, batch=8, seq_len=32)
+
+    grad_bytes = sum(
+        x.size * 4 for x in jax.tree_util.tree_leaves(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model: {spec.name} reduced, gradient volume "
+          f"{grad_bytes / 2 ** 20:.1f} MiB\n")
+
+    for strategy in STRATEGIES:
+        opt = sgd(1e-2)
+        cfg = TrainStepConfig(
+            aggregator=AggregatorConfig(strategy=strategy),
+            dp_axes=("pod", "data"))
+        step_fn, _ = make_train_step(model, opt, mesh, cfg,
+                                     data.batch_at(0), donate=False)
+        params = model.init(jax.random.PRNGKey(1))
+        state = opt.init(params)
+        losses = []
+        for i in range(6):
+            params, state, m = step_fn(params, state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        # compiled communication schedule
+        import collections
+        txt = step_fn.lower(params, state, data.batch_at(0)) \
+            .compile().as_text()
+        counts = collections.Counter()
+        for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute"):
+            n = txt.count(f" {kind}(")
+            if n:
+                counts[kind] = n
+        if strategy == "hierarchical":
+            proj = cost_model.hierarchical_latency(grad_bytes, d=4,
+                                                   pods=2)
+        else:
+            proj = cost_model.flat_multiaxis_latency(strategy, grad_bytes,
+                                                     d=4, pods=2)
+        print(f"{strategy:13s} | {LABEL[strategy]}")
+        print(f"  losses: {['%.3f' % l for l in losses]}")
+        print(f"  schedule: {dict(counts)}")
+        print(f"  projected v5e allreduce latency: {proj * 1e6:.0f} µs\n")
+
+
+if __name__ == "__main__":
+    main()

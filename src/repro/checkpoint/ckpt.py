@@ -1,0 +1,68 @@
+"""Checkpointing: path-keyed npz snapshots of arbitrary pytrees.
+
+Sharding-aware in the practical sense: arrays are fetched with
+``jax.device_get`` (gathering shards) and on restore the caller re-shards
+by passing the restored tree through its jitted step (or ``jax.device_put``
+with the step's shardings). Atomic via tmp-rename.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "iufb" or str(arr.dtype) == "bfloat16":
+            # npz has no native bf16; widen losslessly to f32 (dtype is
+            # restored from the template on load)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def restore(directory: str, step: int, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        paths, treedef = flat[0], flat[1]
+        leaves = []
+        for p, leaf in paths:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            import jax.numpy as jnp
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,7 @@
+from .base import (SHAPES, InputShape, input_specs, long500k_policy,
+                   shape_supported, spec_for_shape)
+from .registry import ARCHS, get_spec, list_archs
+
+__all__ = ["SHAPES", "InputShape", "input_specs", "long500k_policy",
+           "shape_supported", "spec_for_shape", "ARCHS", "get_spec",
+           "list_archs"]

@@ -1,0 +1,102 @@
+"""Config substrate: input-shape registry and per-arch config protocol.
+
+Every architecture file defines ``SPEC`` (exact assigned hyper-parameters,
+source cited in its header) and this module provides:
+  * the four mandated input shapes,
+  * ``input_specs(spec, shape_name, mesh_shape)`` — ShapeDtypeStruct
+    stand-ins for every model input (no allocation; dry-run food),
+  * long_500k applicability policy per family (DESIGN.md §3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+from repro.models.common import ModelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# sliding window used for the dense long-context variant (gemma-7b)
+LONG_CONTEXT_WINDOW = 8192
+
+
+def long500k_policy(spec: ModelSpec) -> str:
+    """'native' (O(1)/latent state), 'window' (SWA variant), or 'skip'."""
+    if spec.family in ("ssm", "hybrid"):
+        return "native"
+    if spec.kv_lora_rank:        # MLA latent cache: (r+rd) bytes/token
+        return "native"
+    if spec.name.startswith("gemma"):
+        return "window"
+    return "skip"
+
+
+def shape_supported(spec: ModelSpec, shape_name: str) -> tuple[bool, str]:
+    if shape_name != "long_500k":
+        return True, ""
+    pol = long500k_policy(spec)
+    if pol == "skip":
+        return False, (f"{spec.name} is pure full-attention: a 500k dense "
+                       "KV cache is architecturally quadratic-memory; "
+                       "skipped per DESIGN.md §3.4")
+    return True, pol
+
+
+def spec_for_shape(spec: ModelSpec, shape_name: str) -> ModelSpec:
+    """Per-shape spec variants (e.g. gemma SWA for long_500k)."""
+    if shape_name == "long_500k" and long500k_policy(spec) == "window":
+        return dataclasses.replace(spec, sliding_window=LONG_CONTEXT_WINDOW)
+    return spec
+
+
+def input_specs(spec: ModelSpec, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    train  -> {"tokens", "labels"} (+frames/patches for audio/vlm)
+    prefill-> {"tokens"} (+frames/patches)
+    decode -> {"tokens" (B,1)} + cache structs
+    """
+    shp = SHAPES[shape_name]
+    spec = spec_for_shape(spec, shape_name)
+    b, s = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    extras = {}
+    if spec.family == "audio":
+        extras["frames"] = sds((b, spec.encoder_seq, spec.d_model),
+                               jnp.bfloat16)
+    if spec.family == "vlm" and shp.kind != "decode":
+        extras["patches"] = sds((b, spec.num_image_tokens, spec.d_model),
+                                jnp.bfloat16)
+
+    if shp.kind == "train":
+        return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32),
+                **extras}
+    if shp.kind == "prefill":
+        return {"tokens": sds((b, s), i32), **extras}
+
+    # decode: one token + cache of length s
+    model = build_model(spec)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"tokens": sds((b, 1), i32), "cache": cache}

@@ -1,0 +1,29 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelSpec
+
+ARCHS = {
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+}
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def get_spec(name: str) -> ModelSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    return importlib.import_module(ARCHS[name]).SPEC

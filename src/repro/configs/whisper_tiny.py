@@ -1,0 +1,23 @@
+"""whisper-tiny [audio] — encoder-decoder; mel+conv frontend is a STUB
+per the mandated carve-out: input_specs provides (batch, 1500, 384) frame
+embeddings. [arXiv:2212.04356]
+
+Assigned: 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+"""
+from repro.models.common import ModelSpec
+
+SPEC = ModelSpec(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,              # decoder layers
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    tie_embeddings=True,
+    encoder_layers=4,
+    encoder_seq=1500,          # 30s audio -> 1500 frames post conv-frontend
+)

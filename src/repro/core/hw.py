@@ -1,0 +1,34 @@
+"""Hardware constants for the TPU v5e target (roofline + cost model).
+
+The paper's platforms (K80/P100 + EDR InfiniBand / Cray Aries) map to a
+TPU v5e pod slice; see DESIGN.md assumption A1. All absolute numbers flow
+from here so EXPERIMENTS.md is regenerable against different hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12      # FLOP/s per chip (MXU, bf16)
+    hbm_bandwidth: float = 819e9         # bytes/s
+    hbm_bytes: float = 16e9              # capacity per chip
+    ici_link_bandwidth: float = 50e9     # bytes/s per ICI link (approx.)
+    ici_links_per_chip: int = 4          # 2D torus: +/-x, +/-y
+    # Per-message collective launch overhead (alpha): ICI hop latency plus
+    # the per-step software overhead; same order as NIC alpha in the paper.
+    ici_alpha_s: float = 1e-6
+    # Cross-pod (DCN / optical) links for the multi-pod mesh.
+    dcn_bandwidth: float = 25e9          # bytes/s per chip of cross-pod bw
+    dcn_alpha_s: float = 10e-6
+    vmem_bytes: float = 128 * 2 ** 20    # ~128 MiB VMEM per chip
+
+
+V5E = Chip()
+
+# gRPC/TCP transport as a cost-model entry only (DESIGN.md A3): high alpha,
+# modest beta — used to project the paper's gRPC parameter-server numbers.
+GRPC_ALPHA_S = 100e-6
+GRPC_BANDWIDTH = 10e9  # bytes/s

@@ -1,0 +1,89 @@
+"""Plan cache — the TPU/JAX analogue of the paper's Pointer Cache.
+
+Paper (Sec. V-B): every CUDA-aware MPI call queried the CUDA driver to
+classify buffer pointers; the query sat on the critical path of *every*
+primitive. Their fix: cache the classification, maintained by
+intercepting the allocation APIs so the cache is never stale.
+
+Our critical-path analogue is host-side layout work: building the fusion
+plan (pytree flatten, bin-packing of hundreds of leaves, offset layout)
+for every aggregator invocation, and — the expensive failure mode —
+handing ``jax.jit`` structurally fresh Python objects that defeat its
+trace cache and force retraces.
+
+The :class:`PlanCache` interns :class:`~repro.core.fusion.FusionPlan`
+objects keyed by ``(treedef, shapes, dtypes, groups, threshold, fuse)``.
+The "allocation interception" maps to the key being derived from the
+gradient pytree itself: any change the framework makes to the parameter
+tree (new layer, dtype change) changes the key, so staleness is
+impossible by construction — same guarantee as intercepting cuMalloc/
+cuFree, without a shootdown protocol.
+
+Hit/miss statistics are exported for `benchmarks/plan_cache.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Hashable
+
+import jax
+import jax.numpy as jnp
+
+from . import fusion
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    def __init__(self):
+        self._plans: dict[Hashable, fusion.FusionPlan] = {}
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    @staticmethod
+    def key_for(tree, threshold_bytes: int, groups, fuse: bool) -> Hashable:
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        shapes = tuple(tuple(x.shape) for x in flat)
+        dtypes = tuple(str(jnp.dtype(x.dtype)) for x in flat)
+        gkey = (None if groups is None
+                else tuple(jax.tree_util.tree_leaves(
+                    groups,
+                    is_leaf=lambda x: x is None or isinstance(x, tuple))))
+        return (treedef, shapes, dtypes, gkey, threshold_bytes, fuse)
+
+    def get_or_build(self, tree, threshold_bytes: int, groups=None,
+                     fuse: bool = True) -> fusion.FusionPlan:
+        key = self.key_for(tree, threshold_bytes, groups, fuse)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.stats.hits += 1
+                return plan
+            self.stats.misses += 1
+        plan = fusion.build_plan(tree, threshold_bytes, groups=groups,
+                                 fuse=fuse)
+        with self._lock:
+            self._plans[key] = plan
+        return plan
+
+    def clear(self):
+        with self._lock:
+            self._plans.clear()
+            self.stats = CacheStats()
+
+    def __len__(self):
+        return len(self._plans)
+
+
+# Process-global cache, mirroring the MPI-runtime-global pointer cache.
+GLOBAL_PLAN_CACHE = PlanCache()

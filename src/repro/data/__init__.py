@@ -1,0 +1,3 @@
+from .synthetic import SyntheticImages, SyntheticText, batch_pspecs
+
+__all__ = ["SyntheticText", "SyntheticImages", "batch_pspecs"]

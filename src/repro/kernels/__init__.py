@@ -1,0 +1,8 @@
+from . import ops, ref
+from .flash_attention import flash_attention_bwd, flash_attention_fwd
+from .fused_adamw import adamw_update
+from .fused_reduce import fused_reduce
+from .fused_rmsnorm import fused_rmsnorm
+
+__all__ = ["ops", "ref", "flash_attention_fwd", "flash_attention_bwd",
+           "adamw_update", "fused_reduce", "fused_rmsnorm"]

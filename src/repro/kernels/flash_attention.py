@@ -1,0 +1,264 @@
+"""Pallas TPU kernel: flash attention (forward) — the perf-critical
+compute layer for the 32k prefill shapes.
+
+TPU-native blocking: grid (batch·heads, n_q_blocks, n_kv_blocks) with the
+kv dimension iterated minor-most (sequential on TPU), carrying the
+online-softmax state (acc, m, l) in VMEM scratch across kv steps.
+Block shapes default to (128, head_dim) q-tiles × (128, head_dim)
+kv-tiles — MXU-aligned (128 lanes) and ~3·128·dh·4B of scratch.
+
+The ops.py dispatcher uses the pure-JAX custom-VJP implementation
+(models.attention.sdpa_chunked) for CPU/dry-run paths; this kernel is the
+TPU target and is validated against ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                      acc_ref, m_ref, l_ref, *, scale, block_q, block_k,
+                      causal, window, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (block_q, dh)
+    k = k_ref[...].astype(jnp.float32)          # (block_k, dh)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[...] = m_ref[...] + jnp.log(l_safe)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True, return_lse: bool = False):
+    """q,k,v: (B, S, H, dh) with kv already head-repeated (H heads).
+    Returns (B, S, H, dh) (+ lse (B,H,S) if return_lse) — pair with
+    flash_attention_bwd for the full training kernel."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    scale = 1.0 / np.sqrt(dh)
+    # (B,S,H,dh) -> (B*H, S, dh)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, dh)
+    n_q, n_kv = sq // block_q, sk // block_k
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, n_kv=n_kv)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh),
+                         lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((None, block_k, dh),
+                         lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((None, block_k, dh),
+                         lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=[pl.BlockSpec((None, block_q, dh),
+                                lambda bh, qi, ki: (bh, qi, 0)),
+                   pl.BlockSpec((None, block_q),
+                                lambda bh, qi, ki: (bh, qi))],
+        out_shape=[jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+                   jax.ShapeDtypeStruct((b * h, sq), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+    if return_lse:
+        return out, lse.reshape(b, h, sq)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# backward (FlashAttention-2): two kernels — dq pass and dk/dv pass
+# ---------------------------------------------------------------------------
+
+def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                     dq_ref, dq_acc, *, scale, block_q, block_k, causal,
+                     window, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse_ref[...][:, None])
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta_ref[...][:, None]) * scale
+    dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        dq_ref[...] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                      dk_ref, dv_ref, dk_acc, dv_acc, *, scale, block_q,
+                      block_k, causal, window, n_q):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse_ref[...][:, None])             # (bq, bk)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta_ref[...][:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(qi == n_q - 1)
+    def _finish():
+        dk_ref[...] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, dout, *, causal: bool = True,
+                        window: int = 0, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = True):
+    """FlashAttention-2 backward. All (B,S,H,dh) except lse (B,H,S).
+    Returns (dq, dk, dv)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0
+    scale = 1.0 / np.sqrt(dh)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    dof, of = flat(dout), flat(out)
+    lsef = lse.reshape(b * h, sq)
+    delta = jnp.einsum("zsd,zsd->zs", dof.astype(jnp.float32),
+                       of.astype(jnp.float32))
+    n_q, n_kv = sq // block_q, sk // block_k
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_dq_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal, window=window,
+                          n_kv=n_kv),
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda z, i, j: (z, i, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda z, i, j: (z, j, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda z, i, j: (z, j, 0)),
+            pl.BlockSpec((None, block_q, dh), lambda z, i, j: (z, i, 0)),
+            pl.BlockSpec((None, block_q), lambda z, i, j: (z, i)),
+            pl.BlockSpec((None, block_q), lambda z, i, j: (z, i)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh),
+                               lambda z, i, j: (z, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, dh), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_dkv_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal, window=window,
+                          n_q=n_q),
+        grid=(b * h, n_kv, n_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda z, j, i: (z, i, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda z, j, i: (z, j, 0)),
+            pl.BlockSpec((None, block_k, dh), lambda z, j, i: (z, j, 0)),
+            pl.BlockSpec((None, block_q, dh), lambda z, j, i: (z, i, 0)),
+            pl.BlockSpec((None, block_q), lambda z, j, i: (z, i)),
+            pl.BlockSpec((None, block_q), lambda z, j, i: (z, i)),
+        ],
+        out_specs=[pl.BlockSpec((None, block_k, dh),
+                                lambda z, j, i: (z, j, 0)),
+                   pl.BlockSpec((None, block_k, dh),
+                                lambda z, j, i: (z, j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b * h, sk, dh), k.dtype),
+                   jax.ShapeDtypeStruct((b * h, sk, dh), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_k, dh), jnp.float32),
+                        pltpu.VMEM((block_k, dh), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, delta)
+
+    def unflat(x):
+        return x.reshape(b, h, -1, dh).transpose(0, 2, 1, 3)
+
+    return unflat(dq), unflat(dk), unflat(dv)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused AdamW update (beyond-paper optimizer kernel).
+
+The unfused jnp AdamW chain makes ~9 HBM passes over parameter-sized
+tensors (m read/write, v read/write, p read/write, grad read, plus
+temporaries). This kernel makes exactly one pass: each grid step streams
+a (block,) tile of (p, g, m, v) through VMEM and writes (p', m', v').
+
+Scalars (lr, bias corrections) arrive as a single (8,) fp32 operand
+mapped whole into each block (TPU scalars would ride SMEM; interpret
+mode doesn't distinguish).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adamw_kernel(s_ref, p_ref, g_ref, m_ref, v_ref,
+                  po_ref, mo_ref, vo_ref):
+    lr = s_ref[0]
+    b1 = s_ref[1]
+    b2 = s_ref[2]
+    eps = s_ref[3]
+    wd = s_ref[4]
+    bc1 = s_ref[5]
+    bc2 = s_ref[6]
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    p = p_ref[...].astype(jnp.float32)
+    upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p
+    po_ref[...] = (p - lr * upd).astype(po_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+    vo_ref[...] = v.astype(vo_ref.dtype)
+
+
+def adamw_update(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, count=1, block: int = 4096,
+                 interpret: bool = True):
+    """One fused AdamW step over a flat (n,) tensor quartet.
+    Returns (p_new, m_new, v_new)."""
+    n = p.shape[0]
+    pad = (-n) % block
+    c = jnp.asarray(count, jnp.float32)
+    scalars = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(b1, jnp.float32),
+        jnp.asarray(b2, jnp.float32),
+        jnp.asarray(eps, jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32),
+        1.0 - jnp.asarray(b1, jnp.float32) ** c,
+        1.0 - jnp.asarray(b2, jnp.float32) ** c,
+        jnp.zeros((), jnp.float32),
+    ])
+    if pad:
+        p = jnp.pad(p, (0, pad))
+        g = jnp.pad(g, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        v = jnp.pad(v, (0, pad))
+    npad = p.shape[0]
+    grid = (npad // block,)
+    tile = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        _adamw_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8,), lambda i: (0,)), tile, tile, tile,
+                  tile],
+        out_specs=[tile, tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((npad,), p.dtype),
+                   jax.ShapeDtypeStruct((npad,), m.dtype),
+                   jax.ShapeDtypeStruct((npad,), v.dtype)],
+        interpret=interpret,
+    )(scalars, p, g, m, v)
+    return out[0][:n], out[1][:n], out[2][:n]

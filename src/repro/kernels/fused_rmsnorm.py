@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused RMSNorm (forward).
+
+The unfused chain (square → mean → rsqrt → mul → scale) makes multiple
+HBM passes on CPU-style lowering; the kernel streams one (rows, d) tile
+through VMEM per grid step with fp32 statistics. Rows tile the
+token dim; d stays whole per tile (d ≤ a few K fits VMEM easily).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))) \
+        .astype(o_ref.dtype)
+
+
+def fused_rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                  interpret: bool = True):
+    """x: (..., d); scale: (d,). Returns rmsnorm(x) * (1 + scale)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    pad = (-n) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    grid = (xf.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out[:n].reshape(orig_shape)

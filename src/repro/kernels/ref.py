@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fused_reduce_ref(x: jax.Array, out_dtype=None) -> jax.Array:
+    """(k, n) -> (n,) sum with fp32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    return jnp.sum(x.astype(jnp.float32), axis=0).astype(out_dtype)
+
+
+def adamw_update_ref(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                     weight_decay=0.1, count=1):
+    c = jnp.asarray(count, jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+    v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+    upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) \
+        + weight_decay * p.astype(jnp.float32)
+    return ((p.astype(jnp.float32) - lr * upd).astype(p.dtype),
+            m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Naive masked attention, fp32 softmax. (B,S,H,dh) all-H inputs."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / np.sqrt(dh)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)

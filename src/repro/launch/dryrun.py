@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For one (arch × input-shape × mesh) combination this script:
+  1. builds the production mesh ((16,16) or (2,16,16) = 512 placeholder
+     host devices — hence the XLA_FLAGS line ABOVE ALL OTHER IMPORTS),
+  2. lowers + COMPILES the appropriate step (train_step for train_4k,
+     prefill for prefill_32k, serve_step for decode shapes) with full
+     production shardings over ShapeDtypeStructs (no allocation),
+  3. prints memory_analysis() (fits-on-chip proof) and cost_analysis()
+     (FLOPs/bytes for §Roofline), and parses the compiled HLO for the
+     collective schedule,
+  4. writes a JSON record consumed by launch/report.py -> EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k \
+      [--multi-pod] [--strategy rhd_rsa] [--json out.json]
+  python -m repro.launch.dryrun --all [--multi-pod]   # loops in-process
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _build_step(arch: str, shape_name: str, mesh, strategy: str,
+                fusion_mb: float, sharding_aware: bool = True,
+                remat: bool = False, wire_dtype: str = "",
+                spec_overrides=None):
+    """Returns (jitted_fn, arg_structs) ready to .lower(*args)."""
+    import dataclasses
+
+    import jax
+    from repro.configs import SHAPES, get_spec, input_specs, spec_for_shape
+    from repro.core import AggregatorConfig
+    from repro.launch.mesh import dp_axes_of
+    from repro.models import build_model
+    from repro.optim import adamw, cosine_warmup
+    from repro.serve.step import make_decode_step, make_prefill_step
+    from repro.train import TrainStepConfig, make_train_step
+
+    spec = spec_for_shape(get_spec(arch), shape_name)
+    if remat:
+        spec = dataclasses.replace(spec, remat=True)
+    if spec_overrides:
+        spec = dataclasses.replace(spec, **spec_overrides)
+    shape = SHAPES[shape_name]
+    model = build_model(spec)
+    dp_axes = dp_axes_of(mesh)
+    specs = input_specs(spec, shape_name)
+
+    if shape.kind == "train":
+        opt = adamw(cosine_warmup(3e-4, 100, 10000))
+        cfg = TrainStepConfig(
+            aggregator=AggregatorConfig(strategy=strategy,
+                                        fusion_threshold_mb=fusion_mb,
+                                        sharding_aware=sharding_aware,
+                                        wire_dtype=wire_dtype),
+            dp_axes=dp_axes)
+        step, _ = make_train_step(model, opt, mesh, cfg, specs,
+                                  donate=False)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        opt_state = jax.eval_shape(opt.init, params)
+        return step, (params, opt_state, specs)
+
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, mesh, dp_axes, specs,
+                                 max_seq=shape.seq_len)
+        return step, (params, specs)
+
+    # decode
+    step = make_decode_step(model, mesh, dp_axes, shape.global_batch,
+                            shape.seq_len, donate=False)
+    return step, (params, specs["cache"], specs["tokens"])
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            strategy: str = "rhd_rsa", fusion_mb: float = 4.0,
+            sharding_aware: bool = True, verbose: bool = True,
+            remat: bool = False, wire_dtype: str = "",
+            spec_overrides=None) -> dict:
+    import jax
+    from repro.configs import SHAPES, get_spec, shape_supported
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+
+    spec = get_spec(arch)
+    ok, why = shape_supported(spec, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "strategy": strategy, "fusion_mb": fusion_mb,
+           "sharding_aware": sharding_aware, "remat": remat,
+           "wire_dtype": wire_dtype,
+           "spec_overrides": spec_overrides or {}}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jax.set_mesh(mesh)   # context mesh for P-spec sharding constraints
+    chips = 512 if multi_pod else 256
+    t0 = time.perf_counter()
+    try:
+        step, args = _build_step(arch, shape_name, mesh, strategy,
+                                 fusion_mb, sharding_aware, remat=remat,
+                                 wire_dtype=wire_dtype,
+                                 spec_overrides=spec_overrides)
+        lowered = step.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from repro.launch import hlo_analysis as ha
+        agg = ha.analyze(hlo)
+
+        params_struct = args[0]
+        n_params = sum(
+            int(np_leaf.size) if hasattr(np_leaf, "size") else 0
+            for np_leaf in jax.tree_util.tree_leaves(params_struct))
+        mf = rl.model_flops(spec, SHAPES[shape_name], float(n_params))
+        roof = rl.compute_roofline_from_aggregate(
+            agg, chips, model_flops=mf)
+        coll = rl.CollectiveStats(
+            {k: int(v) for k, v in agg.collective_counts.items()},
+            {k: int(v) for k, v in agg.collective_bytes.items()},
+            int(agg.total_collective_bytes))
+
+        mem_rec = {}
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    mem_rec[k] = int(v)
+        rec.update(
+            status="OK",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            n_params=n_params,
+            cost={k: float(v) for k, v in (cost or {}).items()
+                  if isinstance(v, (int, float))},
+            memory=mem_rec,
+            collectives=coll.to_dict(),
+            roofline=roof.to_dict(),
+        )
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+            print(f"  memory_analysis: {mem_rec}")
+            print(f"  cost_analysis: flops={rec['cost'].get('flops', 0):.3e}"
+                  f" bytes={rec['cost'].get('bytes accessed', 0):.3e}")
+            print(f"  collectives: {coll.counts} "
+                  f"total={coll.total_bytes/2**20:.1f} MiB")
+            print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+                  f"memory={roof.memory_s*1e3:.2f}ms "
+                  f"collective={roof.collective_s*1e3:.2f}ms "
+                  f"dominant={roof.dominant}")
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: FAIL "
+                  f"{e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--strategy", default="rhd_rsa")
+    ap.add_argument("--fusion-mb", type=float, default=4.0)
+    ap.add_argument("--no-sharding-aware", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--wire-dtype", default="")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="spec override k=v (int/float/bool literal)")
+    ap.add_argument("--json")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+
+    if args.all:
+        records = []
+        for arch in list_archs():
+            for shape in SHAPES:
+                records.append(run_one(arch, shape, args.multi_pod,
+                                       args.strategy, args.fusion_mb,
+                                       not args.no_sharding_aware))
+        out = records
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        overrides = {"seq_parallel": True} if args.seq_parallel else {}
+        for kv in args.override:
+            k, v = kv.split("=", 1)
+            try:
+                overrides[k] = json.loads(v)
+            except json.JSONDecodeError:
+                overrides[k] = v
+        overrides = overrides or None
+        out = run_one(args.arch, args.shape, args.multi_pod, args.strategy,
+                      args.fusion_mb, not args.no_sharding_aware,
+                      remat=args.remat, wire_dtype=args.wire_dtype,
+                      spec_overrides=overrides)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+    ok = all(r["status"] != "FAIL" for r in
+             (out if isinstance(out, list) else [out]))
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report --dir results/dryrun
+
+Emits Markdown for §Dry-run (status matrix + memory/collectives) and
+§Roofline (three terms, dominant, MODEL_FLOPS ratio) to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(n):
+    if n >= 2 ** 30:
+        return f"{n / 2 ** 30:.2f} GiB"
+    if n >= 2 ** 20:
+        return f"{n / 2 ** 20:.1f} MiB"
+    return f"{n / 2 ** 10:.1f} KiB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f} s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f} ms"
+    return f"{x * 1e6:.1f} µs"
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_matrix(recs, mesh):
+    rows = {}
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        rows.setdefault(r["arch"], {})[r["shape"]] = r
+    out = [f"**Mesh {mesh}** — status / per-device HBM args+temp / "
+           "collective bytes per step:",
+           "",
+           "| arch | " + " | ".join(SHAPE_ORDER) + " |",
+           "|---|" + "---|" * len(SHAPE_ORDER)]
+    for arch in sorted(rows):
+        cells = []
+        for s in SHAPE_ORDER:
+            r = rows[arch].get(s)
+            if r is None:
+                cells.append("—")
+            elif r["status"] == "SKIP":
+                cells.append("SKIP†")
+            elif r["status"] != "OK":
+                cells.append(f"**{r['status']}**")
+            else:
+                mem = r.get("memory", {})
+                dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)) / 256
+                if r["mesh"].startswith("2x"):
+                    dev = (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0)) / 512
+                coll = r["collectives"]["total_bytes"]
+                cells.append(f"OK {fmt_bytes(dev)} / {fmt_bytes(coll)}")
+        out.append(f"| {arch} | " + " | ".join(cells) + " |")
+    out.append("")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="16x16"):
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "MODEL_FLOPS/HLO_FLOPs |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"],
+                                         SHAPE_ORDER.index(x["shape"]))):
+        if r.get("mesh") != mesh or r["status"] != "OK":
+            continue
+        rf = r["roofline"]
+        ratio = rf["model_flops"] / max(rf["flops"] * rf["chips"], 1)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {ratio:.2f} |")
+    return "\n".join(out)
+
+
+def skips(recs):
+    seen = set()
+    out = []
+    for r in recs:
+        if r["status"] == "SKIP" and r["arch"] not in seen:
+            seen.add(r["arch"])
+            out.append(f"- `{r['arch']}` × `{r['shape']}`: {r['reason']}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    n_ok = sum(r["status"] == "OK" for r in recs)
+    n_skip = sum(r["status"] == "SKIP" for r in recs)
+    n_fail = len(recs) - n_ok - n_skip
+    print(f"records: {len(recs)} — {n_ok} OK, {n_skip} SKIP, "
+          f"{n_fail} FAIL\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(dryrun_matrix(recs, mesh))
+    print("† skips:\n" + skips(recs) + "\n")
+    print("### Roofline (single-pod 16x16, per device per step)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

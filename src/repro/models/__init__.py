@@ -1,0 +1,6 @@
+from .common import ModelSpec
+from .registry import (ModelApi, build_model, param_groups, param_pspecs,
+                       divisibility_check)
+
+__all__ = ["ModelSpec", "ModelApi", "build_model", "param_groups",
+           "param_pspecs", "divisibility_check"]

@@ -1,0 +1,168 @@
+"""The paper's own workloads: ResNet-50 and MobileNet-v1 in JAX.
+
+Used by the paper-faithful application benchmark (tf_cnn_benchmarks
+analogue): synthetic image data, images/sec under each gradient-
+aggregation strategy. NASNet-large enters the scaling study analytically
+(DESIGN.md D4). NHWC layout, BN folded to per-channel scale/bias statistics
+frozen at init (synthetic-data throughput benchmarking — matching the
+paper, which measures scaling, not accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnSpec:
+    name: str
+    num_classes: int = 1000
+    image_size: int = 224
+    dtype: str = "bfloat16"
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout))
+            / math.sqrt(fan_in)).astype(jnp.float32)
+
+
+def conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn_act(x, p, relu=True):
+    x = x * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    return jax.nn.relu(x) if relu else x
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50
+# ---------------------------------------------------------------------------
+
+_R50_STAGES = ((3, 64), (4, 128), (6, 256), (3, 512))
+
+
+def resnet50_params(key):
+    ks = iter(jax.random.split(key, 200))
+    p = {"stem": {"w": _conv_init(next(ks), 7, 7, 3, 64),
+                  "bn": _bn_params(64)},
+         "stages": [], "fc": None}
+    cin = 64
+    for si, (blocks, width) in enumerate(_R50_STAGES):
+        stage = []
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            cout = width * 4
+            blk = {
+                "w1": _conv_init(next(ks), 1, 1, cin, width),
+                "bn1": _bn_params(width),
+                "w2": _conv_init(next(ks), 3, 3, width, width),
+                "bn2": _bn_params(width),
+                "w3": _conv_init(next(ks), 1, 1, width, cout),
+                "bn3": _bn_params(cout),
+            }
+            if cin != cout or stride != 1:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, cout)
+                blk["bn_proj"] = _bn_params(cout)
+            stage.append(blk)
+            cin = cout
+        p["stages"].append(stage)
+    p["fc"] = {"w": (jax.random.normal(next(ks), (cin, 1000)) * 0.01)
+               .astype(jnp.float32),
+               "b": jnp.zeros((1000,), jnp.float32)}
+    return p
+
+
+def resnet50_forward(params, images, spec: CnnSpec):
+    x = images.astype(jnp.dtype(spec.dtype))
+    x = conv(x, params["stem"]["w"], stride=2)
+    x = bn_act(x, params["stem"]["bn"])
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, stage in enumerate(params["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (bi == 0 and si > 0) else 1   # static schedule
+            sc = x
+            h = bn_act(conv(x, blk["w1"]), blk["bn1"])
+            h = bn_act(conv(h, blk["w2"], stride=stride), blk["bn2"])
+            h = bn_act(conv(h, blk["w3"]), blk["bn3"], relu=False)
+            if "proj" in blk:
+                sc = bn_act(conv(sc, blk["proj"], stride=stride),
+                            blk["bn_proj"], relu=False)
+            x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"].astype(x.dtype) + \
+        params["fc"]["b"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MobileNet-v1
+# ---------------------------------------------------------------------------
+
+_MBN_LAYERS = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+               (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+               (1024, 1)]
+
+
+def mobilenet_params(key):
+    ks = iter(jax.random.split(key, 100))
+    p = {"stem": {"w": _conv_init(next(ks), 3, 3, 3, 32),
+                  "bn": _bn_params(32)}, "blocks": []}
+    cin = 32
+    for cout, stride in _MBN_LAYERS:
+        p["blocks"].append({
+            "dw": _conv_init(next(ks), 3, 3, 1, cin),   # depthwise
+            "bn1": _bn_params(cin),
+            "pw": _conv_init(next(ks), 1, 1, cin, cout),
+            "bn2": _bn_params(cout),
+        })
+        cin = cout
+    p["fc"] = {"w": (jax.random.normal(next(ks), (cin, 1000)) * 0.01)
+               .astype(jnp.float32),
+               "b": jnp.zeros((1000,), jnp.float32)}
+    return p
+
+
+def mobilenet_forward(params, images, spec: CnnSpec):
+    x = images.astype(jnp.dtype(spec.dtype))
+    x = bn_act(conv(x, params["stem"]["w"], stride=2), params["stem"]["bn"])
+    for blk, (_, stride) in zip(params["blocks"], _MBN_LAYERS):
+        cin = blk["dw"].shape[3]
+        # depthwise: HWIO with I=1, groups=cin
+        w_dw = blk["dw"]
+        x = bn_act(conv(x, w_dw, stride=stride, groups=cin), blk["bn1"])
+        x = bn_act(conv(x, blk["pw"]), blk["bn2"])
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"].astype(x.dtype) + \
+        params["fc"]["b"].astype(x.dtype)
+
+
+def cnn_loss(forward_fn, params, batch, spec: CnnSpec):
+    logits = forward_fn(params, batch["images"], spec).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    return loss, {"ce": loss}
+
+
+# Analytic entries for the scaling study (params, fwd GFLOPs/image).
+PAPER_MODELS = {
+    "resnet50": {"params": 25.6e6, "gflops": 3.9},
+    "mobilenet": {"params": 4.2e6, "gflops": 0.57},
+    "nasnet-large": {"params": 88.9e6, "gflops": 23.8},
+}

@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder (whisper-tiny backbone).
+
+The mel-spectrogram + conv feature extractor is a STUB (the mandated
+carve-out): ``input_specs`` provides precomputed frame embeddings of
+shape (batch, encoder_seq, d_model). Positions are sinusoidal on both
+sides (deviation from Whisper's learned decoder positions, noted in
+DESIGN.md D-class, so decode positions extend to the mandated 32k cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention
+from .common import (ModelSpec, cross_entropy, embed_init, norm, norm_params,
+                     sinusoidal_positions)
+from .mlp import mlp_forward, mlp_params
+
+
+def _enc_layer(key, spec: ModelSpec):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_params(spec.d_model, spec.norm_type),
+        "attn": attention.gqa_params(k1, spec),
+        "ln2": norm_params(spec.d_model, spec.norm_type),
+        "mlp": mlp_params(k2, spec.d_model, spec.d_ff, spec.mlp_type),
+    }
+
+
+def _dec_layer(key, spec: ModelSpec):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_params(spec.d_model, spec.norm_type),
+        "self_attn": attention.gqa_params(k1, spec),
+        "ln_x": norm_params(spec.d_model, spec.norm_type),
+        "cross_attn": attention.gqa_params(k2, spec),
+        "ln2": norm_params(spec.d_model, spec.norm_type),
+        "mlp": mlp_params(k3, spec.d_model, spec.d_ff, spec.mlp_type),
+    }
+
+
+def init_params(key, spec: ModelSpec):
+    ks = jax.random.split(key, 4)
+    ek = jax.random.split(ks[0], spec.encoder_layers)
+    dk = jax.random.split(ks[1], spec.num_layers)
+    return {
+        "embed": embed_init(ks[2], (spec.padded_vocab, spec.d_model)),
+        "encoder": jax.vmap(lambda k: _enc_layer(k, spec))(ek),
+        "enc_ln": norm_params(spec.d_model, spec.norm_type),
+        "decoder": jax.vmap(lambda k: _dec_layer(k, spec))(dk),
+        "ln_f": norm_params(spec.d_model, spec.norm_type),
+    }
+
+
+def _cross_attention(params, x, enc_k, enc_v, spec: ModelSpec):
+    """Full (unmasked) attention of decoder x over precomputed encoder K/V."""
+    b, s, d = x.shape
+    h, kvh, hd = spec.num_heads, spec.num_kv_heads, spec.resolved_head_dim
+    cd = spec.compute_dtype
+    q = (x @ params["wq"].astype(cd)).reshape(b, s, h, hd)
+    kr = jnp.repeat(enc_k, h // kvh, axis=2)
+    vr = jnp.repeat(enc_v, h // kvh, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32)
+    probs = jax.nn.softmax(sc / jnp.sqrt(float(hd)), axis=-1).astype(cd)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    return out.reshape(b, s, h * hd) @ params["wo"].astype(cd)
+
+
+def encode(params, frames, spec: ModelSpec):
+    """frames: (B, encoder_seq, d_model) stub embeddings -> encoder states."""
+    cd = spec.compute_dtype
+    s = frames.shape[1]
+    h = frames.astype(cd) + sinusoidal_positions(s, spec.d_model).astype(cd)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                 (frames.shape[0], s))
+
+    # Bidirectional self-attention: reuse sdpa_full with a no-op mask by
+    # giving every query the max position.
+    def enc_scan_bidir(h, lp):
+        a_in = norm(h, lp["ln1"], spec.norm_type)
+        q, k, v = _qkv(lp["attn"], a_in, spec)
+        qpos = jnp.full((s,), s - 1, jnp.int32)       # sees everything
+        kpos = jnp.arange(s, dtype=jnp.int32)
+        a_out = attention.sdpa_full(q, k, v, qpos, kpos, window=0)
+        a_out = _proj_out(lp["attn"], a_out, spec)
+        h = h + a_out
+        m_in = norm(h, lp["ln2"], spec.norm_type)
+        return h + mlp_forward(lp["mlp"], m_in, spec.mlp_type), None
+
+    h, _ = jax.lax.scan(enc_scan_bidir, h, params["encoder"])
+    return norm(h, params["enc_ln"], spec.norm_type)
+
+
+def _qkv(p, x, spec: ModelSpec):
+    b, s, d = x.shape
+    h, kvh, hd = spec.num_heads, spec.num_kv_heads, spec.resolved_head_dim
+    cd = spec.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(b, s, kvh, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(b, s, kvh, hd)
+    return q, k, v
+
+
+def _proj_out(p, a, spec: ModelSpec):
+    b, s = a.shape[:2]
+    return a.reshape(b, s, -1) @ p["wo"].astype(spec.compute_dtype)
+
+
+def _enc_kv(params_dec, enc_out, spec: ModelSpec):
+    """Precompute cross-attention K/V for all decoder layers: (L,B,S,kv,hd)."""
+    def per_layer(lp):
+        b, s, _ = enc_out.shape
+        kvh, hd = spec.num_kv_heads, spec.resolved_head_dim
+        cd = spec.compute_dtype
+        k = (enc_out @ lp["cross_attn"]["wk"].astype(cd)) \
+            .reshape(b, s, kvh, hd)
+        v = (enc_out @ lp["cross_attn"]["wv"].astype(cd)) \
+            .reshape(b, s, kvh, hd)
+        return k, v
+    return jax.vmap(per_layer)(params_dec)
+
+
+def decoder_forward(params, tokens, enc_out, spec: ModelSpec,
+                    collect_cache: bool = False):
+    b, s = tokens.shape
+    cd = spec.compute_dtype
+    h = params["embed"].astype(cd)[tokens] \
+        + sinusoidal_positions(s, spec.d_model).astype(cd)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_kv = _enc_kv(params["decoder"], enc_out, spec)
+
+    def dec_scan(h, xs):
+        lp, (ek, ev) = xs
+        a_in = norm(h, lp["ln1"], spec.norm_type)
+        a_out, kv = attention.gqa_forward(lp["self_attn"], a_in, positions,
+                                          spec, rope=False)
+        h = h + a_out
+        x_in = norm(h, lp["ln_x"], spec.norm_type)
+        h = h + _cross_attention(lp["cross_attn"], x_in, ek, ev, spec)
+        m_in = norm(h, lp["ln2"], spec.norm_type)
+        h = h + mlp_forward(lp["mlp"], m_in, spec.mlp_type)
+        return h, kv if collect_cache else None
+
+    h, kvs = jax.lax.scan(dec_scan, h, (params["decoder"], enc_kv))
+    h = norm(h, params["ln_f"], spec.norm_type)
+    logits = h @ params["embed"].astype(cd).T
+    return logits, kvs, enc_kv
+
+
+def loss_fn(params, batch, spec: ModelSpec):
+    enc_out = encode(params, batch["frames"], spec)
+    logits, _, _ = decoder_forward(params, batch["tokens"], enc_out, spec)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(spec: ModelSpec, batch: int, seq: int):
+    cd = spec.compute_dtype
+    L = spec.num_layers
+    kvh, hd = spec.num_kv_heads, spec.resolved_head_dim
+    es = spec.encoder_seq
+    return {
+        "self_k": jnp.zeros((L, batch, seq, kvh, hd), cd),
+        "self_v": jnp.zeros((L, batch, seq, kvh, hd), cd),
+        "cross_k": jnp.zeros((L, batch, es, kvh, hd), cd),
+        "cross_v": jnp.zeros((L, batch, es, kvh, hd), cd),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, frames, spec: ModelSpec, max_seq=None):
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    enc_out = encode(params, frames, spec)
+    logits, kvs, enc_kv = decoder_forward(params, tokens, enc_out, spec,
+                                          collect_cache=True)
+    cache = init_cache(spec, b, max_seq)
+    k_all, v_all = kvs
+    ck, cv = enc_kv
+    cache["self_k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["self_k"], k_all.astype(cache["self_k"].dtype), 0, axis=2)
+    cache["self_v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["self_v"], v_all.astype(cache["self_v"].dtype), 0, axis=2)
+    cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache, tokens, spec: ModelSpec):
+    b = tokens.shape[0]
+    cd = spec.compute_dtype
+    pos = cache["pos"]
+    smax = cache["self_k"].shape[2]
+    pe = sinusoidal_positions(smax, spec.d_model)
+    h = params["embed"].astype(cd)[tokens] \
+        + pe[jnp.minimum(pos, smax - 1)][None, None, :].astype(cd)
+
+    def dec_scan(h, xs):
+        lp, sk, sv, ck, cv = xs
+        a_in = norm(h, lp["ln1"], spec.norm_type)
+        a_out, (sk, sv) = attention.gqa_decode(
+            lp["self_attn"], a_in, sk, sv, pos, spec, rope=False)
+        h = h + a_out
+        x_in = norm(h, lp["ln_x"], spec.norm_type)
+        h = h + _cross_attention(lp["cross_attn"], x_in, ck, cv, spec)
+        m_in = norm(h, lp["ln2"], spec.norm_type)
+        h = h + mlp_forward(lp["mlp"], m_in, spec.mlp_type)
+        return h, (sk, sv)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        dec_scan, h, (params["decoder"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+    h = norm(h, params["ln_f"], spec.norm_type)
+    logits = (h @ params["embed"].astype(cd).T)[:, 0]
+    cache = dict(cache)
+    cache["self_k"], cache["self_v"] = new_k, new_v
+    cache["pos"] = pos + 1
+    return logits, cache

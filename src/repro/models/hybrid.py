@@ -1,0 +1,203 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single weight-SHARED attention
+block applied every `attn_every` layers (arXiv:2411.15242).
+
+The shared block sees concat(hidden, original embedding) (Zamba's global
+residual) projected back to d_model, then GQA attention + SwiGLU MLP.
+Weights are shared across applications; each application keeps its own KV
+cache for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mamba2
+from .common import (ModelSpec, cross_entropy, dense_init, embed_init, norm,
+                     norm_params)
+from .mlp import mlp_forward, mlp_params
+from .transformer import lm_logits
+
+
+def _n_apps(spec: ModelSpec) -> int:
+    return spec.num_layers // spec.attn_every
+
+
+def _group_bounds(spec: ModelSpec):
+    """[(start, end)] mamba-layer slices between shared-attn applications."""
+    k = spec.attn_every
+    bounds = []
+    start = 0
+    for _ in range(_n_apps(spec)):
+        bounds.append((start, start + k))
+        start += k
+    if start < spec.num_layers:
+        bounds.append((start, spec.num_layers))
+    return bounds
+
+
+def init_params(key, spec: ModelSpec):
+    ks = jax.random.split(key, 8)
+    lk = jax.random.split(ks[0], spec.num_layers)
+    mamba = jax.vmap(lambda k: {
+        "ln": norm_params(spec.d_model, spec.norm_type),
+        "mixer": mamba2.mamba2_params(k, spec)})(lk)
+    shared = {
+        "ln1": norm_params(2 * spec.d_model, spec.norm_type),
+        "in_proj": dense_init(ks[1], (2 * spec.d_model, spec.d_model)),
+        "attn": attention.gqa_params(ks[2], spec),
+        "ln2": norm_params(spec.d_model, spec.norm_type),
+        "mlp": mlp_params(ks[3], spec.d_model, spec.d_ff, spec.mlp_type),
+    }
+    return {
+        "embed": embed_init(ks[4], (spec.padded_vocab, spec.d_model)),
+        "mamba": mamba,
+        "shared": shared,
+        "ln_f": norm_params(spec.d_model, spec.norm_type),
+    }
+
+
+def _tree_slice(tree, a: int, b: int):
+    return jax.tree_util.tree_map(lambda x: x[a:b], tree)
+
+
+def _shared_block(params, h, emb0, positions, spec: ModelSpec):
+    x = jnp.concatenate([h, emb0], axis=-1)
+    x = norm(x, params["ln1"], spec.norm_type)
+    x = x @ params["in_proj"].astype(h.dtype)
+    a_out, kv = attention.gqa_forward(params["attn"], x, positions, spec)
+    h = h + a_out
+    m_in = norm(h, params["ln2"], spec.norm_type)
+    return h + mlp_forward(params["mlp"], m_in, spec.mlp_type), kv
+
+
+def _shared_block_decode(params, h, emb0, ck, cv, pos, spec: ModelSpec):
+    x = jnp.concatenate([h, emb0], axis=-1)
+    x = norm(x, params["ln1"], spec.norm_type)
+    x = x @ params["in_proj"].astype(h.dtype)
+    a_out, (ck, cv) = attention.gqa_decode(params["attn"], x, ck, cv, pos,
+                                           spec)
+    h = h + a_out
+    m_in = norm(h, params["ln2"], spec.norm_type)
+    return h + mlp_forward(params["mlp"], m_in, spec.mlp_type), ck, cv
+
+
+def forward(params, tokens, spec: ModelSpec, collect_cache: bool = False):
+    b, s = tokens.shape
+    cd = spec.compute_dtype
+    h = params["embed"].astype(cd)[tokens]
+    emb0 = h
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kvs = []
+
+    def mamba_scan(h, lp):
+        out, _ = mamba2.mamba2_forward(
+            lp["mixer"], norm(h, lp["ln"], spec.norm_type), spec)
+        return h + out, None
+
+    for gi, (a, bnd) in enumerate(_group_bounds(spec)):
+        h, _ = jax.lax.scan(mamba_scan, h, _tree_slice(params["mamba"], a,
+                                                       bnd))
+        if gi < _n_apps(spec):
+            h, kv = _shared_block(params["shared"], h, emb0, positions, spec)
+            kvs.append(kv)
+    h = norm(h, params["ln_f"], spec.norm_type)
+    logits = h @ params["embed"].astype(cd).T          # tied embeddings
+    cache = None
+    if collect_cache:
+        cache = {"k": jnp.stack([k for k, _ in kvs]),
+                 "v": jnp.stack([v for _, v in kvs])}
+    return logits, cache
+
+
+def loss_fn(params, batch, spec: ModelSpec):
+    logits, _ = forward(params, batch["tokens"], spec)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(spec: ModelSpec, batch: int, seq: int):
+    cd = spec.compute_dtype
+    n = _n_apps(spec)
+    hd = spec.resolved_head_dim
+    ssm = jax.vmap(lambda _: mamba2.mamba2_init_state(spec, batch))(
+        jnp.arange(spec.num_layers))
+    return {
+        "attn_k": jnp.zeros((n, batch, seq, spec.num_kv_heads, hd), cd),
+        "attn_v": jnp.zeros((n, batch, seq, spec.num_kv_heads, hd), cd),
+        "ssm": ssm,
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, spec: ModelSpec, max_seq=None):
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    cache = init_cache(spec, b, max_seq)
+    cd = spec.compute_dtype
+    h = params["embed"].astype(cd)[tokens]
+    emb0 = h
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def mamba_scan(h, lp):
+        out, st = mamba2.mamba2_forward(
+            lp["mixer"], norm(h, lp["ln"], spec.norm_type), spec)
+        return h + out, st
+
+    states, kvs = [], []
+    for gi, (a, bnd) in enumerate(_group_bounds(spec)):
+        h, st = jax.lax.scan(mamba_scan, h, _tree_slice(params["mamba"], a,
+                                                        bnd))
+        states.append(st)
+        if gi < _n_apps(spec):
+            h, kv = _shared_block(params["shared"], h, emb0, positions, spec)
+            kvs.append(kv)
+    h = norm(h, params["ln_f"], spec.norm_type)
+    logits = h @ params["embed"].astype(cd).T
+
+    k_all = jnp.stack([k for k, _ in kvs]).astype(cache["attn_k"].dtype)
+    v_all = jnp.stack([v for _, v in kvs]).astype(cache["attn_v"].dtype)
+    cache["attn_k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["attn_k"], k_all, 0, axis=2)
+    cache["attn_v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["attn_v"], v_all, 0, axis=2)
+    cache["ssm"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *states)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache, tokens, spec: ModelSpec):
+    b = tokens.shape[0]
+    cd = spec.compute_dtype
+    pos = cache["pos"]
+    h = params["embed"].astype(cd)[tokens]
+    emb0 = h
+
+    def mamba_step(h, xs):
+        lp, st = xs
+        out, new_st = mamba2.mamba2_decode(
+            lp["mixer"], norm(h, lp["ln"], spec.norm_type), st, spec)
+        return h + out, new_st
+
+    new_k, new_v, new_states = [], [], []
+    for gi, (a, bnd) in enumerate(_group_bounds(spec)):
+        lp = _tree_slice(params["mamba"], a, bnd)
+        st = jax.tree_util.tree_map(lambda x: x[a:bnd], cache["ssm"])
+        h, ns = jax.lax.scan(mamba_step, h, (lp, st))
+        new_states.append(ns)
+        if gi < _n_apps(spec):
+            h, ck, cv = _shared_block_decode(
+                params["shared"], h, emb0, cache["attn_k"][gi],
+                cache["attn_v"][gi], pos, spec)
+            new_k.append(ck)
+            new_v.append(cv)
+    h = norm(h, params["ln_f"], spec.norm_type)
+    logits = (h @ params["embed"].astype(cd).T)[:, 0]
+    new_cache = {
+        "attn_k": jnp.stack(new_k),
+        "attn_v": jnp.stack(new_v),
+        "ssm": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_states),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

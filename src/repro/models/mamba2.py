@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) block — chunked parallel scan for training/prefill and an
+O(1)-state recurrent step for decode.
+
+Layout follows the Mamba2 paper: input projection produces
+(z, x, B, C, dt); a short depthwise causal conv runs over (x, B, C);
+per-head scalar decay a_t = exp(-exp(A_log) * dt_t); state is an
+(n_heads, head_dim, d_state) matrix per sequence. Training uses the SSD
+chunked algorithm (intra-chunk quadratic form + inter-chunk state
+passing, `lax.scan` over chunks) — this is the TPU-native adaptation:
+the chunk quadratic form maps onto the MXU instead of a sequential scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelSpec, dense_init
+
+
+def mamba2_dims(spec: ModelSpec):
+    d_inner = spec.ssm_expand * spec.d_model
+    heads = spec.ssm_heads or d_inner // spec.ssm_head_dim
+    p = d_inner // heads
+    return d_inner, heads, p, spec.ssm_state
+
+
+def mamba2_params(key, spec: ModelSpec):
+    d = spec.d_model
+    d_inner, h, p, n = mamba2_dims(spec)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        # Separate projections (rather than one fused in_proj) so each
+        # lands cleanly on the `model` axis without re-shard slicing.
+        "z_proj": dense_init(ks[0], (d, d_inner)),
+        "xbc_proj": dense_init(ks[4], (d, conv_ch)),
+        "dt_proj": dense_init(ks[5], (d, h)),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_width, conv_ch))
+                   * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_inner, d)),
+    }
+
+
+def _project(params, x, cd):
+    z = x @ params["z_proj"].astype(cd)
+    xbc = x @ params["xbc_proj"].astype(cd)
+    dt = x @ params["dt_proj"].astype(cd)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along seq via shifted adds (width <= 8)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    s = xbc.shape[1]
+    for i in range(width):
+        out = out + pad[:, i:i + s].astype(jnp.float32) * w[i]
+    return jax.nn.silu(out + b).astype(xbc.dtype)
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + eps)
+    return y * (1.0 + scale)
+
+
+def mamba2_forward(params, x, spec: ModelSpec, h0=None):
+    """Full-sequence SSD. x (B,S,d) -> (out (B,S,d), decode_state) where
+    decode_state = {"ssm": (B,H,N,P) fp32, "conv": (B,w-1,ch)} is ready
+    for ``mamba2_decode`` to continue from position S."""
+    bsz, s, d = x.shape
+    d_inner, h, p, n = mamba2_dims(spec)
+    cd = spec.compute_dtype
+    q = spec.ssm_chunk
+    assert s % q == 0 or s < q, f"seq {s} vs chunk {q}"
+    q = min(q, s)
+
+    z, xbc_raw, dt_raw = _project(params, x, cd)
+    w = spec.conv_width
+    if s >= w - 1:
+        conv_tail = xbc_raw[:, s - (w - 1):]
+    else:
+        conv_tail = jnp.pad(xbc_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_inner].reshape(bsz, s, h, p).astype(jnp.float32)
+    bmat = xbc[..., d_inner:d_inner + n].astype(jnp.float32)
+    cmat = xbc[..., d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                       # (h,) negative
+    log_decay = a * dt                                  # (B,S,H), <= 0
+
+    nc = s // q
+    xs_c = xs.reshape(bsz, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    b_c = bmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    ld_c = log_decay.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+
+    mask = np.tril(np.ones((q, q), np.float32))
+
+    def chunk_step(hstate, inp):
+        xq, bq, cq, dtq, ldq = inp                      # (B,q,...)
+        l = jnp.cumsum(ldq, axis=1)                     # (B,q,H) inclusive
+        # intra-chunk quadratic form
+        cb = jnp.einsum("bqn,bsn->bqs", cq, bq)         # (B,q,q)
+        # mask BEFORE exp: for t < s the exponent is positive and would
+        # overflow to inf (inf * 0 = NaN after masking).
+        ldiff = l[:, :, None, :] - l[:, None, :, :]     # (B,q,s,H)
+        dec = jnp.exp(jnp.where(mask[None, :, :, None] > 0, ldiff, -1e30))
+        y_intra = jnp.einsum("bqs,bqsh,bsh,bshp->bqhp",
+                             cb, dec, dtq, xq)
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("bqn,bhnp,bqh->bqhp",
+                             cq, hstate, jnp.exp(l))
+        # state update to end of chunk
+        l_last = l[:, -1:, :]                           # (B,1,H)
+        w = dtq * jnp.exp(l_last - l)                   # (B,q,H)
+        h_new = jnp.einsum("bqh,bqn,bqhp->bhnp", w, bq, xq) \
+            + jnp.exp(l_last[:, 0, :])[:, :, None, None] * hstate
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0,
+                               (xs_c, b_c, c_c, dt_c, ld_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xs
+    y = _gated_norm(y.reshape(bsz, s, d_inner), z, params["norm_scale"])
+    out = y.astype(cd) @ params["out_proj"].astype(cd)
+    return out, {"ssm": h_final, "conv": conv_tail}
+
+
+def mamba2_init_state(spec: ModelSpec, batch: int):
+    d_inner, h, p, n = mamba2_dims(spec)
+    conv_ch = d_inner + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, conv_ch),
+                          spec.compute_dtype),
+    }
+
+
+def mamba2_decode(params, x, state, spec: ModelSpec):
+    """Single-token recurrence. x (B,1,d) -> (out (B,1,d), new state)."""
+    bsz = x.shape[0]
+    d_inner, h, p, n = mamba2_dims(spec)
+    cd = spec.compute_dtype
+    z, xbc, dt_raw = _project(params, x, cd)
+
+    # conv over the cached window + current input
+    win = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, w, ch)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), w) \
+        + params["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(cd)
+    new_conv = win[:, 1:, :]
+
+    xs = xbc1[..., :d_inner].reshape(bsz, h, p).astype(jnp.float32)
+    bmat = xbc1[:, 0, d_inner:d_inner + n].astype(jnp.float32)
+    cmat = xbc1[:, 0, d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])            # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(a * dt)                              # (B,H)
+
+    hs = state["ssm"] * decay[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhnp", dt, bmat, xs)
+    y = jnp.einsum("bn,bhnp->bhp", cmat, hs) \
+        + params["d_skip"][None, :, None] * xs
+    y = _gated_norm(y.reshape(bsz, 1, d_inner), z, params["norm_scale"])
+    out = y.astype(cd) @ params["out_proj"].astype(cd)
+    return out, {"ssm": hs, "conv": new_conv}

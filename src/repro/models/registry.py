@@ -1,0 +1,175 @@
+"""Model registry: one uniform API over all architecture families, plus
+parameter sharding rules for the `model` (tensor-parallel) mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import encdec, hybrid, ssm_lm, transformer
+from .common import ModelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    """Uniform model interface used by train/serve/launch layers."""
+    spec: ModelSpec
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], tuple]            # (params, batch)
+    prefill: Optional[Callable] = None            # (params, batch, max_seq)
+    decode_step: Optional[Callable] = None        # (params, cache, tokens)
+    init_cache: Optional[Callable] = None         # (batch, seq)
+    has_decode: bool = True
+
+
+def build_model(spec: ModelSpec) -> ModelApi:
+    if spec.family in ("dense", "moe", "vlm"):
+        return ModelApi(
+            spec=spec,
+            init=lambda key: transformer.init_params(key, spec),
+            loss=lambda p, b: transformer.loss_fn(p, b, spec),
+            prefill=lambda p, b, max_seq=None: transformer.prefill(
+                p, b["tokens"], spec, patches=b.get("patches"),
+                max_seq=max_seq),
+            decode_step=lambda p, c, t: transformer.decode_step(p, c, t,
+                                                                spec),
+            init_cache=lambda batch, seq: transformer.init_cache(spec,
+                                                                 batch, seq),
+        )
+    if spec.family == "hybrid":
+        return ModelApi(
+            spec=spec,
+            init=lambda key: hybrid.init_params(key, spec),
+            loss=lambda p, b: hybrid.loss_fn(p, b, spec),
+            prefill=lambda p, b, max_seq=None: hybrid.prefill(
+                p, b["tokens"], spec, max_seq=max_seq),
+            decode_step=lambda p, c, t: hybrid.decode_step(p, c, t, spec),
+            init_cache=lambda batch, seq: hybrid.init_cache(spec, batch,
+                                                            seq),
+        )
+    if spec.family == "ssm":
+        return ModelApi(
+            spec=spec,
+            init=lambda key: ssm_lm.init_params(key, spec),
+            loss=lambda p, b: ssm_lm.loss_fn(p, b, spec),
+            prefill=lambda p, b, max_seq=None: ssm_lm.prefill(
+                p, b["tokens"], spec, max_seq=max_seq),
+            decode_step=lambda p, c, t: ssm_lm.decode_step(p, c, t, spec),
+            init_cache=lambda batch, seq: ssm_lm.init_cache(spec, batch,
+                                                            seq),
+        )
+    if spec.family == "audio":
+        return ModelApi(
+            spec=spec,
+            init=lambda key: encdec.init_params(key, spec),
+            loss=lambda p, b: encdec.loss_fn(p, b, spec),
+            prefill=lambda p, b, max_seq=None: encdec.prefill(
+                p, b["tokens"], b["frames"], spec, max_seq=max_seq),
+            decode_step=lambda p, c, t: encdec.decode_step(p, c, t, spec),
+            init_cache=lambda batch, seq: encdec.init_cache(spec, batch,
+                                                            seq),
+        )
+    raise ValueError(f"unknown family {spec.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (model axis = tensor/expert parallelism)
+# ---------------------------------------------------------------------------
+
+# base specs for UNSTACKED parameter shapes; a leading layer-stack dim is
+# padded with None automatically.
+_COL = (None, "model")          # output-dim sharded (column parallel)
+_ROW = ("model", None)          # input-dim sharded (row parallel)
+
+_RULES: dict[str, tuple] = {
+    # embeddings / heads
+    "embed": ("model", None),             # vocab-sharded
+    "lm_head": (None, "model"),
+    # attention
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "wdkv": _COL, "wuk": _COL, "wuv": _COL,
+    # mlp
+    "w1": _COL, "w_gate": _COL, "w2": _ROW,
+    # mamba2
+    "z_proj": _COL, "xbc_proj": _COL, "dt_proj": (None, None),
+    "conv_w": (None, "model"), "out_proj": _ROW,
+    # xlstm
+    "up_proj": _COL, "wi": (None, None), "wf": (None, None),
+    "wo_gate": _COL, "down_proj": _ROW, "w_in": _COL,
+    "r_rec": (None, None, None),
+    # moe (path-sensitive, see below)
+    "router": (None, None),
+}
+
+_MOE_RULES = {
+    "w1": ("model", None, None),
+    "w_gate": ("model", None, None),
+    "w2": ("model", None, None),
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        else:
+            names.append(str(p))
+    return names
+
+
+def _spec_for(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    in_moe = "moe" in names and "shared" not in names
+    base = None
+    if in_moe and name in _MOE_RULES:
+        base = _MOE_RULES[name]
+    elif name in _RULES:
+        base = _RULES[name]
+    if base is None:
+        return P()
+    nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if nd == len(base):
+        return P(*base)
+    if nd == len(base) + 1:        # stacked over layers
+        return P(None, *base)
+    return P()
+
+
+def param_pspecs(params):
+    """pytree of PartitionSpec matching ``params`` (model-axis rules)."""
+    return jax.tree_util.tree_map_with_path(_spec_for, params)
+
+
+def param_groups(params):
+    """Fusion group tags per leaf: the tuple-ized PartitionSpec. The
+    aggregator fuses only fully-replicated leaves (tag ()) — flattening a
+    model-sharded leaf into a fused buffer would force GSPMD to all-gather
+    its shards (measured 16x compute blow-up, EXPERIMENTS.md §Perf it.0);
+    sharded leaves reduce per-leaf, chunked along an unsharded axis."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: tuple(_spec_for(path, leaf)), params)
+
+
+def divisibility_check(params, model_axis_size: int):
+    """Verify every sharded dim divides the model axis; returns offending
+    paths (used by tests and the dry-run preflight)."""
+    bad = []
+
+    def visit(path, leaf):
+        spec = _spec_for(path, leaf)
+        for dim, s in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if s == "model" and dim % model_axis_size != 0:
+                bad.append(("/".join(_path_names(path)), leaf.shape))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return bad

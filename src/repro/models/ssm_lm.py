@@ -1,0 +1,157 @@
+"""xLSTM language model assembly (xlstm-350m): mLSTM blocks with an sLSTM
+block every `slstm_every` layers (the paper's xLSTM[m:s] ratio)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import xlstm
+from .common import (ModelSpec, cross_entropy, embed_init, norm, norm_params)
+
+
+def _layout(spec: ModelSpec):
+    """Returns (block kinds per layer,) e.g. every 8th layer sLSTM."""
+    kinds = []
+    for i in range(spec.num_layers):
+        if spec.slstm_every and (i + 1) % spec.slstm_every == 0:
+            kinds.append("s")
+        else:
+            kinds.append("m")
+    return kinds
+
+
+def _segments(spec: ModelSpec):
+    """Consecutive runs of identical block kind -> [(kind, start, end)] in
+    the *per-kind* index space (mLSTM layers indexed among mLSTMs, etc.)."""
+    kinds = _layout(spec)
+    segs = []
+    m_idx = s_idx = 0
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        count = j - i
+        if kinds[i] == "m":
+            segs.append(("m", m_idx, m_idx + count))
+            m_idx += count
+        else:
+            segs.append(("s", s_idx, s_idx + count))
+            s_idx += count
+        i = j
+    return segs, m_idx, s_idx
+
+
+def init_params(key, spec: ModelSpec):
+    segs, n_m, n_s = _segments(spec)
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": embed_init(ks[0], (spec.padded_vocab, spec.d_model)),
+        "ln_f": norm_params(spec.d_model, spec.norm_type),
+    }
+    if n_m:
+        mk = jax.random.split(ks[1], n_m)
+        params["mlstm"] = jax.vmap(lambda k: {
+            "ln": norm_params(spec.d_model, spec.norm_type),
+            "mixer": xlstm.mlstm_params(k, spec)})(mk)
+    if n_s:
+        sk = jax.random.split(ks[2], n_s)
+        params["slstm"] = jax.vmap(lambda k: {
+            "ln": norm_params(spec.d_model, spec.norm_type),
+            "mixer": xlstm.slstm_params(k, spec)})(sk)
+    return params
+
+
+def _tslice(tree, a, b):
+    return jax.tree_util.tree_map(lambda x: x[a:b], tree)
+
+
+def _run(params, h, spec: ModelSpec, states=None):
+    """Shared train/decode path: full-sequence when states is None."""
+    segs, n_m, n_s = _segments(spec)
+    new_m, new_s = [], []
+
+    def m_scan(h, xs):
+        lp, st = xs
+        out, ns = xlstm.mlstm_forward(
+            lp["mixer"], norm(h, lp["ln"], spec.norm_type), spec, state=st)
+        return h + out, ns
+
+    def s_scan(h, xs):
+        lp, st = xs
+        out, ns = xlstm.slstm_forward(
+            lp["mixer"], norm(h, lp["ln"], spec.norm_type), spec, state=st)
+        return h + out, ns
+
+    b = h.shape[0]
+    for kind, a, bnd in segs:
+        n = bnd - a
+        if kind == "m":
+            lp = _tslice(params["mlstm"], a, bnd)
+            st = (_tslice(states["mlstm"], a, bnd) if states is not None
+                  else jax.tree_util.tree_map(
+                      lambda x: jnp.stack([x] * n),
+                      xlstm.mlstm_init_state(spec, b)))
+            h, ns = jax.lax.scan(m_scan, h, (lp, st))
+            new_m.append(ns)
+        else:
+            lp = _tslice(params["slstm"], a, bnd)
+            st = (_tslice(states["slstm"], a, bnd) if states is not None
+                  else jax.tree_util.tree_map(
+                      lambda x: jnp.stack([x] * n),
+                      xlstm.slstm_init_state(spec, b)))
+            h, ns = jax.lax.scan(s_scan, h, (lp, st))
+            new_s.append(ns)
+
+    def cat(parts):
+        if not parts:
+            return None
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+    return h, {"mlstm": cat(new_m), "slstm": cat(new_s)}
+
+
+def forward(params, tokens, spec: ModelSpec):
+    cd = spec.compute_dtype
+    h = params["embed"].astype(cd)[tokens]
+    h, states = _run(params, h, spec)
+    h = norm(h, params["ln_f"], spec.norm_type)
+    return h @ params["embed"].astype(cd).T, states
+
+
+def loss_fn(params, batch, spec: ModelSpec):
+    logits, _ = forward(params, batch["tokens"], spec)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(spec: ModelSpec, batch: int, seq: int):
+    """Recurrent state only — O(1) in seq (why this arch runs long_500k)."""
+    segs, n_m, n_s = _segments(spec)
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    cache["mlstm"] = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * n_m),
+        xlstm.mlstm_init_state(spec, batch)) if n_m else None
+    cache["slstm"] = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * n_s),
+        xlstm.slstm_init_state(spec, batch)) if n_s else None
+    return cache
+
+
+def prefill(params, tokens, spec: ModelSpec, max_seq=None):
+    logits, states = forward(params, tokens, spec)
+    cache = {"pos": jnp.asarray(tokens.shape[1], jnp.int32), **states}
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache, tokens, spec: ModelSpec):
+    cd = spec.compute_dtype
+    h = params["embed"].astype(cd)[tokens]
+    h, states = _run(params, h, spec,
+                     states={"mlstm": cache.get("mlstm"),
+                             "slstm": cache.get("slstm")})
+    h = norm(h, params["ln_f"], spec.norm_type)
+    logits = (h @ params["embed"].astype(cd).T)[:, 0]
+    new_cache = {"pos": cache["pos"] + 1, **states}
+    return logits, new_cache

@@ -1,0 +1,266 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with block-diagonal recurrence).
+
+Both use exponential gating with the max-state stabilizer m_t. Training
+runs a `lax.scan` over time (XLA while-loop — compiles to a bounded-state
+recurrence, which is the whole point of the architecture for the
+`long_500k` shape); decode carries (C, n, m) / (c, n, m) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelSpec, dense_init
+
+
+def _heads(spec: ModelSpec):
+    h = spec.num_heads
+    dh = spec.d_model // h
+    return h, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_params(key, spec: ModelSpec):
+    d = spec.d_model
+    h, dh = _heads(spec)
+    up = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, up)),
+        "wq": dense_init(ks[1], (up, d)),
+        "wk": dense_init(ks[2], (up, d)),
+        "wv": dense_init(ks[3], (up, d)),
+        "wi": dense_init(ks[4], (up, h)),
+        "wf": dense_init(ks[5], (up, h)),
+        "wo_gate": dense_init(ks[6], (up, d)),
+        "down_proj": dense_init(ks[7], (d, d)),
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),
+    }
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, state):
+    """q,k,v (B,S,H,dh); i_pre,f_pre (B,S,H). Returns (y, state)."""
+    b, s, h, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+
+    def step(carry, inp):
+        c, n, m = carry                       # (B,H,dh,dh), (B,H,dh), (B,H)
+        qt, kt, vt, it, ft = inp
+        logf = jax.nn.log_sigmoid(ft)         # (B,H)
+        m_new = jnp.maximum(logf + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        kt = kt * scale
+        c = f_g[..., None, None] * c \
+            + i_g[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = f_g[..., None] * n + i_g[..., None] * kt
+        num = jnp.einsum("bhd,bhdv->bhv", qt, c)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3),
+          i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state   # (B,S,H,dh)
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, state, chunk: int):
+    """Chunkwise-parallel mLSTM (§Perf A1): the sequential recurrence
+    materializes the (B,H,dh,dh) matrix memory every timestep — ~4 TB of
+    HBM traffic per layer at 4k. The chunkwise form (same algebra as
+    Mamba2's SSD) computes intra-chunk contributions as a masked
+    attention-like quadratic form on the MXU and carries (C, n, m) only
+    across chunk boundaries.
+
+    Stabilizers follow the max-state scheme; outputs match the sequential
+    scan wherever the exp(-m) denominator clamp is not binding (asserted
+    to ~1e-3 in tests)."""
+    b, s, h, dh = q.shape
+    n_c = s // chunk
+    scale = 1.0 / np.sqrt(dh)
+    k = k * scale
+
+    # Pin the mixer internals replicated over the auto (model) axis: with
+    # only 4 heads x 256 dims there is nothing useful to tensor-shard, and
+    # letting GSPMD guess produced a 233k-op all-to-all storm between
+    # conflicting layouts (§Perf A1 -> A2).
+    def pin(x):
+        try:
+            from jax.sharding import PartitionSpec as P
+            return jax.lax.with_sharding_constraint(
+                x, P(*([None] * x.ndim)))
+        except (ValueError, RuntimeError):
+            return x   # no mesh context (single-device tests)
+
+    q, k, v = pin(q), pin(k), pin(v)
+    i_pre, f_pre = pin(i_pre), pin(f_pre)
+
+    def reshape_c(x):
+        return x.reshape(b, n_c, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = reshape_c(q), reshape_c(k), reshape_c(v)
+    is_, fs = reshape_c(i_pre), reshape_c(f_pre)
+    mask = np.tril(np.ones((chunk, chunk), np.float32))
+
+    def chunk_step(carry, inp):
+        c_in, n_in, m_in = carry            # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, ic, fc = inp            # (B,L,...)
+        logf = jax.nn.log_sigmoid(fc)       # (B,L,H)
+        bcum = jnp.cumsum(logf, axis=1)     # inclusive
+        total = bcum[:, -1]                 # (B,H)
+
+        # per-position stabilizer
+        intra_exp = bcum[:, :, None, :] - bcum[:, None, :, :] \
+            + ic[:, None, :, :]             # (B,t,s,H)
+        intra_exp = jnp.where(mask[None, :, :, None] > 0, intra_exp,
+                              -jnp.inf)
+        m_intra = jnp.max(intra_exp, axis=2)             # (B,L,H)
+        m_t = jnp.maximum(m_in[:, None, :] + bcum, m_intra)
+
+        # intra-chunk attention-like term
+        w = jnp.exp(intra_exp - m_t[:, :, None, :])      # (B,t,s,H)
+        sc = jnp.einsum("bthd,bshd->btsh", qc, kc) * w
+        num_intra = jnp.einsum("btsh,bshv->bthv", sc, vc)
+        den_intra = jnp.einsum("btsh,bshd->bthd", w, kc)
+
+        # inter-chunk term from the carried state
+        g = jnp.exp(m_in[:, None, :] + bcum - m_t)       # (B,L,H)
+        num_inter = jnp.einsum("bthd,bhdv->bthv", qc,
+                               c_in) * g[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qc, n_in)[..., None] \
+            * g[..., None]
+        den_q = jnp.einsum("bthd,bthd->bth", qc, den_intra)
+        num = num_intra + num_inter
+        den = jnp.abs(den_q + den_inter[..., 0])
+        y = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+
+        # chunk-end state update
+        m_endc = jnp.max(total[:, None, :] - bcum + ic, axis=1)  # (B,H)
+        m_out = jnp.maximum(m_in + total, m_endc)
+        wk = jnp.exp(total[:, None, :] - bcum + ic
+                     - m_out[:, None, :])                 # (B,L,H)
+        c_out = c_in * jnp.exp(m_in + total - m_out)[..., None, None] \
+            + jnp.einsum("blh,blhd,blhv->bhdv", wk, kc, vc)
+        n_out = n_in * jnp.exp(m_in + total - m_out)[..., None] \
+            + jnp.einsum("blh,blhd->bhd", wk, kc)
+        return (c_out, n_out, m_out), y
+
+    state, ys = jax.lax.scan(chunk_step, state, (qs, ks, vs, is_, fs))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dh)
+    return y, state
+
+
+def mlstm_init_state(spec: ModelSpec, batch: int):
+    h, dh = _heads(spec)
+    return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_forward(params, x, spec: ModelSpec, state=None):
+    b, s, d = x.shape
+    h, dh = _heads(spec)
+    cd = spec.compute_dtype
+    up = x @ params["up_proj"].astype(cd)
+    q = (up @ params["wq"].astype(cd)).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (up @ params["wk"].astype(cd)).reshape(b, s, h, dh).astype(jnp.float32)
+    v = (up @ params["wv"].astype(cd)).reshape(b, s, h, dh).astype(jnp.float32)
+    i_pre = (up @ params["wi"].astype(cd)).astype(jnp.float32)
+    f_pre = (up @ params["wf"].astype(cd)).astype(jnp.float32) \
+        + params["f_bias"]
+    if state is None:
+        state = mlstm_init_state(spec, b)
+    state = {k2: v2 for k2, v2 in state.items()}
+    carry = (state["c"], state["n"], state["m"])
+    chunk = spec.mlstm_chunk
+    if chunk and s % chunk == 0 and s > chunk:
+        y, new_state = _mlstm_chunked(q, k, v, i_pre, f_pre, carry, chunk)
+    else:
+        y, new_state = _mlstm_scan(q, k, v, i_pre, f_pre, carry)
+    o = jax.nn.sigmoid((up @ params["wo_gate"].astype(cd))
+                       .astype(jnp.float32))
+    y = (y.reshape(b, s, d) * o).astype(cd)
+    out = y @ params["down_proj"].astype(cd)
+    c, n, m = new_state
+    return out, {"c": c, "n": n, "m": m}
+
+
+def mlstm_decode(params, x, state, spec: ModelSpec):
+    return mlstm_forward(params, x, spec, state=state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_params(key, spec: ModelSpec):
+    d = spec.d_model
+    h, dh = _heads(spec)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d)),        # z,i,f,o pre-acts
+        "r_rec": (jax.random.normal(ks[1], (h, dh, 4 * dh))
+                  / np.sqrt(dh)).astype(jnp.float32),  # block-diag recurrence
+        "bias": jnp.concatenate([jnp.zeros((2 * d,)),
+                                 jnp.full((d,), 3.0),
+                                 jnp.zeros((d,))]).astype(jnp.float32),
+        "down_proj": dense_init(ks[2], (d, d)),
+    }
+
+
+def slstm_init_state(spec: ModelSpec, batch: int):
+    d = spec.d_model
+    h, dh = _heads(spec)
+    return {"c": jnp.zeros((batch, h, dh), jnp.float32),
+            "n": jnp.ones((batch, h, dh), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32),
+            "h": jnp.zeros((batch, h, dh), jnp.float32)}
+
+
+def slstm_forward(params, x, spec: ModelSpec, state=None):
+    b, s, d = x.shape
+    h, dh = _heads(spec)
+    cd = spec.compute_dtype
+    pre = (x @ params["w_in"].astype(cd)).astype(jnp.float32) \
+        + params["bias"]                                 # (B,S,4d)
+    pre = pre.reshape(b, s, 4, h, dh)
+    if state is None:
+        state = slstm_init_state(spec, b)
+
+    def step(carry, inp):
+        c, n, m, hprev = carry
+        p_t = inp                                        # (B,4,H,dh)
+        rec = jnp.einsum("bhd,hdk->bhk", hprev,
+                         params["r_rec"]).reshape(b, h, 4, dh) \
+            .transpose(0, 2, 1, 3)
+        zp, ip, fp, op = [p_t[:, j] + rec[:, j] for j in range(4)]
+        z = jnp.tanh(zp)
+        o = jax.nn.sigmoid(op)
+        logf = jax.nn.log_sigmoid(fp)
+        m_h = jnp.max(ip, axis=-1)                       # per-head stabilizer
+        logf_h = jnp.mean(logf, axis=-1)
+        m_new = jnp.maximum(logf_h + m, m_h)
+        i_g = jnp.exp(ip - m_new[..., None])
+        f_g = jnp.exp(logf + (m - m_new)[..., None])
+        c = f_g * c + i_g * z
+        n = f_g * n + i_g
+        hnew = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, hnew), hnew
+
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, ys = jax.lax.scan(step, carry, pre.transpose(1, 0, 2, 3, 4))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(cd)
+    out = y @ params["down_proj"].astype(cd)
+    c, n, m, hh = carry
+    return out, {"c": c, "n": n, "m": m, "h": hh}
+
+
+def slstm_decode(params, x, state, spec: ModelSpec):
+    return slstm_forward(params, x, spec, state=state)

@@ -1,0 +1,6 @@
+from .optimizers import Optimizer, adamw, apply_updates, sgd
+from .schedules import constant, cosine_warmup
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = ["Optimizer", "adamw", "sgd", "apply_updates", "constant",
+           "cosine_warmup", "clip_by_global_norm", "global_norm"]

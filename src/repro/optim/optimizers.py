@@ -1,0 +1,92 @@
+"""Optimizers built from scratch (no optax): SGD-momentum and AdamW.
+
+The paper's workloads train with momentum SGD (tf_cnn_benchmarks
+default); the pool architectures use AdamW. Both expose:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+State mirrors the parameter pytree so it inherits parameter shardings
+(``state_pspecs``). ``repro.kernels.fused_adamw`` provides the Pallas
+fused-update kernel for the TPU target; the jnp path here is its oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    state_pspecs: Callable[[Any], Any]      # param pspecs -> state pspecs
+
+
+def sgd(lr: Callable | float, momentum: float = 0.9,
+        weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mom": _tmap(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        step_lr = lr_fn(count)
+        mom = _tmap(lambda m, g: momentum * m + g.astype(m.dtype),
+                    state["mom"], grads)
+        upd = _tmap(lambda m, p: -step_lr * (m + weight_decay * p),
+                    mom, params)
+        return upd, {"mom": mom, "count": count}
+
+    def state_pspecs(pspecs):
+        from jax.sharding import PartitionSpec as P
+        return {"mom": pspecs, "count": P()}
+
+    return Optimizer(init, update, state_pspecs)
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": _tmap(jnp.zeros_like, params),
+                "v": _tmap(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        step_lr = lr_fn(count)
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(v_.dtype)), state["v"], grads)
+        upd = _tmap(
+            lambda m_, v_, p: -step_lr * (
+                (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                + weight_decay * p),
+            m, v, params)
+        return upd, {"m": m, "v": v, "count": count}
+
+    def state_pspecs(pspecs):
+        from jax.sharding import PartitionSpec as P
+        return {"m": pspecs, "v": pspecs, "count": P()}
+
+    return Optimizer(init, update, state_pspecs)

@@ -1,0 +1,21 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,6 @@
+from .engine import ServeEngine
+from .sharding import cache_pspecs
+from .step import make_decode_step, make_prefill_step
+
+__all__ = ["ServeEngine", "cache_pspecs", "make_decode_step",
+           "make_prefill_step"]

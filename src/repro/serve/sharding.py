@@ -1,0 +1,65 @@
+"""Sharding rules for serving state (KV caches, recurrent states).
+
+Unlike the train step, serving is pure GSPMD (the paper's technique is a
+gradient-aggregation design; it does not apply to inference — DESIGN.md
+§3.1), so caches just need good PartitionSpecs:
+
+  * leading dims are (layers, batch, ...): batch shards over the data
+    axes when divisible (it isn't for long_500k's batch=1 — replicated);
+  * among the remaining dims, the largest one divisible by the model-axis
+    size shards over `model` (kv-heads for GQA, latent rank for MLA,
+    state heads for SSM, channels for conv states).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _leaf_spec(shape, dp_axes, dp_size: int, model_size: int,
+               has_layer_dim: bool = True):
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    spec = [None] * nd
+    batch_dim = 1 if (has_layer_dim and nd >= 2) else 0
+    if shape[batch_dim] % dp_size == 0 and dp_size > 1:
+        spec[batch_dim] = tuple(dp_axes)
+    if model_size > 1:
+        cand = list(range(batch_dim + 1, nd))
+        best = None
+        if nd == 5:
+            # (L, B, S, KV, hd) attention cache: prefer the dims the
+            # attention einsums shard naturally — kv-heads, then head_dim
+            # — so per-step decode never re-shards the cache (measured
+            # 41 GiB/step of re-shard all-gathers with size-greedy
+            # sharding on S; EXPERIMENTS.md §Perf it.0b).
+            # kv-heads first (zero-collective decode attention); else the
+            # sequence dim (flash-decode: softmax stats + out psums are
+            # KB-scale); head_dim last (contracting-dim shard would force
+            # q/cache re-sharding — measured 20 GiB/layer gathers).
+            for i in (3, 2, 4):
+                if shape[i] % model_size == 0:
+                    best = i
+                    break
+        if best is None:
+            best_size = 0
+            for i in cand:
+                if shape[i] % model_size == 0 and shape[i] > best_size:
+                    best, best_size = i, shape[i]
+        if best is not None:
+            spec[best] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(cache, mesh, dp_axes):
+    """PartitionSpec pytree for a cache template (arrays or structs)."""
+    dp_size = 1
+    for ax in dp_axes:
+        dp_size *= mesh.shape[ax]
+    model_size = mesh.shape.get("model", 1)
+
+    def per_leaf(x):
+        return _leaf_spec(tuple(x.shape), dp_axes, dp_size, model_size)
+
+    return jax.tree_util.tree_map(per_leaf, cache)

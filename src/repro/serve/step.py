@@ -1,0 +1,70 @@
+"""Jitted serving steps: prefill (prompt -> cache) and decode (1 token)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.synthetic import batch_pspecs
+from repro.models import ModelApi, param_pspecs
+from .sharding import cache_pspecs
+
+
+def sanitize_pspec(spec: P, mesh) -> P:
+    """Drop axis names the mesh doesn't have (e.g. running a model-
+    parallel-ruled model on a data-only host mesh)."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(e for e in entry if e in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in tuple(spec)))
+
+
+def _ns(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, sanitize_pspec(spec, mesh)), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_prefill_step(model: ModelApi, mesh, dp_axes, batch_example,
+                      max_seq: int):
+    pspecs = param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    bspecs = batch_pspecs(batch_example, dp_axes)
+
+    def fn(params, batch):
+        return model.prefill(params, batch, max_seq)
+
+    b = jax.tree_util.tree_leaves(batch_example)[0].shape[0]
+    cache_tpl = jax.eval_shape(lambda: model.init_cache(b, max_seq))
+    cspecs = cache_pspecs(cache_tpl, mesh, dp_axes)
+    return jax.jit(fn,
+                   in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+                   out_shardings=(None, _ns(mesh, cspecs)))
+
+
+def make_decode_step(model: ModelApi, mesh, dp_axes, batch: int,
+                     max_seq: int, donate: bool = True):
+    pspecs = param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    cache_tpl = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    cspecs = cache_pspecs(cache_tpl, mesh, dp_axes)
+    dp_size = 1
+    for ax in dp_axes:
+        dp_size *= mesh.shape[ax]
+    tok_spec = P(tuple(dp_axes), None) if batch % dp_size == 0 and \
+        dp_size > 1 else P(None, None)
+
+    def fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return jax.jit(fn,
+                   in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                                 NamedSharding(mesh, tok_spec)),
+                   out_shardings=(None, _ns(mesh, cspecs)),
+                   donate_argnums=(1,) if donate else ())

@@ -1,0 +1,4 @@
+from .step import TrainStepConfig, make_train_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainStepConfig", "make_train_step", "Trainer", "TrainerConfig"]

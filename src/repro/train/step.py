@@ -1,0 +1,96 @@
+"""The distributed train step — where the paper's technique plugs in.
+
+Structure (DESIGN.md §3.1):
+
+    jax.jit( jax.shard_map(step, axis_names={pod, data}) )
+                │
+                ├─ value_and_grad(model.loss)    # local data shard
+                ├─ clip_by_global_norm           # on LOCAL grads (pre-
+                │                                #   aggregation, cheap)
+                ├─ GradientAggregator(...)       # fusion ∘ reducer ∘ cache
+                └─ optimizer.update + apply      # replicated over data,
+                                                 #   model-sharded via auto
+
+The data axes are MANUAL: the gradient sum over data shards happens only
+through the aggregator's explicit algorithm (the compiled HLO contains
+our collective-permutes, no XLA-chosen allreduce). The `model` axis stays
+AUTO so GSPMD shards FFN/heads/experts/vocab via `param_pspecs` rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import AggregatorConfig, GradientAggregator
+from repro.data.synthetic import batch_pspecs
+from repro.models import ModelApi, param_groups, param_pspecs
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    aggregator: AggregatorConfig = AggregatorConfig()
+    clip_norm: float = 1.0
+    dp_axes: tuple = ("data",)
+
+
+def make_train_step(model: ModelApi, optimizer: Optimizer,
+                    mesh, cfg: TrainStepConfig,
+                    batch_example: Any,
+                    donate: bool = True):
+    """Build the jitted multi-device train step.
+
+    ``batch_example``: pytree of arrays or ShapeDtypeStructs with GLOBAL
+    shapes (leading dim = global batch).
+    Returns (step_fn, shardings) where
+    ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    """
+    dp_axes = tuple(cfg.dp_axes)
+    agg = GradientAggregator(cfg.aggregator, dp_axes)
+
+    def local_step(params, opt_state, batch):
+        groups = param_groups(params)
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        grads = agg(grads, groups=groups)               # ← the technique
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(
+            lambda p, u: p + u.astype(p.dtype), params, updates)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+        metrics = {k: agg.mean_scalar(v) for k, v in metrics.items()}
+        return params, opt_state, metrics
+
+    bspecs = batch_pspecs(batch_example, dp_axes)
+    smapped = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(), bspecs),
+        out_specs=(P(), P(), P()),
+        axis_names=set(dp_axes),
+        check_vma=False)
+
+    pspecs = param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    sspecs = optimizer.state_pspecs(pspecs)
+
+    from repro.serve.step import sanitize_pspec
+
+    def ns(tree):
+        return jax.tree_util.tree_map(
+            lambda spec: NamedSharding(mesh, sanitize_pspec(spec, mesh)),
+            tree, is_leaf=lambda x: isinstance(x, P))
+
+    batch_sh = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), bspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    jitted = jax.jit(
+        smapped,
+        in_shardings=(ns(pspecs), ns(sspecs), batch_sh),
+        out_shardings=(ns(pspecs), ns(sspecs), None),
+        donate_argnums=(0, 1) if donate else ())
+    return jitted, {"params": pspecs, "opt": sspecs, "batch": bspecs}

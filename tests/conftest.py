@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the 512-device override is
+# strictly dry-run-local, per the mandate) — so no XLA_FLAGS here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

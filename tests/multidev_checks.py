@@ -1,0 +1,162 @@
+"""Multi-device correctness checks, run as a SUBPROCESS by
+test_reducers_multidev.py with 8 host devices (keeps the main pytest
+process at 1 device). Exit code 0 = all checks passed."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import AggregatorConfig, GradientAggregator
+from repro.core import reducers
+
+
+def mesh2d():
+    return jax.make_mesh((2, 4), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def check_reducers():
+    mesh = mesh2d()
+    for strategy in ["psum", "ring_rsa", "rhd_rsa", "ps_gather",
+                     "hierarchical"]:
+        for shape in [(37,), (5, 3), (64,), (1,)]:
+            for dtype in [jnp.float32, jnp.bfloat16]:
+                n = int(np.prod(shape))
+                x = (jnp.arange(8 * n, dtype=jnp.float32)
+                     .reshape((8,) + shape) / 7.0).astype(dtype)
+
+                def f(xl):
+                    return reducers.allreduce(xl, ("pod", "data"), strategy)
+
+                sm = jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+                                   out_specs=P(("pod", "data")),
+                                   axis_names={"pod", "data"},
+                                   check_vma=False)
+                out = jax.jit(sm)(
+                    x.reshape((8 * shape[0],) + shape[1:]))
+                out = np.asarray(out.astype(jnp.float32)) \
+                    .reshape((8,) + shape)
+                want = np.asarray(x.astype(jnp.float32)).sum(0)
+                tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+                for i in range(8):
+                    np.testing.assert_allclose(
+                        out[i], want, rtol=tol, atol=tol,
+                        err_msg=f"{strategy} {shape} {dtype} dev{i}")
+    print("reducers ok")
+
+
+def check_aggregator():
+    mesh = mesh2d()
+    grads = {
+        "w1": jnp.arange(8 * 7 * 6.0).reshape(8 * 7, 6),
+        "b": jnp.arange(8 * 4.0).reshape(8, 4).astype(jnp.bfloat16)
+        .reshape(8 * 4),
+        "col_sharded": jnp.arange(8 * 3 * 4.0).reshape(8 * 3, 4),
+    }
+    groups = {"w1": (), "b": (), "col_sharded": (None, "model")}
+    for strategy in ["ring_rsa", "rhd_rsa", "hierarchical"]:
+        agg = GradientAggregator(
+            AggregatorConfig(strategy=strategy, fusion_threshold_mb=0.001),
+            ("pod", "data"))
+        sm = jax.shard_map(lambda g: agg(g, groups=groups), mesh=mesh,
+                           in_specs=P(("pod", "data")),
+                           out_specs=P(("pod", "data")),
+                           axis_names={"pod", "data"}, check_vma=False)
+        out = jax.jit(sm)(grads)
+        for k_, v in grads.items():
+            got = np.asarray(out[k_].astype(jnp.float32)) \
+                .reshape((8, -1) + v.shape[1:])
+            want = np.asarray(v.astype(jnp.float32)) \
+                .reshape((8, -1) + v.shape[1:]).mean(0)
+            for i in range(8):
+                np.testing.assert_allclose(got[i], want, rtol=2e-2,
+                                           atol=2e-2,
+                                           err_msg=f"{strategy} {k_}")
+    print("aggregator ok")
+
+
+def check_train_loss_decreases():
+    from repro.configs import get_spec
+    from repro.core import AggregatorConfig
+    from repro.data.synthetic import SyntheticText
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train import TrainStepConfig, make_train_step
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = get_spec("smollm-360m").reduced()
+    model = build_model(spec)
+    data = SyntheticText(spec.vocab_size, batch=8, seq_len=32)
+    opt = adamw(1e-3)
+    cfg = TrainStepConfig(
+        aggregator=AggregatorConfig(strategy="rhd_rsa",
+                                    fusion_threshold_mb=0.25),
+        dp_axes=("data",))
+    step_fn, _ = make_train_step(model, opt, mesh, cfg, data.batch_at(0))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    losses = []
+    for i in range(12):
+        params, opt_state, m = step_fn(params, opt_state, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+    print(f"train ok: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+def check_strategy_equivalence():
+    """All strategies produce the SAME trained params (bitwise-close):
+    the algorithm choice is a pure performance knob (the paper's premise)."""
+    from repro.configs import get_spec
+    from repro.core import AggregatorConfig
+    from repro.data.synthetic import SyntheticText
+    from repro.models import build_model
+    from repro.optim import sgd
+    from repro.train import TrainStepConfig, make_train_step
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = get_spec("smollm-360m").reduced()
+    model = build_model(spec)
+    data = SyntheticText(spec.vocab_size, batch=8, seq_len=16)
+    finals = {}
+    for strategy in ["psum", "ring_rsa", "rhd_rsa", "ps_gather"]:
+        opt = sgd(1e-2)
+        cfg = TrainStepConfig(
+            aggregator=AggregatorConfig(strategy=strategy),
+            dp_axes=("data",))
+        step_fn, _ = make_train_step(model, opt, mesh, cfg,
+                                     data.batch_at(0), donate=False)
+        params = model.init(jax.random.PRNGKey(1))
+        opt_state = opt.init(params)
+        for i in range(3):
+            params, opt_state, _ = step_fn(params, opt_state,
+                                           data.batch_at(i))
+        finals[strategy] = params
+    base = finals["psum"]
+    for strategy, p in finals.items():
+        for (ka, a), (kb, b) in zip(
+                jax.tree_util.tree_leaves_with_path(base),
+                jax.tree_util.tree_leaves_with_path(p)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-4, atol=1e-5,
+                err_msg=f"{strategy} diverged from psum at {ka}")
+    print("strategy equivalence ok")
+
+
+if __name__ == "__main__":
+    check_reducers()
+    check_aggregator()
+    check_train_loss_decreases()
+    check_strategy_equivalence()
+    print("ALL MULTIDEV CHECKS PASSED")

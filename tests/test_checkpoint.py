@@ -1,0 +1,33 @@
+"""Checkpoint save/restore roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+
+
+def test_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    save(str(tmp_path), 7, tree)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    out = restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save(str(tmp_path), 3, {"x": jnp.zeros(2)})
+    save(str(tmp_path), 11, {"x": jnp.zeros(2)})
+    assert latest_step(str(tmp_path)) == 11
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {"x": jnp.zeros(2)})
+    import pytest
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, {"x": jnp.zeros(3)})

@@ -1,0 +1,33 @@
+"""Dry-run smoke: one real (arch × shape) lower+compile on the production
+mesh, in a subprocess (the 512-device XLA flag must not leak here)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_dryrun_whisper_decode(tmp_path):
+    out = tmp_path / "rec.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "decode_32k", "--json", str(out)],
+        capture_output=True, text=True, timeout=580, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    rec = json.loads(out.read_text())
+    assert rec["status"] == "OK"
+    assert rec["roofline"]["dominant"] in ("compute", "memory",
+                                           "collective")
+    assert rec["collectives"]["total_bytes"] >= 0
+    assert rec["mesh"] == "16x16"
+
+
+def test_main_process_sees_one_device():
+    import jax
+    assert jax.device_count() == 1

@@ -1,0 +1,109 @@
+"""Tensor-fusion plan: unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_plan
+from repro.core.fusion import LeafMeta
+
+
+def _tree_of(shapes, dtypes=None):
+    dtypes = dtypes or [jnp.float32] * len(shapes)
+    return {f"p{i}": jnp.arange(int(np.prod(s)) or 1, dtype=dt)
+            .reshape(s) for i, (s, dt) in enumerate(zip(shapes, dtypes))}
+
+
+def test_fuse_small_leaves_into_one_bucket():
+    tree = _tree_of([(4,), (5,), (6,)])
+    plan = build_plan(tree, threshold_bytes=1 << 20)
+    assert plan.num_messages == 1
+    assert plan.buckets[0].size == 15
+
+
+def test_threshold_splits_buckets():
+    tree = _tree_of([(100,), (100,), (100,)])
+    plan = build_plan(tree, threshold_bytes=2 * 100 * 4)
+    assert plan.num_messages == 2
+
+
+def test_large_leaf_own_bucket():
+    tree = _tree_of([(4,), (10000,), (5,)])
+    plan = build_plan(tree, threshold_bytes=1024)
+    sizes = sorted(b.size for b in plan.buckets)
+    assert sizes == [9, 10000]
+
+
+def test_dtype_separation():
+    tree = _tree_of([(8,), (8,)], [jnp.float32, jnp.bfloat16])
+    plan = build_plan(tree, threshold_bytes=1 << 20)
+    assert plan.num_messages == 2
+
+
+def test_sharded_leaves_stay_single():
+    tree = _tree_of([(8,), (8, 4), (8,)])
+    groups = {"p0": (), "p1": (None, "model"), "p2": ()}
+    plan = build_plan(tree, threshold_bytes=1 << 20, groups=groups)
+    # p0+p2 fuse; p1 stays single-leaf with rank preserved
+    assert plan.num_messages == 2
+    bufs = plan.flatten(tree)
+    ranks = sorted(b.ndim for b in bufs)
+    assert ranks == [1, 2]
+
+
+def test_no_fuse_mode():
+    tree = _tree_of([(4,), (5,), (6,)])
+    plan = build_plan(tree, threshold_bytes=1 << 20, fuse=False)
+    assert plan.num_messages == 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 300), min_size=1, max_size=20),
+    threshold=st.integers(16, 4096),
+)
+def test_roundtrip_property(sizes, threshold):
+    """flatten→unflatten is the identity for any leaf sizes/threshold."""
+    tree = {f"p{i}": jnp.arange(float(n)) * (i + 1)
+            for i, n in enumerate(sizes)}
+    plan = build_plan(tree, threshold_bytes=threshold)
+    # invariant: every leaf appears in exactly one bucket
+    seen = sorted(i for b in plan.buckets for i in b.leaf_indices)
+    assert seen == list(range(len(sizes)))
+    # invariant: fused buckets respect the threshold
+    for b in plan.buckets:
+        if len(b.leaf_indices) > 1:
+            assert b.size * 4 <= threshold
+    out = plan.unflatten(plan.flatten(tree))
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]),
+                                      np.asarray(out[k]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_leaves=st.integers(1, 12),
+    threshold=st.integers(64, 2048),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_group_purity_property(n_leaves, threshold, seed):
+    """No bucket ever mixes (dtype, group) classes."""
+    rng = np.random.RandomState(seed)
+    shapes = [(int(rng.randint(1, 100)),) for _ in range(n_leaves)]
+    dtypes = [jnp.float32 if rng.rand() < 0.7 else jnp.bfloat16
+              for _ in range(n_leaves)]
+    tags = [() if rng.rand() < 0.6 else (None, "model")
+            for _ in range(n_leaves)]
+    tree = {f"p{i}": jnp.zeros(s, dt)
+            for i, (s, dt) in enumerate(zip(shapes, dtypes))}
+    groups = {f"p{i}": t for i, t in enumerate(tags)}
+    plan = build_plan(tree, threshold_bytes=threshold, groups=groups)
+    metas = {m.index: m for m in plan.leaves}
+    for b in plan.buckets:
+        cls = {(metas[i].dtype, metas[i].group) for i in b.leaf_indices}
+        assert len(cls) == 1
+        if len(b.leaf_indices) > 1:
+            # only fully-replicated leaves may fuse
+            assert all(metas[i].group == () or metas[i].group is None
+                       for i in b.leaf_indices)

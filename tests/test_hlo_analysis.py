@@ -1,0 +1,84 @@
+"""HLO analyzer unit tests: trip counts, in-place DUS accounting,
+collective classification — the §Roofline numbers stand on these."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _txt(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.ones((128, 64))
+    b = jnp.ones((64, 32))
+    agg = H.analyze(_txt(lambda a, b: a @ b, a, b))
+    assert agg.flops == 2 * 128 * 64 * 32
+
+
+def test_while_trip_multiplication():
+    w = jnp.ones((32, 32))
+
+    def scanned(x):
+        def body(c, _):
+            return c @ w, None
+        return jax.lax.scan(body, x, None, length=13)[0]
+
+    one = H.analyze(_txt(lambda x: x @ w, jnp.ones((32, 32))))
+    scn = H.analyze(_txt(scanned, jnp.ones((32, 32))))
+    assert scn.flops == pytest.approx(13 * one.flops)
+
+
+def test_scan_output_collection_not_overcounted():
+    """Collecting ys in a scan must NOT charge the full output buffer per
+    step (in-place dynamic-update-slice aliasing) — the an.1/an.2
+    analyzer bugs from EXPERIMENTS.md §Perf."""
+    def collect(x):
+        def body(c, _):
+            c = c * 1.000001
+            return c, c
+        _, ys = jax.lax.scan(body, x, None, length=100)
+        return ys
+
+    x = jnp.ones((1024,))
+    agg = H.analyze(_txt(collect, x))
+    full_buffer_per_step = 100 * (100 * 1024 * 4)   # the buggy accounting
+    assert agg.hbm_bytes < full_buffer_per_step / 5
+
+
+def test_collective_bytes_parse():
+    import os
+    import subprocess
+    import sys
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch import hlo_analysis as H
+
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+def f(x):
+    return jax.lax.psum(x, "data")
+sm = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                   axis_names={"data"}, check_vma=False)
+txt = jax.jit(sm).lower(jnp.ones((4 * 256,), jnp.float32)).compile().as_text()
+agg = H.analyze(txt)
+assert agg.collective_counts.get("all-reduce", 0) >= 1, agg.collective_counts
+assert agg.collective_bytes["all-reduce"] == 256 * 4, agg.collective_bytes
+print("OK")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code % os.path.abspath(src)],
+                          capture_output=True, text=True, timeout=300,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,41 @@
+"""Plan cache (pointer-cache analogue): hits, key sensitivity, stats."""
+import jax.numpy as jnp
+
+from repro.core import PlanCache
+
+
+def _tree(n=8, dtype=jnp.float32):
+    return {"a": jnp.zeros((n,), dtype), "b": jnp.zeros((n, 2), dtype)}
+
+
+def test_hit_on_same_structure():
+    cache = PlanCache()
+    p1 = cache.get_or_build(_tree(), 1024)
+    p2 = cache.get_or_build(_tree(), 1024)
+    assert p1 is p2
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_miss_on_shape_change():
+    cache = PlanCache()
+    cache.get_or_build(_tree(8), 1024)
+    cache.get_or_build(_tree(9), 1024)
+    assert cache.stats.misses == 2
+
+
+def test_miss_on_dtype_threshold_group_change():
+    cache = PlanCache()
+    cache.get_or_build(_tree(), 1024)
+    cache.get_or_build(_tree(dtype=jnp.bfloat16), 1024)
+    cache.get_or_build(_tree(), 2048)
+    cache.get_or_build(_tree(), 1024, groups={"a": (), "b": ("model",)})
+    assert cache.stats.misses == 4
+    # and all four coexist
+    assert len(cache) == 4
+
+
+def test_clear():
+    cache = PlanCache()
+    cache.get_or_build(_tree(), 1024)
+    cache.clear()
+    assert len(cache) == 0 and cache.stats.misses == 0

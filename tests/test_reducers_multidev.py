@@ -1,0 +1,19 @@
+"""Multi-device reducer/aggregator/train correctness — one subprocess
+with 8 host devices (the main pytest process stays at 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_multidev_checks():
+    script = os.path.join(os.path.dirname(__file__), "multidev_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, timeout=880, env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    assert "ALL MULTIDEV CHECKS PASSED" in proc.stdout

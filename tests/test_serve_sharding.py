@@ -1,0 +1,48 @@
+"""Cache-sharding policy unit tests (§Perf it.0c rules)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.serve.sharding import _leaf_spec
+
+
+DP, MODEL = 16, 16
+
+
+def spec_of(shape):
+    return _leaf_spec(shape, ("data",), DP, MODEL)
+
+
+def test_kv_heads_preferred_when_divisible():
+    # (L, B, S, KV=16, hd)
+    assert spec_of((28, 128, 32768, 16, 256)) == \
+        P(None, ("data",), None, "model", None)
+
+
+def test_sequence_when_kv_indivisible():
+    # granite: KV=8 not divisible by 16 -> flash-decode S sharding
+    assert spec_of((40, 128, 32768, 8, 64)) == \
+        P(None, ("data",), "model", None, None)
+
+
+def test_head_dim_never_preferred_over_seq():
+    s = spec_of((40, 128, 32768, 8, 64))
+    assert tuple(s)[4] is None
+
+
+def test_batch_replicated_when_indivisible():
+    # long_500k batch=1
+    s = spec_of((28, 1, 8192, 16, 256))
+    assert tuple(s)[1] is None
+    assert tuple(s)[3] == "model"
+
+
+def test_ssm_state_shards_largest_divisible():
+    # (L, B, H=64, N, P) zamba ssm state: H divisible
+    s = spec_of((38, 128, 64, 64, 64))
+    assert "model" in tuple(s)
+
+
+def test_scalar_replicated():
+    assert spec_of(()) == P()
