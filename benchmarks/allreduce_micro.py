@@ -1,13 +1,18 @@
 """Paper Figs. 4 & 6: Allreduce latency vs message size per design.
 
-Two complementary modes:
+Three complementary modes:
   * analytic — α-β(-γ) model on TPU v5e constants for: MPI (default,
     host-staged reduction), MPI-Opt (the paper's RHD + on-chip kernel
     reduction), NCCL2 analogue (vendor psum), ring (Baidu), PS (gRPC).
-  * measured — wall-clock of the actual ppermute implementations on 8
-    XLA host devices (semantics identical to TPU; absolute numbers are
-    CPU-bound, relative step-count effects are visible). Runs in a
-    subprocess so the main process keeps one device.
+  * analytic non-pow2 — RHD vs ring over the paper's actual cluster
+    shapes (6-, 12-, 24-way): the MVAPICH2 pre/post fold costs +2 steps
+    and +2·N bytes but keeps the 2·log2(core) step count that wins on
+    latency-bound messages.
+  * measured — wall-clock of the actual ppermute implementations on XLA
+    host devices, including non-pow2 submeshes p ∈ {3, 6, 12}
+    (semantics identical to TPU; absolute numbers are CPU-bound,
+    relative step-count effects are visible). Runs in a subprocess so
+    the main process keeps one device.
 """
 from __future__ import annotations
 
@@ -17,9 +22,31 @@ import subprocess
 import sys
 
 from repro.core import cost_model as cm
+from repro.core.reducers import allreduce_steps, wire_bytes
 
 SIZES = [8, 1024, 64 * 1024, 1 << 20, 16 << 20, 64 << 20, 256 << 20]
 P_DEVICES = 16
+NONPOW2_P = [3, 6, 12, 24]
+
+
+def analytic_nonpow2_rows():
+    """RHD vs ring over non-pow2 device counts (the 6-/12-/24-way
+    shapes the paper characterizes): step/byte truth plus model latency
+    at a latency-bound (1KB) and a bandwidth-bound (16MB) size."""
+    rows = []
+    for p in NONPOW2_P:
+        for n in (1024, 16 << 20):
+            rows.append({
+                "p": p,
+                "bytes": n,
+                "rhd_steps": allreduce_steps("rhd_rsa", p),
+                "ring_steps": allreduce_steps("ring_rsa", p),
+                "rhd_wire_bytes": wire_bytes("rhd_rsa", n, p),
+                "ring_wire_bytes": wire_bytes("ring_rsa", n, p),
+                "rhd_us": cm.allreduce_latency("rhd_rsa", n, p) * 1e6,
+                "ring_us": cm.allreduce_latency("ring_rsa", n, p) * 1e6,
+            })
+    return rows
 
 
 def analytic_rows():
@@ -45,41 +72,49 @@ def analytic_rows():
 
 _MEASURE_SNIPPET = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
 import sys, time, json
 sys.path.insert(0, {src!r})
-import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import reducers
+from repro.core.compat import shard_map
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+devs = jax.devices()
 out = []
-for n_bytes in {sizes!r}:
-    n = max(n_bytes // 4, 1)
-    x = jnp.ones((8 * n,), jnp.float32)
-    row = {{"bytes": n_bytes}}
-    for strat in ["psum", "ring_rsa", "rhd_rsa", "ps_gather"]:
-        fn = jax.jit(jax.shard_map(
-            lambda xl: reducers.allreduce(xl, ("data",), strat),
-            mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-            axis_names={{"data"}}, check_vma=False))
-        r = fn(x); r.block_until_ready()
-        reps = 20 if n_bytes < (1 << 20) else 5
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            r = fn(x)
-        r.block_until_ready()
-        row[strat + "_us"] = (time.perf_counter() - t0) / reps * 1e6
-    out.append(row)
+for p in {device_counts!r}:
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    for n_bytes in {sizes!r}:
+        n = max(n_bytes // 4, 1)
+        x = jnp.ones((p * n,), jnp.float32)
+        row = {{"p": p, "bytes": n_bytes}}
+        for strat in ["psum", "ring_rsa", "rhd_rsa", "ps_gather"]:
+            fn = jax.jit(shard_map(
+                lambda xl: reducers.allreduce(xl, ("data",), strat),
+                mesh, in_specs=P("data"), out_specs=P("data"),
+                axis_names={{"data"}}, check_vma=False))
+            r = fn(x); r.block_until_ready()
+            reps = 20 if n_bytes < (1 << 20) else 5
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r = fn(x)
+            r.block_until_ready()
+            row[strat + "_us"] = (time.perf_counter() - t0) / reps * 1e6
+        out.append(row)
 print(json.dumps(out))
 """
 
 
-def measured_rows(sizes=None):
+def measured_rows(sizes=None, device_counts=(8,)):
+    """Wall-clock the real reducers on XLA host submeshes of the first
+    ``p`` devices for each ``p`` in ``device_counts`` (non-pow2 welcome:
+    the RHD pre/post fold runs for p=3/6/12)."""
     sizes = sizes or [8, 64 * 1024, 1 << 20, 16 << 20]
+    ndev = max(device_counts)
     src = os.path.join(os.path.dirname(__file__), "..", "src")
-    code = _MEASURE_SNIPPET.format(src=os.path.abspath(src), sizes=sizes)
+    code = _MEASURE_SNIPPET.format(src=os.path.abspath(src), sizes=sizes,
+                                   ndev=ndev,
+                                   device_counts=list(device_counts))
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", code],
@@ -104,12 +139,22 @@ def run(csv=True, measure=True):
                      f"{r['NCCL2_us']:.2f},bytes={r['bytes']}")
         lines.append(f"allreduce_micro.analytic.PS,"
                      f"{r['PS_us']:.2f},bytes={r['bytes']}")
+    for r in analytic_nonpow2_rows():
+        lines.append(
+            f"allreduce_micro.nonpow2.rhd,{r['rhd_us']:.2f},"
+            f"p={r['p']} bytes={r['bytes']} steps={r['rhd_steps']} "
+            f"wire={r['rhd_wire_bytes']}")
+        lines.append(
+            f"allreduce_micro.nonpow2.ring,{r['ring_us']:.2f},"
+            f"p={r['p']} bytes={r['bytes']} steps={r['ring_steps']} "
+            f"wire={r['ring_wire_bytes']}")
     if measure:
-        for r in measured_rows():
+        for r in measured_rows(device_counts=(3, 6, 8, 12)):
             for k, v in r.items():
                 if k.endswith("_us"):
                     lines.append(f"allreduce_micro.measured.{k[:-3]},"
-                                 f"{v:.1f},bytes={r['bytes']} host-cpu")
+                                 f"{v:.1f},p={r['p']} bytes={r['bytes']}"
+                                 f" host-cpu")
     return lines
 
 

@@ -23,12 +23,12 @@ sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import AggregatorConfig, GradientAggregator
+from repro.core.compat import make_mesh, shard_map
 from repro.models import cnn
 from repro.data import SyntheticImages
 
 IMG, BATCH = 32, 16     # global batch over 8 data shards
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 spec = cnn.CnnSpec("resnet50", image_size=IMG)
 params = cnn.mobilenet_params(jax.random.PRNGKey(0)) if False else \
     cnn.resnet50_params(jax.random.PRNGKey(0))
@@ -47,8 +47,8 @@ for strategy in ["psum", "ring_rsa", "rhd_rsa", "ps_gather"]:
         return p, jax.lax.pmean(loss, "data")
 
     bspec = {{"images": P("data", None, None, None), "labels": P("data")}}
-    step = jax.jit(jax.shard_map(
-        local_step, mesh=mesh, in_specs=(P(), bspec),
+    step = jax.jit(shard_map(
+        local_step, mesh, in_specs=(P(), bspec),
         out_specs=(P(), P()), axis_names={{"data"}}, check_vma=False))
     p = params
     b = data.batch_at(0)

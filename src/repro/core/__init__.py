@@ -3,10 +3,10 @@ allreduce algorithms, tensor fusion, and the plan (pointer) cache."""
 from .aggregator import AggregatorConfig, GradientAggregator
 from .fusion import FusionPlan, build_plan
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
-from .reducers import STRATEGIES, allreduce, wire_bytes
+from .reducers import STRATEGIES, allreduce, allreduce_steps, wire_bytes
 
 __all__ = [
     "AggregatorConfig", "GradientAggregator", "FusionPlan", "build_plan",
     "GLOBAL_PLAN_CACHE", "PlanCache", "STRATEGIES", "allreduce",
-    "wire_bytes",
+    "allreduce_steps", "wire_bytes",
 ]

@@ -23,7 +23,8 @@ from typing import Hashable, Sequence
 import jax
 import jax.numpy as jnp
 
-from . import reducers
+from . import compat, reducers
+from .compat import axis_size
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 
 
@@ -97,7 +98,7 @@ class GradientAggregator:
 
         dp_size = 1
         for ax in self.dp_axes:
-            dp_size *= jax.lax.axis_size(ax)
+            dp_size *= axis_size(ax)
         scale = 1.0 / dp_size
 
         accum = jnp.dtype(cfg.accum_dtype)
@@ -127,5 +128,5 @@ class GradientAggregator:
     def mean_scalar(self, x):
         dp_size = 1
         for ax in self.dp_axes:
-            dp_size *= jax.lax.axis_size(ax)
-        return jax.lax.psum(x, self.dp_axes) / dp_size
+            dp_size *= axis_size(ax)
+        return compat.psum(x, self.dp_axes) / dp_size

@@ -17,7 +17,7 @@ import dataclasses
 import math
 
 from . import hw
-from .reducers import STRATEGIES
+from .reducers import STRATEGIES, allreduce_steps, wire_bytes, _pow2_core
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,8 +65,17 @@ def allreduce_latency(strategy: str, n_bytes: float, p: int,
         # 2(p-1) steps of N/p bytes; reduce touches N(p-1)/p bytes.
         return 2 * (p - 1) * a + 2 * n_bytes * frac * b + n_bytes * frac * gamma
     if strategy == "rhd_rsa":
-        steps = 2 * math.ceil(math.log2(p))
-        return steps * a + 2 * n_bytes * frac * b + n_bytes * frac * gamma
+        # Pow2 core of 2·log2(core) steps moving 2N(core-1)/core bytes;
+        # non-pow2 p adds MVAPICH2's pre/post fold: +2 steps, +2N wire
+        # bytes on the busiest (core-partner) rank, +N reduced bytes for
+        # the fold-in add.  Step/byte truth lives in reducers
+        # (allreduce_steps / wire_bytes); only gamma is derived here.
+        core = _pow2_core(p)
+        frac_core = (core - 1) / core
+        extra_reduce = 0 if core == p else n_bytes
+        return allreduce_steps("rhd_rsa", p) * a \
+            + wire_bytes("rhd_rsa", int(n_bytes), p) * b \
+            + (n_bytes * frac_core + extra_reduce) * gamma
     if strategy == "psum":
         # Vendor library: assume it picks the better of tree (latency) and
         # ring (bandwidth) like NCCL — but with a higher fixed software

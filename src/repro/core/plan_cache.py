@@ -48,6 +48,8 @@ class PlanCache:
     def __init__(self):
         self._plans: dict[Hashable, fusion.FusionPlan] = {}
         self._lock = threading.Lock()
+        self._build_locks: dict[Hashable, threading.Lock] = {}
+        self._generation = 0
         self.stats = CacheStats()
 
     @staticmethod
@@ -64,21 +66,57 @@ class PlanCache:
     def get_or_build(self, tree, threshold_bytes: int, groups=None,
                      fuse: bool = True) -> fusion.FusionPlan:
         key = self.key_for(tree, threshold_bytes, groups, fuse)
-        with self._lock:
-            plan = self._plans.get(key)
-            if plan is not None:
-                self.stats.hits += 1
-                return plan
-            self.stats.misses += 1
-        plan = fusion.build_plan(tree, threshold_bytes, groups=groups,
-                                 fuse=fuse)
-        with self._lock:
-            self._plans[key] = plan
-        return plan
+        while True:
+            with self._lock:
+                plan = self._plans.get(key)
+                if plan is not None:
+                    self.stats.hits += 1
+                    return plan
+                # Per-key build guard: concurrent missers serialize on
+                # the key, the loser re-checks and records a HIT (the
+                # plan was built once — stats must reflect cache
+                # behaviour, not thread scheduling).
+                build_lock = self._build_locks.setdefault(
+                    key, threading.Lock())
+            with build_lock:
+                with self._lock:
+                    if self._build_locks.get(key) is not build_lock:
+                        # The builder we waited on retired this lock
+                        # (stored the plan, skipped a post-clear store,
+                        # or raised); start over against current state.
+                        continue
+                    plan = self._plans.get(key)
+                    if plan is not None:
+                        self.stats.hits += 1
+                        return plan
+                    # Snapshot after the lock is held so only a clear()
+                    # DURING the build voids the store below.
+                    generation = self._generation
+                try:
+                    plan = fusion.build_plan(tree, threshold_bytes,
+                                             groups=groups, fuse=fuse)
+                    with self._lock:
+                        # A clear() while we were building invalidated
+                        # the cache: hand the plan to our caller but
+                        # leave the fresh cache and stats untouched.
+                        if self._generation == generation:
+                            self._plans[key] = plan
+                            self.stats.misses += 1
+                finally:
+                    # Retire the lock before releasing it so every
+                    # waiter retries instead of building a duplicate.
+                    with self._lock:
+                        if self._build_locks.get(key) is build_lock:
+                            del self._build_locks[key]
+            return plan
 
     def clear(self):
         with self._lock:
             self._plans.clear()
+            # _build_locks is left alone: an in-flight builder still
+            # holds its per-key lock, and a post-clear misser must
+            # serialize on that same lock object (its finally pops it).
+            self._generation += 1
             self.stats = CacheStats()
 
     def __len__(self):

@@ -17,29 +17,35 @@ Algorithms
 ``psum``          XLA-chosen allreduce (vendor-library baseline; NCCL2 analogue)
 ``ring_rsa``      ring reduce-scatter + ring allgather (Baidu / NCCL ring)
 ``rhd_rsa``       recursive vector halving/doubling RSA — the paper's
-                  proposed MVAPICH2-GDR design (latency-optimal: 2·log2 p steps)
+                  proposed MVAPICH2-GDR design (latency-optimal: 2·log2 p
+                  steps for power-of-two p; non-pow2 p adds the MVAPICH2
+                  pre/post fold, +2 steps and +2·N wire bytes)
 ``ps_gather``     all-gather + local reduce (parameter-server analogue;
                   ingress is p·N bytes — the PS bottleneck the paper measures)
 ``hierarchical``  ring reduce-scatter over the intra-pod axis, RHD allreduce
                   over the pod axis, ring allgather back (beyond-paper
-                  two-level design for the multi-pod mesh)
+                  two-level design for the multi-pod mesh; the pod axis may
+                  be any size — 3-, 6-, 12-pod meshes use the non-pow2 path)
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import compat
+from .compat import all_gather, axis_index, axis_size, ppermute
+
 Axis = str
 
 STRATEGIES = ("psum", "ring_rsa", "rhd_rsa", "ps_gather", "hierarchical")
 
 
-def _is_pow2(n: int) -> bool:
-    return n > 0 and (n & (n - 1)) == 0
+def _pow2_core(p: int) -> int:
+    """Largest power of two <= p: the size of the RHD core group."""
+    return 1 << (p.bit_length() - 1)
 
 
 def _pad_leading(x: jax.Array, multiple: int):
@@ -60,7 +66,7 @@ def _ring_perm(p: int):
 # ---------------------------------------------------------------------------
 
 def psum(x: jax.Array, axis: Axis) -> jax.Array:
-    return lax.psum(x, axis)
+    return compat.psum(x, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -74,18 +80,18 @@ def ring_reduce_scatter(x: jax.Array, axis: Axis):
     reduced 1/p-th of the (padded) input: device ``i`` owns chunk
     ``(i + 1) % p``.  p-1 steps, each moving N/p bytes.
     """
-    p = lax.axis_size(axis)
+    p = axis_size(axis)
     x, n = _pad_leading(x, p)
     if p == 1:
         return x, n
     chunks = x.reshape(p, -1, *x.shape[1:])
-    idx = lax.axis_index(axis)
+    idx = axis_index(axis)
     perm = _ring_perm(p)
     # Start with our own chunk `idx`; after step s we hold the partial sum
     # of chunk (idx - s) over devices {idx-s, ..., idx}.
     buf = jnp.take(chunks, idx, axis=0, mode="wrap")
     for s in range(1, p):
-        buf = lax.ppermute(buf, axis, perm)
+        buf = ppermute(buf, axis, perm)
         buf = buf + jnp.take(chunks, (idx - s) % p, axis=0, mode="wrap")
     return buf, n
 
@@ -94,10 +100,10 @@ def ring_all_gather(chunk: jax.Array, axis: Axis, orig_len: int):
     """Inverse of ``ring_reduce_scatter``: ring allgather of per-device
     chunks (device ``i`` holding chunk ``(i+1) % p``) back to the full
     leading dim, truncated to ``orig_len``."""
-    p = lax.axis_size(axis)
+    p = axis_size(axis)
     if p == 1:
         return chunk[:orig_len]
-    idx = lax.axis_index(axis)
+    idx = axis_index(axis)
     perm = _ring_perm(p)
     out = jnp.zeros((p,) + chunk.shape, chunk.dtype)
     cur = chunk
@@ -107,7 +113,7 @@ def ring_all_gather(chunk: jax.Array, axis: Axis, orig_len: int):
         out = lax.dynamic_update_slice_in_dim(
             out, cur[None], (idx - s + 1) % p, axis=0)
         if s != p - 1:
-            cur = lax.ppermute(cur, axis, perm)
+            cur = ppermute(cur, axis, perm)
     out = out.reshape(p * chunk.shape[0], *chunk.shape[1:])
     return out[:orig_len]
 
@@ -126,47 +132,72 @@ def ring_rsa(x: jax.Array, axis: Axis) -> jax.Array:
 def rhd_rsa(x: jax.Array, axis: Axis) -> jax.Array:
     """Recursive vector halving & doubling reduce-scatter/allgather
     (Thakur et al. [41]; the algorithm behind the paper's MVAPICH2-GDR
-    MPI_Allreduce). 2·log2(p) steps, 2N(p-1)/p bytes — latency-optimal.
+    MPI_Allreduce). 2·log2(p) steps, 2N(p-1)/p bytes — latency-optimal
+    for power-of-two p.
 
-    Requires a power-of-two axis size (falls back to ``ring_rsa``
-    otherwise, mirroring MVAPICH2's non-pow2 pre/post handling which we
-    do not reimplement — deviation D2 in DESIGN.md).
+    Non-power-of-two p uses MVAPICH2's pre/post handling: with
+    ``core = 2^⌊log2 p⌋`` and ``r = p - core`` excess ranks, excess rank
+    ``core + j`` folds its buffer into core rank ``j`` (pre-processing,
+    +1 step, +N bytes), the core runs the pow2 RHD schedule, and core
+    rank ``j`` broadcasts the result back to rank ``core + j``
+    (post-processing, +1 step, +N bytes).  All phases are static
+    ``ppermute`` schedules, so the compiled HLO is exactly this
+    communication pattern — no silent ``ring_rsa`` fallback (deviation
+    D2 in DESIGN.md is removed).
     """
-    p = lax.axis_size(axis)
+    p = axis_size(axis)
     if p == 1:
         return x
-    if not _is_pow2(p):
-        return ring_rsa(x, axis)
-    x, n = _pad_leading(x, p)
-    idx = lax.axis_index(axis)
+    core = _pow2_core(p)
+    r = p - core
+    x, n = _pad_leading(x, core)
+    idx = axis_index(axis)
 
-    # Reduce-scatter by recursive halving: exchange with partner idx^mask,
-    # mask = p/2, p/4, ..., 1. Bit clear -> keep lower half, send upper.
+    if r:
+        # Pre-processing fold: excess rank core+j ships its whole buffer
+        # to core rank j.  Non-targets of a ppermute receive zeros, so a
+        # single add applies the fold only where it landed.
+        pre = [(core + j, j) for j in range(r)]
+        x = x + ppermute(x, axis, pre)
+
+    # Reduce-scatter by recursive halving over the core: exchange with
+    # partner idx^mask, mask = core/2, ..., 1. Bit clear -> keep lower
+    # half, send upper.  Excess ranks take no part (their perms exclude
+    # them; they receive zeros and their buffer halves along harmlessly —
+    # the post broadcast overwrites whatever they hold).
     buf = x
-    mask = p // 2
+    mask = core // 2
     while mask >= 1:
-        perm = [(i, i ^ mask) for i in range(p)]
+        perm = [(i, i ^ mask) for i in range(core)]
         half = buf.shape[0] // 2
         lower, upper = buf[:half], buf[half:]
         bit = (idx & mask) != 0
         send = jnp.where(bit, lower, upper)
         keep = jnp.where(bit, upper, lower)
-        recv = lax.ppermute(send, axis, perm)
+        recv = ppermute(send, axis, perm)
         buf = keep + recv
         mask //= 2
-    # Device idx now owns the fully reduced chunk at offset idx * (N/p).
+    # Core device idx now owns the fully reduced chunk at offset
+    # idx * (N/core).
 
     # Allgather by recursive doubling, reversing the halving order.
     mask = 1
-    while mask < p:
-        perm = [(i, i ^ mask) for i in range(p)]
-        recv = lax.ppermute(buf, axis, perm)
+    while mask < core:
+        perm = [(i, i ^ mask) for i in range(core)]
+        recv = ppermute(buf, axis, perm)
         bit = (idx & mask) != 0
         # If our bit is set we hold the upper adjacent block.
         buf = jnp.where(bit,
                         jnp.concatenate([recv, buf], axis=0),
                         jnp.concatenate([buf, recv], axis=0))
         mask *= 2
+
+    if r:
+        # Post-processing broadcast: core rank j returns the full result
+        # to excess rank core+j, which replaces its (garbage) buffer.
+        post = [(j, core + j) for j in range(r)]
+        recv = ppermute(buf, axis, post)
+        buf = jnp.where(idx >= core, recv, buf)
     return buf[:n]
 
 
@@ -179,7 +210,7 @@ def ps_gather(x: jax.Array, axis: Axis) -> jax.Array:
     gradient (all-gather, p·N ingress bytes per device) and the reduction
     happens centrally. Reproduces *why* the paper's gRPC PS baseline loses
     at scale; the cost model charges the PS ingress bottleneck."""
-    gathered = lax.all_gather(x, axis)          # (p, ...)
+    gathered = all_gather(x, axis)          # (p, ...)
     return jnp.sum(gathered, axis=0)
 
 
@@ -192,7 +223,9 @@ def hierarchical(x: jax.Array, data_axis: Axis, pod_axis: Axis) -> jax.Array:
     inside the pod (cheap ICI), RHD allreduce of the 1/d-sized shard across
     pods (expensive cross-pod links carry only N/d bytes instead of N),
     ring allgather back inside the pod.  Analogue of the paper's
-    intra-node(NVLink)/inter-node(IB) hierarchy."""
+    intra-node(NVLink)/inter-node(IB) hierarchy.  The pod axis may be
+    any size: non-pow2 pod counts route through ``rhd_rsa``'s
+    MVAPICH2-style pre/post fold rather than silently degrading."""
     chunk, n = ring_reduce_scatter(x, data_axis)
     chunk = rhd_rsa(chunk, pod_axis)
     return ring_all_gather(chunk, data_axis, n)
@@ -230,14 +263,45 @@ def allreduce(x: jax.Array, axes: Sequence[Axis], strategy: str) -> jax.Array:
 
 
 def wire_bytes(strategy: str, n_bytes: int, p: int) -> int:
-    """Algorithmic wire bytes per device for a single-axis allreduce of
-    ``n_bytes`` over ``p`` devices (used by the cost model and tests)."""
+    """Algorithmic wire bytes per device (critical path) for a
+    single-axis allreduce of ``n_bytes`` over ``p`` devices (used by the
+    cost model and tests).
+
+    For non-pow2 ``rhd_rsa`` the busiest device is a core rank paired
+    with an excess rank: it receives the N-byte pre-fold, runs the pow2
+    core schedule on ``core = 2^⌊log2 p⌋`` ranks, and sends the N-byte
+    post broadcast — the MVAPICH2 +2·N pre/post overhead.
+    """
     if p == 1:
         return 0
-    if strategy in ("ring_rsa", "rhd_rsa", "psum"):
+    if strategy == "rhd_rsa":
+        core = _pow2_core(p)
+        extra = 0 if core == p else 2 * n_bytes
+        return int(2 * n_bytes * (core - 1) / core) + extra
+    if strategy in ("ring_rsa", "psum"):
         return int(2 * n_bytes * (p - 1) / p)
     if strategy == "ps_gather":
-        return int(n_bytes * (p - 1)) + n_bytes * 0  # recv-dominated
+        return int(n_bytes * (p - 1))  # recv-dominated
+    if strategy == "hierarchical":
+        raise ValueError("hierarchical is multi-axis; use cost_model")
+    raise ValueError(strategy)
+
+
+def allreduce_steps(strategy: str, p: int) -> int:
+    """Number of sequential communication steps (alpha terms) on the
+    critical path of a single-axis allreduce over ``p`` devices."""
+    if p == 1:
+        return 0
+    if strategy == "rhd_rsa":
+        core = _pow2_core(p)
+        pre_post = 0 if core == p else 2
+        return 2 * core.bit_length() - 2 + pre_post  # 2*log2(core) (+2)
+    if strategy == "ring_rsa":
+        return 2 * (p - 1)
+    if strategy == "ps_gather":
+        return 2                          # push all, pull all
+    if strategy == "psum":
+        raise ValueError("psum steps are vendor-chosen; use cost_model")
     if strategy == "hierarchical":
         raise ValueError("hierarchical is multi-axis; use cost_model")
     raise ValueError(strategy)

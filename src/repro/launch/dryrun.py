@@ -85,6 +85,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             spec_overrides=None) -> dict:
     import jax
     from repro.configs import SHAPES, get_spec, shape_supported
+    from repro.core.compat import use_mesh
     from repro.launch import roofline as rl
     from repro.launch.mesh import make_production_mesh
 
@@ -101,67 +102,70 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jax.set_mesh(mesh)   # context mesh for P-spec sharding constraints
     chips = 512 if multi_pod else 256
     t0 = time.perf_counter()
     try:
-        step, args = _build_step(arch, shape_name, mesh, strategy,
-                                 fusion_mb, sharding_aware, remat=remat,
-                                 wire_dtype=wire_dtype,
-                                 spec_overrides=spec_overrides)
-        lowered = step.lower(*args)
-        t_lower = time.perf_counter() - t0
-        compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0 - t_lower
+        # context mesh so bare-P sharding constraints resolve
+        with use_mesh(mesh):
+            step, args = _build_step(arch, shape_name, mesh, strategy,
+                                     fusion_mb, sharding_aware, remat=remat,
+                                     wire_dtype=wire_dtype,
+                                     spec_overrides=spec_overrides)
+            lowered = step.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
 
-        mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        hlo = compiled.as_text()
-        from repro.launch import hlo_analysis as ha
-        agg = ha.analyze(hlo)
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # old jax: per-device list
+                cost = cost[0] if cost else {}
+            hlo = compiled.as_text()
+            from repro.launch import hlo_analysis as ha
+            agg = ha.analyze(hlo)
 
-        params_struct = args[0]
-        n_params = sum(
-            int(np_leaf.size) if hasattr(np_leaf, "size") else 0
-            for np_leaf in jax.tree_util.tree_leaves(params_struct))
-        mf = rl.model_flops(spec, SHAPES[shape_name], float(n_params))
-        roof = rl.compute_roofline_from_aggregate(
-            agg, chips, model_flops=mf)
-        coll = rl.CollectiveStats(
-            {k: int(v) for k, v in agg.collective_counts.items()},
-            {k: int(v) for k, v in agg.collective_bytes.items()},
-            int(agg.total_collective_bytes))
+            params_struct = args[0]
+            n_params = sum(
+                int(np_leaf.size) if hasattr(np_leaf, "size") else 0
+                for np_leaf in jax.tree_util.tree_leaves(params_struct))
+            mf = rl.model_flops(spec, SHAPES[shape_name], float(n_params))
+            roof = rl.compute_roofline_from_aggregate(
+                agg, chips, model_flops=mf)
+            coll = rl.CollectiveStats(
+                {k: int(v) for k, v in agg.collective_counts.items()},
+                {k: int(v) for k, v in agg.collective_bytes.items()},
+                int(agg.total_collective_bytes))
 
-        mem_rec = {}
-        if mem is not None:
-            for k in ("argument_size_in_bytes", "output_size_in_bytes",
-                      "temp_size_in_bytes", "generated_code_size_in_bytes",
-                      "alias_size_in_bytes"):
-                v = getattr(mem, k, None)
-                if v is not None:
-                    mem_rec[k] = int(v)
-        rec.update(
-            status="OK",
-            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
-            n_params=n_params,
-            cost={k: float(v) for k, v in (cost or {}).items()
-                  if isinstance(v, (int, float))},
-            memory=mem_rec,
-            collectives=coll.to_dict(),
-            roofline=roof.to_dict(),
-        )
-        if verbose:
-            print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
-                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
-            print(f"  memory_analysis: {mem_rec}")
-            print(f"  cost_analysis: flops={rec['cost'].get('flops', 0):.3e}"
-                  f" bytes={rec['cost'].get('bytes accessed', 0):.3e}")
-            print(f"  collectives: {coll.counts} "
-                  f"total={coll.total_bytes/2**20:.1f} MiB")
-            print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
-                  f"memory={roof.memory_s*1e3:.2f}ms "
-                  f"collective={roof.collective_s*1e3:.2f}ms "
-                  f"dominant={roof.dominant}")
+            mem_rec = {}
+            if mem is not None:
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                    v = getattr(mem, k, None)
+                    if v is not None:
+                        mem_rec[k] = int(v)
+            rec.update(
+                status="OK",
+                lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+                n_params=n_params,
+                cost={k: float(v) for k, v in (cost or {}).items()
+                      if isinstance(v, (int, float))},
+                memory=mem_rec,
+                collectives=coll.to_dict(),
+                roofline=roof.to_dict(),
+            )
+            if verbose:
+                print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
+                      f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+                print(f"  memory_analysis: {mem_rec}")
+                print(f"  cost_analysis: flops={rec['cost'].get('flops', 0):.3e}"
+                      f" bytes={rec['cost'].get('bytes accessed', 0):.3e}")
+                print(f"  collectives: {coll.counts} "
+                      f"total={coll.total_bytes/2**20:.1f} MiB")
+                print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+                      f"memory={roof.memory_s*1e3:.2f}ms "
+                      f"collective={roof.collective_s*1e3:.2f}ms "
+                      f"dominant={roof.dominant}")
     except Exception as e:  # noqa: BLE001 — recorded, not swallowed
         rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])

@@ -6,7 +6,7 @@ jax init).
 """
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,18 +14,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2, pods: int = 0):
     """Small mesh over host devices for tests/examples."""
     if pods:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pods, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes_of(mesh) -> tuple:

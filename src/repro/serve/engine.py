@@ -28,14 +28,21 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, model: ModelApi, params, mesh, dp_axes=(),
-                 cfg: ServeConfig = ServeConfig()):
+                 cfg: Optional[ServeConfig] = None):
         self.model = model
         self.params = params
         self.mesh = mesh
         self.dp_axes = tuple(dp_axes)
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else ServeConfig()
+        self._prefill = None
+        self._prefill_key = None
         self._decode = None
         self._decode_key = None
+
+    @staticmethod
+    def _batch_key(batch: dict):
+        return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                            for k, v in batch.items()))
 
     def generate(self, batch: dict, rng=None) -> np.ndarray:
         """batch: {"tokens": (B, S_prompt)} (+frames for audio).
@@ -43,9 +50,13 @@ class ServeEngine:
         cfg = self.cfg
         tokens = batch["tokens"]
         b = tokens.shape[0]
-        prefill = make_prefill_step(self.model, self.mesh, self.dp_axes,
-                                    batch, cfg.max_seq)
-        logits, cache = prefill(self.params, batch)
+
+        pkey = (self._batch_key(batch), cfg.max_seq)
+        if self._prefill_key != pkey:
+            self._prefill = make_prefill_step(
+                self.model, self.mesh, self.dp_axes, batch, cfg.max_seq)
+            self._prefill_key = pkey
+        logits, cache = self._prefill(self.params, batch)
 
         key = (b, cfg.max_seq)
         if self._decode_key != key:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import AggregatorConfig, GradientAggregator
+from repro.core.compat import shard_map
 from repro.data.synthetic import batch_pspecs
 from repro.models import ModelApi, param_groups, param_pspecs
 from repro.optim import Optimizer, clip_by_global_norm
@@ -67,8 +68,8 @@ def make_train_step(model: ModelApi, optimizer: Optimizer,
         return params, opt_state, metrics
 
     bspecs = batch_pspecs(batch_example, dp_axes)
-    smapped = jax.shard_map(
-        local_step, mesh=mesh,
+    smapped = shard_map(
+        local_step, mesh,
         in_specs=(P(), P(), bspecs),
         out_specs=(P(), P(), P()),
         axis_names=set(dp_axes),

@@ -16,11 +16,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import AggregatorConfig, GradientAggregator
 from repro.core import reducers
+from repro.core.compat import make_mesh, shard_map
 
 
 def mesh2d():
-    return jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((2, 4), ("pod", "data"))
 
 
 def check_reducers():
@@ -36,10 +36,10 @@ def check_reducers():
                 def f(xl):
                     return reducers.allreduce(xl, ("pod", "data"), strategy)
 
-                sm = jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
-                                   out_specs=P(("pod", "data")),
-                                   axis_names={"pod", "data"},
-                                   check_vma=False)
+                sm = shard_map(f, mesh, in_specs=P(("pod", "data")),
+                               out_specs=P(("pod", "data")),
+                               axis_names={"pod", "data"},
+                               check_vma=False)
                 out = jax.jit(sm)(
                     x.reshape((8 * shape[0],) + shape[1:]))
                 out = np.asarray(out.astype(jnp.float32)) \
@@ -66,10 +66,10 @@ def check_aggregator():
         agg = GradientAggregator(
             AggregatorConfig(strategy=strategy, fusion_threshold_mb=0.001),
             ("pod", "data"))
-        sm = jax.shard_map(lambda g: agg(g, groups=groups), mesh=mesh,
-                           in_specs=P(("pod", "data")),
-                           out_specs=P(("pod", "data")),
-                           axis_names={"pod", "data"}, check_vma=False)
+        sm = shard_map(lambda g: agg(g, groups=groups), mesh,
+                       in_specs=P(("pod", "data")),
+                       out_specs=P(("pod", "data")),
+                       axis_names={"pod", "data"}, check_vma=False)
         out = jax.jit(sm)(grads)
         for k_, v in grads.items():
             got = np.asarray(out[k_].astype(jnp.float32)) \
@@ -91,8 +91,7 @@ def check_train_loss_decreases():
     from repro.optim import adamw
     from repro.train import TrainStepConfig, make_train_step
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     spec = get_spec("smollm-360m").reduced()
     model = build_model(spec)
     data = SyntheticText(spec.vocab_size, batch=8, seq_len=32)
@@ -123,8 +122,7 @@ def check_strategy_equivalence():
     from repro.optim import sgd
     from repro.train import TrainStepConfig, make_train_step
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     spec = get_spec("smollm-360m").reduced()
     model = build_model(spec)
     data = SyntheticText(spec.vocab_size, batch=8, seq_len=16)

@@ -1,0 +1,108 @@
+"""Non-power-of-two RHD allreduce checks (deviation D2 removed), run as
+a SUBPROCESS by test_reducers_multidev.py with 12 host devices.
+
+Asserts, for p ∈ {3, 4, 6, 8, 12} submeshes:
+  * ``rhd_rsa`` agrees BIT-EXACTLY with ``psum`` on integer-valued
+    float32 data (any summation order is exact, so equality is the
+    bar — no tolerance hides a wrong schedule);
+  * the compiled HLO of the non-pow2 path contains collective-permutes
+    and NO all-reduce (i.e. it is our schedule, not a silent psum or
+    ring fallback would show 2(p-1) steps — we check the permute count
+    matches the RHD step count);
+  * ``hierarchical`` with a non-pow2 POD axis (3 pods × 4 data) matches
+    psum over both axes.
+Exit code 0 = all checks passed."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import reducers
+from repro.core.compat import shard_map
+
+
+def check_rhd_bitexact_vs_psum():
+    devs = jax.devices()
+    for p in (3, 4, 6, 8, 12):
+        mesh = Mesh(np.array(devs[:p]), ("data",))
+        for shape in [(37,), (5, 3), (64,), (1,)]:
+            n0 = shape[0]
+            # integer-valued float32: every partial sum is exactly
+            # representable, so psum and rhd must agree to the bit.
+            x = jnp.arange(p * int(np.prod(shape)), dtype=jnp.float32) \
+                .reshape((p * n0,) + shape[1:])
+
+            def rhd(xl):
+                return reducers.rhd_rsa(xl, "data")
+
+            def ref(xl):
+                return reducers.psum(xl, "data")
+
+            got = jax.jit(shard_map(rhd, mesh, in_specs=P("data"),
+                                    out_specs=P("data")))(x)
+            want = jax.jit(shard_map(ref, mesh, in_specs=P("data"),
+                                     out_specs=P("data")))(x)
+            assert (np.asarray(got) == np.asarray(want)).all(), \
+                f"rhd_rsa != psum bit-exactly at p={p} shape={shape}"
+    print("rhd bit-exact vs psum ok")
+
+
+def check_rhd_hlo_is_our_schedule():
+    """The non-pow2 path must compile to our static ppermute schedule:
+    no all-reduce op (that would be a psum fallback), and at least the
+    RHD step count of collective-permutes (a ring fallback at p=12
+    would need 22 steps; RHD needs 8)."""
+    devs = jax.devices()
+    for p in (3, 6, 12):
+        mesh = Mesh(np.array(devs[:p]), ("data",))
+        x = jnp.ones((p * 16,), jnp.float32)
+        txt = jax.jit(shard_map(
+            lambda xl: reducers.rhd_rsa(xl, "data"), mesh,
+            in_specs=P("data"), out_specs=P("data"))) \
+            .lower(x).compile().as_text()
+        assert "all-reduce" not in txt, \
+            f"p={p}: rhd_rsa lowered to an XLA all-reduce (fallback?)"
+        n_perm = txt.count("collective-permute(")
+        steps = reducers.allreduce_steps("rhd_rsa", p)
+        ring_steps = reducers.allreduce_steps("ring_rsa", p)
+        assert n_perm >= steps, (p, n_perm, steps)
+        if ring_steps > steps:   # p=3 has rhd==ring==4 steps
+            assert n_perm < ring_steps, \
+                f"p={p}: {n_perm} permutes looks like the ring " \
+                f"schedule ({ring_steps}), not RHD ({steps})"
+    print("rhd hlo schedule ok")
+
+
+def check_hierarchical_nonpow2_pods():
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(3, 4), ("pod", "data"))
+    x = jnp.arange(12 * 10, dtype=jnp.float32).reshape(120)
+
+    def hier(xl):
+        return reducers.allreduce(xl, ("pod", "data"), "hierarchical")
+
+    def ref(xl):
+        return reducers.psum(xl, ("pod", "data"))
+
+    got = jax.jit(shard_map(hier, mesh, in_specs=P(("pod", "data")),
+                            out_specs=P(("pod", "data"))))(x)
+    want = jax.jit(shard_map(ref, mesh, in_specs=P(("pod", "data")),
+                             out_specs=P(("pod", "data"))))(x)
+    assert (np.asarray(got) == np.asarray(want)).all(), \
+        "hierarchical over a 3-pod axis disagrees with psum"
+    print("hierarchical non-pow2 pods ok")
+
+
+if __name__ == "__main__":
+    check_rhd_bitexact_vs_psum()
+    check_rhd_hlo_is_our_schedule()
+    check_hierarchical_nonpow2_pods()
+    print("ALL NONPOW2 CHECKS PASSED")

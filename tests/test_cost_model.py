@@ -3,6 +3,7 @@ import pytest
 
 from repro.core import cost_model as cm
 from repro.core import wire_bytes
+from repro.core.reducers import allreduce_steps
 
 
 def test_wire_bytes_ring_equals_rhd():
@@ -10,6 +11,36 @@ def test_wire_bytes_ring_equals_rhd():
     for p in (2, 4, 16):
         assert wire_bytes("ring_rsa", 1 << 20, p) == \
             wire_bytes("rhd_rsa", 1 << 20, p)
+
+
+def test_rhd_nonpow2_wire_bytes_add_pre_post():
+    """Non-pow2 RHD = pow2-core bytes + the MVAPICH2 2·N pre/post fold."""
+    n = 1 << 20
+    for p, core in ((3, 2), (6, 4), (12, 8), (24, 16)):
+        assert wire_bytes("rhd_rsa", n, p) == \
+            wire_bytes("rhd_rsa", n, core) + 2 * n
+
+
+def test_rhd_steps_pow2_and_nonpow2():
+    assert allreduce_steps("rhd_rsa", 2) == 2
+    assert allreduce_steps("rhd_rsa", 8) == 6        # 2·log2(8)
+    assert allreduce_steps("rhd_rsa", 16) == 8
+    # non-pow2: 2·log2(core) + 2 pre/post
+    assert allreduce_steps("rhd_rsa", 3) == 4
+    assert allreduce_steps("rhd_rsa", 6) == 6
+    assert allreduce_steps("rhd_rsa", 12) == 8
+    assert allreduce_steps("rhd_rsa", 24) == 10
+    assert allreduce_steps("ring_rsa", 12) == 22
+
+
+def test_rhd_beats_ring_small_messages_nonpow2():
+    """The point of removing deviation D2: on the paper's 6-/12-/24-way
+    shapes, RHD's 2·log2(core)+2 steps still beat ring's 2(p-1) for
+    latency-bound messages."""
+    for p in (6, 12, 24):
+        for n in (8, 1024, 64 * 1024):
+            assert cm.allreduce_latency("rhd_rsa", n, p) < \
+                cm.allreduce_latency("ring_rsa", n, p)
 
 
 def test_rhd_beats_ring_small_messages():

@@ -61,13 +61,13 @@ sys.path.insert(0, %r)
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.launch import hlo_analysis as H
+from repro.core.compat import make_mesh, shard_map
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 def f(x):
     return jax.lax.psum(x, "data")
-sm = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                   axis_names={"data"}, check_vma=False)
+sm = shard_map(f, mesh, in_specs=P("data"), out_specs=P("data"),
+               axis_names={"data"}, check_vma=False)
 txt = jax.jit(sm).lower(jnp.ones((4 * 256,), jnp.float32)).compile().as_text()
 agg = H.analyze(txt)
 assert agg.collective_counts.get("all-reduce", 0) >= 1, agg.collective_counts

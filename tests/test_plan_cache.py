@@ -1,7 +1,11 @@
-"""Plan cache (pointer-cache analogue): hits, key sensitivity, stats."""
+"""Plan cache (pointer-cache analogue): hits, key sensitivity, stats,
+and the concurrent double-build guard."""
+import threading
+
 import jax.numpy as jnp
 
 from repro.core import PlanCache
+from repro.core import plan_cache as pc_mod
 
 
 def _tree(n=8, dtype=jnp.float32):
@@ -39,3 +43,64 @@ def test_clear():
     cache.get_or_build(_tree(), 1024)
     cache.clear()
     assert len(cache) == 0 and cache.stats.misses == 0
+
+
+def test_concurrent_same_key_builds_once(monkeypatch):
+    """Two threads racing on the same key must produce ONE plan object,
+    ONE miss, and ONE hit — the loser of the build race may not skew
+    CacheStats (benchmarks/plan_cache.py reports hit_rate from these)."""
+    cache = PlanCache()
+    build_started = threading.Event()
+    release_build = threading.Event()
+    real_build = pc_mod.fusion.build_plan
+
+    def slow_build(*args, **kwargs):
+        build_started.set()
+        release_build.wait(timeout=30)
+        return real_build(*args, **kwargs)
+
+    monkeypatch.setattr(pc_mod.fusion, "build_plan", slow_build)
+    results = []
+
+    def worker():
+        results.append(cache.get_or_build(_tree(), 1024))
+
+    t1 = threading.Thread(target=worker)
+    t1.start()
+    assert build_started.wait(timeout=30)
+    t2 = threading.Thread(target=worker)   # misses while t1 is building
+    t2.start()
+    release_build.set()
+    t1.join(timeout=30)
+    t2.join(timeout=30)
+    assert len(results) == 2
+    assert results[0] is results[1]
+    assert cache.stats.misses == 1
+    assert cache.stats.hits == 1
+    assert len(cache) == 1
+
+
+def test_clear_during_build_keeps_cache_empty(monkeypatch):
+    """A build that was in flight when clear() ran must not re-populate
+    the freshly cleared cache or skew its zeroed stats."""
+    cache = PlanCache()
+    build_started = threading.Event()
+    release_build = threading.Event()
+    real_build = pc_mod.fusion.build_plan
+
+    def slow_build(*args, **kwargs):
+        build_started.set()
+        release_build.wait(timeout=30)
+        return real_build(*args, **kwargs)
+
+    monkeypatch.setattr(pc_mod.fusion, "build_plan", slow_build)
+    t = threading.Thread(target=lambda: cache.get_or_build(_tree(), 1024))
+    t.start()
+    assert build_started.wait(timeout=30)
+    cache.clear()
+    release_build.set()
+    t.join(timeout=30)
+    assert len(cache) == 0 and cache.stats.misses == 0
+    monkeypatch.setattr(pc_mod.fusion, "build_plan", real_build)
+    cache.get_or_build(_tree(), 1024)      # post-clear rebuild is normal
+    assert len(cache) == 1 and cache.stats.misses == 1

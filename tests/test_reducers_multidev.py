@@ -17,3 +17,19 @@ def test_multidev_checks():
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
     assert "ALL MULTIDEV CHECKS PASSED" in proc.stdout
+
+
+@pytest.mark.timeout(900)
+def test_multidev_nonpow2_checks():
+    """rhd_rsa on p ∈ {3, 4, 6, 8, 12}: bit-exact vs psum, compiled to
+    the RHD ppermute schedule (no ring/psum fallback), and hierarchical
+    over a non-pow2 pod axis — deviation D2 removal."""
+    script = os.path.join(os.path.dirname(__file__),
+                          "multidev_nonpow2_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, timeout=880, env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
+    assert "ALL NONPOW2 CHECKS PASSED" in proc.stdout

@@ -1,0 +1,71 @@
+"""Serve-engine step caching and aggregator config validation.
+
+`ServeEngine.generate` must reuse BOTH jitted steps across calls with
+the same batch shape (the prefill used to be rebuilt — and re-traced —
+on every call), and must rebuild when the shape key changes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_spec
+from repro.core import AggregatorConfig
+from repro.core.compat import make_mesh
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.engine import ServeConfig
+
+
+@pytest.fixture(scope="module")
+def engine():
+    spec = get_spec("smollm-360m").reduced()
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_mesh((1,), ("data",))
+    return ServeEngine(model, params, mesh, (),
+                       ServeConfig(max_new_tokens=4, max_seq=32)), spec
+
+
+def _toks(spec, b=1, s=8, offset=0):
+    return (jnp.arange(b * s, dtype=jnp.int32) + offset) \
+        .reshape(b, s) % spec.vocab_size
+
+
+def test_prefill_and_decode_cached_across_generate(engine):
+    eng, spec = engine
+    out1 = eng.generate({"tokens": _toks(spec)})
+    prefill1, decode1 = eng._prefill, eng._decode
+    assert prefill1 is not None and decode1 is not None
+    out2 = eng.generate({"tokens": _toks(spec, offset=3)})
+    assert eng._prefill is prefill1      # same shape -> reused, not rebuilt
+    assert eng._decode is decode1
+    assert out1.shape == out2.shape == (1, 4)
+
+
+def test_prefill_rebuilds_on_shape_change(engine):
+    eng, spec = engine
+    eng.generate({"tokens": _toks(spec, s=8)})
+    prefill1 = eng._prefill
+    eng.generate({"tokens": _toks(spec, s=16)})
+    assert eng._prefill is not prefill1  # prompt length is in the key
+
+
+def test_default_config_not_shared():
+    """Each engine built without a cfg gets its OWN ServeConfig (the old
+    mutable-default-argument bug shared one instance across engines)."""
+    e1 = ServeEngine(model=None, params=None, mesh=None)
+    e2 = ServeEngine(model=None, params=None, mesh=None)
+    assert e1.cfg is not e2.cfg
+    e1.cfg.max_new_tokens = 99
+    assert e2.cfg.max_new_tokens == ServeConfig().max_new_tokens
+
+
+def test_aggregator_config_rejects_unknown_strategy():
+    with pytest.raises(ValueError, match="not in"):
+        AggregatorConfig(strategy="nccl3").validate()
+    with pytest.raises(ValueError):
+        AggregatorConfig(strategy="ring").validate()   # near-miss spelling
+    AggregatorConfig(strategy="rhd_rsa").validate()    # all real ones pass
+    for s in ("psum", "ring_rsa", "ps_gather", "hierarchical"):
+        AggregatorConfig(strategy=s).validate()

@@ -49,8 +49,8 @@ def test_serve_engine_generates():
     spec = get_spec("smollm-360m").reduced()
     model = build_model(spec)
     params = model.init(jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     eng = ServeEngine(model, params, mesh, (),
                       ServeConfig(max_new_tokens=8, max_seq=32))
     toks = jnp.arange(8, dtype=jnp.int32).reshape(1, 8) % spec.vocab_size
