@@ -13,20 +13,44 @@ Three complementary modes:
     (semantics identical to TPU; absolute numbers are CPU-bound,
     relative step-count effects are visible). Runs in a subprocess so
     the main process keeps one device.
+
+Tuning-table emission (MVAPICH2-style, DESIGN.md §3.5):
+
+    python benchmarks/allreduce_micro.py --emit-table out.json \
+        [--table-mode measured|analytic] [--table-ps 3,4,6,8] \
+        [--table-sizes 1024,65536,...]
+
+writes a schema-validated JSON table that the EMPIRICAL selector
+(`repro.core.selector`, ``AggregatorConfig(strategy="auto",
+selector_mode="empirical", selector_table=...)``) loads back.  A full
+default-grid MEASURED run additionally refreshes the repo-root
+``BENCH_allreduce.json`` trajectory artifact (same schema, plus a
+``meta`` block with the analytic crossovers so the measured-vs-modeled
+story is tracked across PRs); ad-hoc subsets never touch it.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
 
 from repro.core import cost_model as cm
+from repro.core import selector as sel
 from repro.core.reducers import allreduce_steps, wire_bytes
 
 SIZES = [8, 1024, 64 * 1024, 1 << 20, 16 << 20, 64 << 20, 256 << 20]
 P_DEVICES = 16
 NONPOW2_P = [3, 6, 12, 24]
+
+# Tuning-table defaults: the host shapes the measured mode can actually
+# run (pow2 and non-pow2), and a size ladder spanning the latency-bound
+# to bandwidth-bound regimes.
+TABLE_PS = [3, 4, 6, 8, 12]
+TABLE_SIZES = [1024, 16 * 1024, 256 * 1024, 1 << 20, 8 << 20]
+BENCH_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_allreduce.json")
 
 
 def analytic_nonpow2_rows():
@@ -125,6 +149,63 @@ def measured_rows(sizes=None, device_counts=(8,)):
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def measured_tuning_entries(ps=None, sizes=None):
+    """Measured-mode tuning entries: wall-clock each strategy on real
+    XLA host submeshes — the MVAPICH2 way (run on the deployment
+    platform; here that is host CPU, DESIGN.md D1)."""
+    ps = list(ps or TABLE_PS)
+    sizes = list(sizes or TABLE_SIZES)
+    entries = []
+    for row in measured_rows(sizes=sizes, device_counts=tuple(ps)):
+        entries.append({
+            "p": int(row["p"]), "bytes": int(row["bytes"]),
+            "latency_us": {k[:-3]: float(v) for k, v in row.items()
+                           if k.endswith("_us")},
+        })
+    return entries
+
+
+def build_tuning_table(mode="measured", ps=None, sizes=None) -> dict:
+    ps = list(ps or TABLE_PS)
+    sizes = list(sizes or TABLE_SIZES)
+    if mode == "analytic":
+        table = sel.build_analytic_table(ps, sizes, link=cm.ICI)
+        table["meta"] = {"mode": "analytic", "link": "ici"}
+    elif mode == "measured":
+        table = {"schema": sel.TABLE_SCHEMA, "link": "host-cpu",
+                 "entries": measured_tuning_entries(ps, sizes),
+                 "meta": {"mode": "measured", "platform": "xla-host-cpu"}}
+    else:
+        raise ValueError(f"table mode {mode!r}; one of analytic|measured")
+    table["meta"].update({
+        "ps": ps, "sizes": sizes,
+        # analytic crossover trajectory: where the model says RHD stops
+        # winning, per p (inf = always wins; tracked across PRs in
+        # BENCH_allreduce.json)
+        "analytic_crossover_bytes": {
+            str(p): (None if cross == float("inf") else int(cross))
+            for p, cross in ((p, sel.crossover_bytes(p, link=cm.ICI))
+                             for p in ps)},
+    })
+    sel.validate_table(table)
+    return table
+
+
+def emit_table(path: str, mode="measured", ps=None, sizes=None,
+               artifact: str | None = None) -> dict:
+    """Write the tuning table to ``path``; when ``artifact`` is set,
+    also refresh the repo-root BENCH_allreduce.json trajectory artifact
+    (both are valid empirical-selector inputs). The caller only passes
+    ``artifact`` for full default-grid runs — an ad-hoc --table-ps/
+    --table-sizes subset must never silently rewrite the tracked
+    trajectory."""
+    table = build_tuning_table(mode, ps, sizes)
+    sel.save_table(table, path)
+    if artifact:
+        sel.save_table(table, artifact)
+    return table
+
+
 def run(csv=True, measure=True):
     rows = analytic_rows()
     lines = []
@@ -158,5 +239,45 @@ def run(csv=True, measure=True):
     return lines
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-table", metavar="OUT.json",
+                    help="write an MVAPICH2-style tuning table for the "
+                         "empirical selector (also refreshes "
+                         "BENCH_allreduce.json)")
+    ap.add_argument("--table-mode", default="measured",
+                    choices=["measured", "analytic"])
+    ap.add_argument("--table-ps", default="",
+                    help="comma-separated device counts (default "
+                         f"{TABLE_PS})")
+    ap.add_argument("--table-sizes", default="",
+                    help="comma-separated message bytes (default "
+                         f"{TABLE_SIZES})")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip the wall-clock sweep in the default run")
+    args = ap.parse_args(argv)
+
+    if args.emit_table:
+        ps = [int(x) for x in args.table_ps.split(",")] \
+            if args.table_ps else None
+        sizes = [int(x) for x in args.table_sizes.split(",")] \
+            if args.table_sizes else None
+        # only a full default-grid MEASURED run refreshes the tracked
+        # trajectory artifact; subsets/analytic runs just write `path`
+        full_grid = ps is None and sizes is None
+        artifact = BENCH_ARTIFACT if (full_grid and
+                                      args.table_mode == "measured") \
+            else None
+        table = emit_table(args.emit_table, mode=args.table_mode,
+                           ps=ps, sizes=sizes, artifact=artifact)
+        where = args.emit_table
+        if artifact:
+            where += f" and {os.path.normpath(BENCH_ARTIFACT)}"
+        print(f"wrote {len(table['entries'])} entries "
+              f"({args.table_mode}) to {where}")
+        return
+    print("\n".join(run(measure=not args.no_measure)))
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -20,13 +20,15 @@ from repro.models import build_model
 from repro.optim import sgd
 from repro.train import TrainStepConfig, make_train_step
 
-STRATEGIES = ["psum", "ring_rsa", "rhd_rsa", "ps_gather", "hierarchical"]
+STRATEGIES = ["psum", "ring_rsa", "rhd_rsa", "ps_gather", "hierarchical",
+              "auto"]
 LABEL = {
     "psum": "vendor library (NCCL2 analogue)",
     "ring_rsa": "Baidu ring allreduce",
     "rhd_rsa": "paper's MPI-Opt (recursive halving/doubling)",
     "ps_gather": "gRPC parameter-server pattern",
     "hierarchical": "two-level intra/inter-pod (beyond paper)",
+    "auto": "per-bucket selection (MVAPICH2-style tuning table)",
 }
 
 
@@ -45,10 +47,11 @@ def main():
     for strategy in STRATEGIES:
         opt = sgd(1e-2)
         cfg = TrainStepConfig(
-            aggregator=AggregatorConfig(strategy=strategy),
+            aggregator=AggregatorConfig(strategy=strategy,
+                                        fusion_threshold_mb=0.25),
             dp_axes=("pod", "data"))
-        step_fn, _ = make_train_step(model, opt, mesh, cfg,
-                                     data.batch_at(0), donate=False)
+        step_fn, shardings = make_train_step(model, opt, mesh, cfg,
+                                             data.batch_at(0), donate=False)
         params = model.init(jax.random.PRNGKey(1))
         state = opt.init(params)
         losses = []
@@ -65,7 +68,16 @@ def main():
             n = txt.count(f" {kind}(")
             if n:
                 counts[kind] = n
-        if strategy == "hierarchical":
+        agg = shardings["aggregator"]
+        if strategy == "auto":
+            # the selector mixed algorithms per fusion bucket: the
+            # projection is the sum of each bucket's own best latency
+            proj = sum(
+                cost_model.hierarchical_latency(b, d=4, pods=2)
+                if s == "hierarchical"
+                else cost_model.flat_multiaxis_latency(s, b, d=4, pods=2)
+                for b, s in agg.last_schedule)
+        elif strategy == "hierarchical":
             proj = cost_model.hierarchical_latency(grad_bytes, d=4,
                                                    pods=2)
         else:
@@ -74,6 +86,13 @@ def main():
         print(f"{strategy:13s} | {LABEL[strategy]}")
         print(f"  losses: {['%.3f' % l for l in losses]}")
         print(f"  schedule: {dict(counts)}")
+        if strategy == "auto":
+            mix = {}
+            for b, s in agg.last_schedule:
+                mix[s] = mix.get(s, 0) + 1
+            print(f"  per-bucket selection: "
+                  + " + ".join(f"{s}×{n}" for s, n in sorted(mix.items()))
+                  + f"  ({[f'{b // 1024}KiB:{s}' for b, s in sorted(agg.last_schedule, reverse=True)[:4]]} ...)")
         print(f"  projected v5e allreduce latency: {proj * 1e6:.0f} µs\n")
 
 

@@ -1,12 +1,19 @@
 """Core contribution: CUDA-Aware-MPI-Allreduce-as-JAX — explicit
-allreduce algorithms, tensor fusion, and the plan (pointer) cache."""
+allreduce algorithms, tensor fusion, the plan (pointer) cache, and the
+message-size-aware algorithm selector (MVAPICH2-style tuning table)."""
 from .aggregator import AggregatorConfig, GradientAggregator
 from .fusion import FusionPlan, build_plan
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 from .reducers import STRATEGIES, allreduce, allreduce_steps, wire_bytes
+from .selector import (AnalyticSelector, EmpiricalSelector, Selector,
+                       build_analytic_table, crossover_bytes, load_table,
+                       make_selector, save_table, validate_table)
 
 __all__ = [
     "AggregatorConfig", "GradientAggregator", "FusionPlan", "build_plan",
     "GLOBAL_PLAN_CACHE", "PlanCache", "STRATEGIES", "allreduce",
     "allreduce_steps", "wire_bytes",
+    "AnalyticSelector", "EmpiricalSelector", "Selector",
+    "build_analytic_table", "crossover_bytes", "load_table",
+    "make_selector", "save_table", "validate_table",
 ]

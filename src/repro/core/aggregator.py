@@ -23,7 +23,7 @@ from typing import Hashable, Sequence
 import jax
 import jax.numpy as jnp
 
-from . import compat, reducers
+from . import compat, fusion, reducers, selector as selector_mod
 from .compat import axis_size
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 
@@ -41,7 +41,10 @@ def _chunk_axis(group, ndim: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class AggregatorConfig:
-    strategy: str = "rhd_rsa"          # see reducers.STRATEGIES
+    strategy: str = "rhd_rsa"          # reducers.STRATEGIES, or "auto":
+                                       # per-bucket message-size-aware
+                                       # selection (core/selector.py,
+                                       # DESIGN.md §3.5)
     fuse: bool = True                  # Horovod Tensor Fusion on/off
     fusion_threshold_mb: float = 4.0   # Horovod default threshold = 64MB;
                                        # tuned per-platform like the paper
@@ -50,15 +53,45 @@ class AggregatorConfig:
     wire_dtype: str = ""               # "" = reduce in accum_dtype; e.g.
                                        # "bfloat16" halves wire bytes at a
                                        # summation-precision cost (§Perf C2)
+    # -- strategy="auto" knobs ----------------------------------------------
+    selector_mode: str = "analytic"    # "analytic" | "empirical"
+    selector_table: str = ""           # empirical mode: path to a tuning
+                                       # table JSON (allreduce_micro
+                                       # --emit-table / BENCH_allreduce.json)
+    selector_link: str = "ici"         # analytic mode link profile
+                                       # (selector.LINK_PROFILES)
+    align_buckets: bool = True         # align fusion boundaries to the
+                                       # selector's algorithm switch points
 
     @property
     def threshold_bytes(self) -> int:
         return int(self.fusion_threshold_mb * 2 ** 20)
 
     def validate(self):
-        if self.strategy not in reducers.STRATEGIES:
+        if self.strategy != "auto" and \
+                self.strategy not in reducers.STRATEGIES:
             raise ValueError(
-                f"strategy {self.strategy!r} not in {reducers.STRATEGIES}")
+                f"strategy {self.strategy!r} not in "
+                f"{reducers.STRATEGIES + ('auto',)}")
+        if self.selector_mode not in selector_mod.MODES:
+            raise ValueError(
+                f"selector_mode {self.selector_mode!r} not in "
+                f"{selector_mod.MODES}")
+        if self.strategy == "auto" and self.selector_mode == "empirical" \
+                and not self.selector_table:
+            raise ValueError("strategy='auto' with selector_mode="
+                             "'empirical' needs selector_table=<json path>")
+        if self.selector_link not in selector_mod.LINK_PROFILES:
+            raise ValueError(
+                f"selector_link {self.selector_link!r} not in "
+                f"{sorted(selector_mod.LINK_PROFILES)}")
+
+    def make_selector(self) -> "selector_mod.Selector | None":
+        if self.strategy != "auto":
+            return None
+        return selector_mod.make_selector(
+            self.selector_mode, table=self.selector_table or None,
+            link=self.selector_link)
 
 
 class GradientAggregator:
@@ -79,6 +112,77 @@ class GradientAggregator:
         self.config = config
         self.dp_axes = tuple(dp_axes)
         self.cache = cache if cache is not None else GLOBAL_PLAN_CACHE
+        self.selector = config.make_selector()
+        # (bucket bytes, strategy) per bucket, recorded at trace time by
+        # the last __call__ / schedule() — what launch/dryrun reports.
+        self.last_schedule: tuple = ()
+
+    # -- per-bucket strategy resolution -------------------------------------
+
+    def _wire_itemsize(self) -> int:
+        cfg = self.config
+        return jnp.dtype(cfg.wire_dtype or cfg.accum_dtype).itemsize
+
+    def _plan_context(self, axis_sizes):
+        """(switch_points, strategy_key) for the plan-cache lookup.
+
+        For a FIXED strategy the plan layout is strategy-independent, so
+        the strategy component stays None and aggregators that differ
+        only in algorithm share one cached plan. Only "auto" needs the
+        resolution context (selector fingerprint + axis sizes) in the
+        key: different tables/links may align buckets differently.
+        """
+        cfg = self.config
+        if self.selector is None:
+            return None, None
+        switch = None
+        if cfg.fuse and cfg.align_buckets:
+            switch = self.selector.switch_points(
+                axis_sizes, hi=max(cfg.threshold_bytes, 257))
+        return switch, ("auto", self.selector.fingerprint(),
+                        tuple(axis_sizes))
+
+    def _bucket_bytes(self, bucket) -> int:
+        return int(bucket.size) * self._wire_itemsize()
+
+    def _strategy_for(self, bucket, axis_sizes) -> str:
+        if self.selector is None:
+            return self.config.strategy
+        return self.selector.select(self._bucket_bytes(bucket), axis_sizes)
+
+    def schedule(self, grads, axis_sizes: Sequence[int], groups=None):
+        """Resolve the per-bucket schedule WITHOUT running a reduction:
+        list of {bytes, strategy, predicted_s} dicts, one per bucket.
+
+        ``grads`` may be arrays or ShapeDtypeStructs; ``axis_sizes`` are
+        the data-axis sizes (outermost first, matching ``dp_axes``) —
+        passed explicitly because this runs outside ``shard_map``.
+        Used by launch/dryrun.py to report what "auto" chose.
+        """
+        cfg = self.config
+        if not cfg.sharding_aware:
+            groups = None
+        axis_sizes = tuple(int(s) for s in axis_sizes)
+        switch, _ = self._plan_context(axis_sizes)
+        plan = fusion.build_plan(grads, cfg.threshold_bytes, groups=groups,
+                                 fuse=cfg.fuse, switch_points=switch,
+                                 switch_itemsize=self._wire_itemsize())
+        link = selector_mod.LINK_PROFILES[cfg.selector_link]
+        rows = []
+        for bucket in plan.buckets:
+            n_bytes = self._bucket_bytes(bucket)
+            if self.selector is not None:
+                choice = self.selector.choose(n_bytes, axis_sizes)
+                strat, pred = choice.strategy, choice.predicted_s
+            else:
+                strat = cfg.strategy
+                pred = selector_mod.predict_latency(
+                    strat, n_bytes, axis_sizes, link=link)
+            rows.append({"bytes": n_bytes, "strategy": strat,
+                         "predicted_s": pred})
+        self.last_schedule = tuple(
+            (r["bytes"], r["strategy"]) for r in rows)
+        return rows
 
     # -- main entry point (call inside shard_map) ---------------------------
 
@@ -93,12 +197,19 @@ class GradientAggregator:
         cfg = self.config
         if not cfg.sharding_aware:
             groups = None
+        # Mesh axis sizes are static inside the shard_map trace, so the
+        # per-bucket strategy resolution below happens entirely at trace
+        # time — the compiled step hard-codes the mixed schedule.
+        axis_sizes = tuple(axis_size(ax) for ax in self.dp_axes)
+        switch, strategy_key = self._plan_context(axis_sizes)
         plan = self.cache.get_or_build(
-            grads, cfg.threshold_bytes, groups=groups, fuse=cfg.fuse)
+            grads, cfg.threshold_bytes, groups=groups, fuse=cfg.fuse,
+            switch_points=switch, switch_itemsize=self._wire_itemsize(),
+            strategy=strategy_key)
 
         dp_size = 1
-        for ax in self.dp_axes:
-            dp_size *= axis_size(ax)
+        for s in axis_sizes:
+            dp_size *= s
         scale = 1.0 / dp_size
 
         accum = jnp.dtype(cfg.accum_dtype)
@@ -106,21 +217,25 @@ class GradientAggregator:
             accum = jnp.dtype(cfg.wire_dtype)
         buffers = plan.flatten(grads)
         reduced = []
+        schedule = []
         for bucket, buf in zip(plan.buckets, buffers):
             orig = buf.dtype
             if orig != accum:
                 buf = buf.astype(accum)
+            strategy = self._strategy_for(bucket, axis_sizes)
+            schedule.append((self._bucket_bytes(bucket), strategy))
             # chunked reducers slice along dim 0; if the bucket's leaf is
             # model-sharded on dim 0, rotate an unsharded dim to the front
             # so the auto sharding is never disturbed (§Perf it.0).
             axis = _chunk_axis(bucket.group, buf.ndim)
             if axis != 0:
                 buf = jnp.moveaxis(buf, axis, 0)
-            buf = reducers.allreduce(buf, self.dp_axes, cfg.strategy)
+            buf = reducers.allreduce(buf, self.dp_axes, strategy)
             if axis != 0:
                 buf = jnp.moveaxis(buf, 0, axis)
             buf = (buf * scale).astype(orig)
             reduced.append(buf)
+        self.last_schedule = tuple(schedule)
         return plan.unflatten(reduced)
 
     # -- scalars (loss/metrics) ---------------------------------------------

@@ -60,6 +60,9 @@ class FusionPlan:
     leaves: tuple[LeafMeta, ...]
     buckets: tuple[Bucket, ...]
     threshold_bytes: int
+    # algorithm switch points (bytes) the bucket boundaries were aligned
+    # to, () when selector-aware alignment was off — see build_plan.
+    switch_points: tuple[int, ...] = ()
 
     # -- transforms ---------------------------------------------------------
 
@@ -108,13 +111,43 @@ class FusionPlan:
 
 
 def build_plan(tree, threshold_bytes: int,
-               groups=None, fuse: bool = True) -> FusionPlan:
+               groups=None, fuse: bool = True,
+               switch_points: Sequence[int] | None = None,
+               switch_itemsize: int = 0) -> FusionPlan:
     """Build a :class:`FusionPlan` for ``tree``.
 
     ``groups``: optional pytree (same structure) of hashable sharding-group
     tags; leaves are only fused within a (dtype, group) class. ``None``
     means every leaf is replicated on the auto axes and freely fusable.
+
+    ``switch_points``: optional ascending byte sizes at which the
+    selected allreduce algorithm changes (selector-aware mode).  A fused
+    bucket is never grown across a switch point: if appending a leaf
+    would carry the bucket from below a crossover to above it, the
+    bucket is closed first, so every fused message sits entirely inside
+    one algorithm regime and the per-bucket selection is unambiguous.
+    (A single leaf larger than a switch point is unsplittable and is
+    bucketed as usual.)
+
+    ``switch_itemsize``: element size (bytes) the switch points are
+    expressed in — the aggregator's WIRE dtype, which is what the
+    selector sees.  When leaves are stored in a different dtype (bf16
+    grads reduced in f32), comparing leaf bytes against wire-byte
+    crossovers would be off by the itemsize ratio; crossing is
+    therefore evaluated on element counts × ``switch_itemsize``.
+    0 means "switch points are in leaf bytes" (dtype-agnostic callers).
     """
+    switch = tuple(sorted(int(s) for s in switch_points)) \
+        if switch_points else ()
+
+    def _crosses(cur: dict, m: "LeafMeta") -> bool:
+        if switch_itemsize:
+            a = cur["size"] * switch_itemsize
+            b = m.size * switch_itemsize
+        else:
+            a, b = cur["bytes"], m.nbytes
+        return any(a < s < a + b for s in switch)
+
     flat, treedef = jax.tree_util.tree_flatten(tree)
     if groups is None:
         tags = [None] * len(flat)
@@ -149,7 +182,8 @@ def build_plan(tree, threshold_bytes: int,
                 buckets.append(Bucket((m.index,), m.dtype, m.group, m.size))
                 continue
             cur = open_buckets.get(key)
-            if cur is not None and cur["bytes"] + m.nbytes <= threshold_bytes:
+            if cur is not None and cur["bytes"] + m.nbytes <= threshold_bytes \
+                    and not _crosses(cur, m):
                 cur["idx"].append(m.index)
                 cur["bytes"] += m.nbytes
                 cur["size"] += m.size
@@ -163,4 +197,5 @@ def build_plan(tree, threshold_bytes: int,
             buckets.append(Bucket(tuple(cur["idx"]), key[0], key[1],
                                   cur["size"]))
     return FusionPlan(treedef=treedef, leaves=leaves,
-                      buckets=tuple(buckets), threshold_bytes=threshold_bytes)
+                      buckets=tuple(buckets), threshold_bytes=threshold_bytes,
+                      switch_points=switch)

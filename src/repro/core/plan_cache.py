@@ -53,7 +53,9 @@ class PlanCache:
         self.stats = CacheStats()
 
     @staticmethod
-    def key_for(tree, threshold_bytes: int, groups, fuse: bool) -> Hashable:
+    def key_for(tree, threshold_bytes: int, groups, fuse: bool,
+                switch_points=None, switch_itemsize: int = 0,
+                strategy: Hashable = None) -> Hashable:
         flat, treedef = jax.tree_util.tree_flatten(tree)
         shapes = tuple(tuple(x.shape) for x in flat)
         dtypes = tuple(str(jnp.dtype(x.dtype)) for x in flat)
@@ -61,11 +63,21 @@ class PlanCache:
                 else tuple(jax.tree_util.tree_leaves(
                     groups,
                     is_leaf=lambda x: x is None or isinstance(x, tuple))))
-        return (treedef, shapes, dtypes, gkey, threshold_bytes, fuse)
+        # `strategy` is the RESOLVED reduction strategy context (a plain
+        # strategy name, or the auto selector's fingerprint + axis
+        # sizes): plans laid out under different selection functions /
+        # switch-point alignments must never collide.
+        skey = (tuple(int(s) for s in switch_points), switch_itemsize) \
+            if switch_points else None
+        return (treedef, shapes, dtypes, gkey, threshold_bytes, fuse,
+                skey, strategy)
 
     def get_or_build(self, tree, threshold_bytes: int, groups=None,
-                     fuse: bool = True) -> fusion.FusionPlan:
-        key = self.key_for(tree, threshold_bytes, groups, fuse)
+                     fuse: bool = True, switch_points=None,
+                     switch_itemsize: int = 0,
+                     strategy: Hashable = None) -> fusion.FusionPlan:
+        key = self.key_for(tree, threshold_bytes, groups, fuse,
+                           switch_points, switch_itemsize, strategy)
         while True:
             with self._lock:
                 plan = self._plans.get(key)
@@ -93,8 +105,10 @@ class PlanCache:
                     # DURING the build voids the store below.
                     generation = self._generation
                 try:
-                    plan = fusion.build_plan(tree, threshold_bytes,
-                                             groups=groups, fuse=fuse)
+                    plan = fusion.build_plan(
+                        tree, threshold_bytes, groups=groups, fuse=fuse,
+                        switch_points=switch_points,
+                        switch_itemsize=switch_itemsize)
                     with self._lock:
                         # A clear() while we were building invalidated
                         # the cache: hand the plan to our caller but

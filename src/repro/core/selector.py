@@ -1,0 +1,408 @@
+"""Message-size-aware allreduce algorithm selection (MVAPICH2-style).
+
+The paper's headline numbers are message-size-dependent: the RHD design
+beats the vendor library by 5-17x for small/medium messages but only
+trims ~29% for the largest ones.  That crossover structure is exactly
+why MVAPICH2 ships per-(message size, process count) tuning tables
+instead of one algorithm.  This module is that table for our stack: it
+maps ``(bucket bytes, axis sizes, link profile) -> strategy`` so the
+aggregator can apply a *per-bucket* algorithm — RHD for the small fused
+buckets, a bandwidth-optimal schedule for the big dense layers — in a
+single training step.
+
+Two modes (DESIGN.md §3.5):
+
+``analytic``
+    argmin of :mod:`repro.core.cost_model` over the candidate
+    strategies.  The crossover table (piecewise strategy-vs-bytes
+    segments) is computed once per (link profile, axis sizes) and
+    cached; its boundaries are also exported as fusion *switch points*
+    so bucket edges align with algorithm changes.
+
+``empirical``
+    an MVAPICH2-style tuning table measured by
+    ``benchmarks/allreduce_micro.py --emit-table`` and serialized as
+    JSON (schema below).  Selection picks the table row with the
+    nearest process count / largest message size <= the bucket, and
+    takes the measured argmin.
+
+Candidate policy: ``ps_gather`` is deliberately NOT auto-selectable.
+Its cost-model entry models the paper's gRPC parameter-server transport
+(DESIGN.md A3) — a baseline, not a deployable choice — and its
+two-alpha idealization would win every tiny-message argmin on a
+modeling artifact.  ``psum`` stays in the pool as the vendor fallback
+(it never wins analytically because of its software-alpha penalty, but
+an empirical table may legitimately pick it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+from typing import Hashable, Mapping, Sequence
+
+from . import cost_model, reducers
+
+# JSON tuning-table schema tag (bump on breaking change).
+TABLE_SCHEMA = "repro/allreduce-tuning/v1"
+
+# Strategies the auto selector may choose for a single mesh axis
+# (order is the tie-break: the paper's design wins equal-latency ties).
+DEFAULT_CANDIDATES = ("rhd_rsa", "ring_rsa", "psum")
+
+# Named link profiles accepted wherever a LinkParams is expected.
+LINK_PROFILES = {
+    "ici": cost_model.ICI,
+    "dcn": cost_model.DCN,
+    "paper": cost_model.PAPER_LINK,
+}
+
+MODES = ("analytic", "empirical")
+
+
+def resolve_link(link) -> cost_model.LinkParams:
+    if isinstance(link, cost_model.LinkParams):
+        return link
+    try:
+        return LINK_PROFILES[link]
+    except KeyError:
+        raise ValueError(
+            f"unknown link profile {link!r}; one of {sorted(LINK_PROFILES)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    strategy: str
+    predicted_s: float         # the selector's own latency estimate
+
+
+def predict_latency(strategy: str, n_bytes: float,
+                    axis_sizes: Sequence[int],
+                    link: cost_model.LinkParams = cost_model.ICI,
+                    inter_link: cost_model.LinkParams = cost_model.DCN
+                    ) -> float:
+    """Cost-model latency of ``strategy`` for one allreduce of
+    ``n_bytes`` over ``axis_sizes`` (outermost/pod axis first, matching
+    the aggregator's ``dp_axes``)."""
+    sizes = tuple(int(s) for s in axis_sizes)
+    if len(sizes) == 1:
+        if strategy == "hierarchical":
+            # degenerates to ring on a single-level mesh (reducers do
+            # the same)
+            return cost_model.allreduce_latency("ring_rsa", n_bytes,
+                                                sizes[0], link=link)
+        return cost_model.allreduce_latency(strategy, n_bytes, sizes[0],
+                                            link=link)
+    if len(sizes) == 2:
+        pods, d = sizes
+        if strategy == "hierarchical":
+            return cost_model.hierarchical_latency(
+                n_bytes, d=d, pods=pods, intra=link, inter=inter_link)
+        return cost_model.flat_multiaxis_latency(
+            strategy, n_bytes, d=d, pods=pods, intra=link, inter=inter_link)
+    raise ValueError(f"selector supports 1- or 2-axis meshes, got {sizes}")
+
+
+# ---------------------------------------------------------------------------
+# Selector interface
+# ---------------------------------------------------------------------------
+
+class Selector:
+    """Maps (message bytes, axis sizes) -> allreduce strategy."""
+
+    mode: str = "?"
+
+    def choose(self, n_bytes: int, axis_sizes: Sequence[int]) -> Choice:
+        raise NotImplementedError
+
+    def select(self, n_bytes: int, axis_sizes: Sequence[int]) -> str:
+        return self.choose(n_bytes, axis_sizes).strategy
+
+    def switch_points(self, axis_sizes: Sequence[int],
+                      lo: int = 256, hi: int = 1 << 30) -> tuple[int, ...]:
+        """Byte sizes in (lo, hi) at which the chosen algorithm changes
+        — fusion aligns bucket boundaries to these so no fused buffer
+        straddles a crossover."""
+        raise NotImplementedError
+
+    def fingerprint(self) -> Hashable:
+        """Stable identity of the selection function — part of the plan
+        cache key, so plans resolved under different tables/links never
+        collide."""
+        raise NotImplementedError
+
+
+class AnalyticSelector(Selector):
+    """argmin of the α-β-γ cost model across the candidate strategies."""
+
+    mode = "analytic"
+
+    def __init__(self, link=cost_model.ICI, inter_link=cost_model.DCN,
+                 candidates: Sequence[str] = DEFAULT_CANDIDATES):
+        self.link = resolve_link(link)
+        self.inter_link = resolve_link(inter_link)
+        for s in candidates:
+            if s not in reducers.STRATEGIES:
+                raise ValueError(f"unknown candidate strategy {s!r}")
+        self.candidates = tuple(candidates)
+        self._switch_cache: dict = {}
+
+    def candidates_for(self, axis_sizes: Sequence[int]) -> tuple[str, ...]:
+        if len(tuple(axis_sizes)) == 2:
+            return self.candidates + ("hierarchical",)
+        return self.candidates
+
+    def choose(self, n_bytes: int, axis_sizes: Sequence[int]) -> Choice:
+        sizes = tuple(int(s) for s in axis_sizes)
+        best, best_t = None, math.inf
+        for s in self.candidates_for(sizes):
+            t = predict_latency(s, n_bytes, sizes, self.link,
+                                self.inter_link)
+            if t < best_t:            # strict: first-listed wins ties
+                best, best_t = s, t
+        return Choice(best, best_t)
+
+    def switch_points(self, axis_sizes: Sequence[int],
+                      lo: int = 256, hi: int = 1 << 30) -> tuple[int, ...]:
+        sizes = tuple(int(s) for s in axis_sizes)
+        key = (sizes, lo, hi)
+        cached = self._switch_cache.get(key)
+        if cached is None:
+            cached = tuple(b for b, _ in self.crossover_table(sizes, lo, hi)
+                           [:-1])
+            self._switch_cache[key] = cached
+        return cached
+
+    def crossover_table(self, axis_sizes: Sequence[int],
+                        lo: int = 256, hi: int = 1 << 30
+                        ) -> list[tuple[int, str]]:
+        """Piecewise (upper_bytes, strategy) segments over [lo, hi]:
+        the chosen strategy is ``strategy`` for message sizes up to
+        ``upper_bytes`` (the last segment's bound is ``hi``).  Computed
+        on a geometric grid with bisection refinement at each winner
+        change — the once-per-link-profile "tuning table" of the
+        analytic mode."""
+        sizes = tuple(int(s) for s in axis_sizes)
+        grid = []
+        n = max(1, lo)
+        while n < hi:
+            grid.append(n)
+            n *= 2
+        grid.append(hi)
+        segments: list[tuple[int, str]] = []
+        prev_n, prev_s = grid[0], self.select(grid[0], sizes)
+        for n in grid[1:]:
+            s = self.select(n, sizes)
+            if s != prev_s:
+                # bisect the boundary to ~1% byte resolution
+                a, b = prev_n, n
+                while b - a > max(1, a // 128):
+                    mid = (a + b) // 2
+                    if self.select(mid, sizes) == prev_s:
+                        a = mid
+                    else:
+                        b = mid
+                segments.append((b, prev_s))
+                prev_s = s
+            prev_n = n
+        segments.append((hi, prev_s))
+        return segments
+
+    def fingerprint(self) -> Hashable:
+        return ("analytic", self.link.alpha_s, self.link.bandwidth,
+                self.inter_link.alpha_s, self.inter_link.bandwidth,
+                self.candidates)
+
+
+class EmpiricalSelector(Selector):
+    """MVAPICH2-style measured tuning table (JSON, schema above)."""
+
+    mode = "empirical"
+
+    def __init__(self, table: Mapping):
+        validate_table(table)
+        self.table = table
+        # p -> sorted [(bytes, {strategy: us})]
+        self._rows: dict[int, list[tuple[int, dict]]] = {}
+        for e in table["entries"]:
+            self._rows.setdefault(int(e["p"]), []).append(
+                (int(e["bytes"]), dict(e["latency_us"])))
+        for rows in self._rows.values():
+            rows.sort(key=lambda r: r[0])
+        self._fp = hashlib.sha256(
+            json.dumps(table, sort_keys=True).encode()).hexdigest()[:16]
+
+    def _rows_for(self, p: int) -> list[tuple[int, dict]]:
+        if p in self._rows:
+            return self._rows[p]
+        # nearest measured process count (log distance, ties -> smaller)
+        nearest = min(self._rows,
+                      key=lambda q: (abs(math.log(q / p)), q))
+        return self._rows[nearest]
+
+    def choose(self, n_bytes: int, axis_sizes: Sequence[int]) -> Choice:
+        p = 1
+        for s in axis_sizes:
+            p *= int(s)
+        rows = self._rows_for(p)
+        entry = rows[0][1]
+        for b, lat in rows:
+            if b <= n_bytes:
+                entry = lat
+            else:
+                break
+        best, best_t = None, math.inf
+        # Same candidate policy as analytic mode: a table may CONTAIN
+        # ps_gather measurements (the trajectory artifact records every
+        # reducer), but the baseline is never auto-selected.
+        candidates = DEFAULT_CANDIDATES
+        if len(tuple(axis_sizes)) == 2:
+            candidates = candidates + ("hierarchical",)
+        for s in candidates:
+            t = entry.get(s)
+            if t is not None and t < best_t:
+                best, best_t = s, t
+        if best is None:
+            raise ValueError(
+                f"tuning table has no selectable strategy for p={p}, "
+                f"bytes<={n_bytes} (candidates {candidates})")
+        return Choice(best, best_t * 1e-6)
+
+    def switch_points(self, axis_sizes: Sequence[int],
+                      lo: int = 256, hi: int = 1 << 30) -> tuple[int, ...]:
+        p = 1
+        for s in axis_sizes:
+            p *= int(s)
+        rows = self._rows_for(p)
+        pts = []
+        prev = None
+        for b, _ in rows:
+            winner = self.select(b, axis_sizes)
+            if prev is not None and winner != prev and lo < b < hi:
+                pts.append(b)
+            prev = winner
+        return tuple(pts)
+
+    def fingerprint(self) -> Hashable:
+        return ("empirical", self._fp)
+
+
+# ---------------------------------------------------------------------------
+# Tuning-table (de)serialization
+# ---------------------------------------------------------------------------
+
+def validate_table(table: Mapping) -> None:
+    """Raise ValueError unless ``table`` conforms to TABLE_SCHEMA."""
+    if not isinstance(table, Mapping):
+        raise ValueError("tuning table must be a JSON object")
+    if table.get("schema") != TABLE_SCHEMA:
+        raise ValueError(f"tuning table schema must be {TABLE_SCHEMA!r}, "
+                         f"got {table.get('schema')!r}")
+    entries = table.get("entries")
+    if not isinstance(entries, list) or not entries:
+        raise ValueError("tuning table needs a non-empty 'entries' list")
+    seen = set()
+    for e in entries:
+        if not isinstance(e, Mapping):
+            raise ValueError(f"entry is not an object: {e!r}")
+        p, b, lat = e.get("p"), e.get("bytes"), e.get("latency_us")
+        if not isinstance(p, int) or p < 1:
+            raise ValueError(f"entry 'p' must be a positive int: {e!r}")
+        if not isinstance(b, int) or b < 0:
+            raise ValueError(f"entry 'bytes' must be a non-negative int: "
+                             f"{e!r}")
+        if (p, b) in seen:
+            raise ValueError(f"duplicate (p={p}, bytes={b}) entry")
+        seen.add((p, b))
+        if not isinstance(lat, Mapping) or not lat:
+            raise ValueError(f"entry 'latency_us' must be a non-empty "
+                             f"object: {e!r}")
+        for s, us in lat.items():
+            if s not in reducers.STRATEGIES:
+                raise ValueError(f"unknown strategy {s!r} in entry "
+                                 f"(p={p}, bytes={b})")
+            if not isinstance(us, (int, float)) or not math.isfinite(us) \
+                    or us <= 0:
+                raise ValueError(f"latency_us[{s!r}] must be a finite "
+                                 f"positive number, got {us!r}")
+
+
+def load_table(path: str) -> dict:
+    with open(path) as f:
+        table = json.load(f)
+    validate_table(table)
+    return table
+
+
+def save_table(table: Mapping, path: str) -> None:
+    validate_table(table)
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def build_analytic_table(ps: Sequence[int], sizes: Sequence[int],
+                         link=cost_model.ICI,
+                         candidates: Sequence[str] = DEFAULT_CANDIDATES
+                         ) -> dict:
+    """Tuning table filled from the cost model (deterministic; the
+    measured variant lives in benchmarks/allreduce_micro.py)."""
+    link = resolve_link(link)
+    entries = []
+    for p in ps:
+        for n in sizes:
+            entries.append({
+                "p": int(p), "bytes": int(n),
+                "latency_us": {
+                    s: cost_model.allreduce_latency(s, n, p, link=link) * 1e6
+                    for s in candidates},
+            })
+    link_name = next((k for k, v in LINK_PROFILES.items() if v == link),
+                     "custom")
+    return {"schema": TABLE_SCHEMA, "link": link_name, "entries": entries}
+
+
+# ---------------------------------------------------------------------------
+# Crossover characterization (tests + benchmarks)
+# ---------------------------------------------------------------------------
+
+def crossover_bytes(p: int, link=cost_model.ICI,
+                    candidates: Sequence[str] = DEFAULT_CANDIDATES,
+                    lo: int = 1, hi: int = 1 << 32) -> float:
+    """Message size at which the analytic winner stops being the
+    latency-optimal ``rhd_rsa``: 0 if RHD never wins (p=3, where the
+    pre/post fold erases its step advantage), ``inf`` if it always wins
+    (power-of-two p, where RHD dominates ring at every size)."""
+    sel = AnalyticSelector(link=link, candidates=candidates)
+    if sel.select(lo, (p,)) != "rhd_rsa":
+        return 0.0
+    if sel.select(hi, (p,)) == "rhd_rsa":
+        return math.inf
+    a, b = lo, hi
+    while b - a > max(1, a // 256):
+        mid = (a + b) // 2
+        if sel.select(mid, (p,)) == "rhd_rsa":
+            a = mid
+        else:
+            b = mid
+    return float(b)
+
+
+def make_selector(mode: str = "analytic", table=None,
+                  link=cost_model.ICI, inter_link=cost_model.DCN,
+                  candidates: Sequence[str] = DEFAULT_CANDIDATES
+                  ) -> Selector:
+    """Factory used by the aggregator: ``table`` may be a path or a
+    parsed dict (empirical mode only)."""
+    if mode == "analytic":
+        return AnalyticSelector(link=link, inter_link=inter_link,
+                                candidates=candidates)
+    if mode == "empirical":
+        if table is None:
+            raise ValueError("empirical selector mode needs a tuning table "
+                             "(selector_table=path or dict)")
+        if isinstance(table, str):
+            table = load_table(table)
+        return EmpiricalSelector(table)
+    raise ValueError(f"unknown selector mode {mode!r}; one of {MODES}")

@@ -29,8 +29,11 @@ import traceback
 def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                 fusion_mb: float, sharding_aware: bool = True,
                 remat: bool = False, wire_dtype: str = "",
-                spec_overrides=None):
-    """Returns (jitted_fn, arg_structs) ready to .lower(*args)."""
+                spec_overrides=None, selector_mode: str = "analytic",
+                selector_table: str = ""):
+    """Returns (jitted_fn, arg_structs, aux); aux carries the
+    GradientAggregator (train shapes only) so the caller can report the
+    resolved per-bucket schedule."""
     import dataclasses
 
     import jax
@@ -58,31 +61,65 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
             aggregator=AggregatorConfig(strategy=strategy,
                                         fusion_threshold_mb=fusion_mb,
                                         sharding_aware=sharding_aware,
-                                        wire_dtype=wire_dtype),
+                                        wire_dtype=wire_dtype,
+                                        selector_mode=selector_mode,
+                                        selector_table=selector_table),
             dp_axes=dp_axes)
-        step, _ = make_train_step(model, opt, mesh, cfg, specs,
-                                  donate=False)
+        step, shardings = make_train_step(model, opt, mesh, cfg, specs,
+                                          donate=False)
         params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         opt_state = jax.eval_shape(opt.init, params)
-        return step, (params, opt_state, specs)
+        aux = {"aggregator": shardings.get("aggregator"),
+               "dp_axes": dp_axes}
+        return step, (params, opt_state, specs), aux
 
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     if shape.kind == "prefill":
         step = make_prefill_step(model, mesh, dp_axes, specs,
                                  max_seq=shape.seq_len)
-        return step, (params, specs)
+        return step, (params, specs), {}
 
     # decode
     step = make_decode_step(model, mesh, dp_axes, shape.global_batch,
                             shape.seq_len, donate=False)
-    return step, (params, specs["cache"], specs["tokens"])
+    return step, (params, specs["cache"], specs["tokens"]), {}
+
+
+def _schedule_record(agg, mesh, dp_axes, params_struct,
+                     charged_comm_s: float) -> dict:
+    """Resolve and summarize the per-bucket reduction schedule: which
+    algorithm each fusion bucket got (one strategy everywhere unless
+    strategy='auto'), the cost-model latency the selector predicted, and
+    the collective latency the roofline actually charges from the
+    compiled HLO bytes."""
+    from repro.models import param_groups
+
+    axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
+    rows = agg.schedule(params_struct, axis_sizes,
+                        groups=param_groups(params_struct))
+    algorithms: dict = {}
+    for r in rows:
+        algorithms[r["strategy"]] = algorithms.get(r["strategy"], 0) + 1
+    predicted = sum(r["predicted_s"] for r in rows)
+    return {
+        "axis_sizes": list(axis_sizes),
+        "n_buckets": len(rows),
+        "algorithms": algorithms,
+        "predicted_comm_s": predicted,
+        "charged_comm_s": charged_comm_s,
+        # cap the per-bucket listing so --all sweeps stay readable
+        "buckets": [{"bytes": r["bytes"], "strategy": r["strategy"],
+                     "predicted_us": round(r["predicted_s"] * 1e6, 2)}
+                    for r in rows[:64]],
+    }
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             strategy: str = "rhd_rsa", fusion_mb: float = 4.0,
             sharding_aware: bool = True, verbose: bool = True,
             remat: bool = False, wire_dtype: str = "",
-            spec_overrides=None) -> dict:
+            spec_overrides=None, selector_mode: str = "analytic",
+            selector_table: str = "") -> dict:
     import jax
     from repro.configs import SHAPES, get_spec, shape_supported
     from repro.core.compat import use_mesh
@@ -107,10 +144,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     try:
         # context mesh so bare-P sharding constraints resolve
         with use_mesh(mesh):
-            step, args = _build_step(arch, shape_name, mesh, strategy,
-                                     fusion_mb, sharding_aware, remat=remat,
-                                     wire_dtype=wire_dtype,
-                                     spec_overrides=spec_overrides)
+            step, args, aux = _build_step(arch, shape_name, mesh, strategy,
+                                          fusion_mb, sharding_aware,
+                                          remat=remat,
+                                          wire_dtype=wire_dtype,
+                                          spec_overrides=spec_overrides,
+                                          selector_mode=selector_mode,
+                                          selector_table=selector_table)
             lowered = step.lower(*args)
             t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
@@ -154,6 +194,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 collectives=coll.to_dict(),
                 roofline=roof.to_dict(),
             )
+            if aux.get("aggregator") is not None:
+                rec["schedule"] = _schedule_record(
+                    aux["aggregator"], mesh, aux["dp_axes"], args[0],
+                    charged_comm_s=roof.collective_s)
             if verbose:
                 print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
                       f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
@@ -166,6 +210,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                       f"memory={roof.memory_s*1e3:.2f}ms "
                       f"collective={roof.collective_s*1e3:.2f}ms "
                       f"dominant={roof.dominant}")
+                sched = rec.get("schedule")
+                if sched:
+                    algs = " + ".join(f"{s}×{n}" for s, n in
+                                      sorted(sched["algorithms"].items()))
+                    print(f"  schedule: {sched['n_buckets']} buckets "
+                          f"[{algs}] predicted="
+                          f"{sched['predicted_comm_s']*1e3:.2f}ms "
+                          f"charged={sched['charged_comm_s']*1e3:.2f}ms")
     except Exception as e:  # noqa: BLE001 — recorded, not swallowed
         rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
@@ -181,7 +233,14 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--strategy", default="rhd_rsa")
+    ap.add_argument("--strategy", default="rhd_rsa",
+                    help="a reducers.STRATEGIES name, or 'auto' for "
+                         "per-bucket message-size-aware selection")
+    ap.add_argument("--selector-mode", default="analytic",
+                    choices=["analytic", "empirical"])
+    ap.add_argument("--selector-table", default="",
+                    help="tuning-table JSON for --selector-mode empirical "
+                         "(e.g. BENCH_allreduce.json)")
     ap.add_argument("--fusion-mb", type=float, default=4.0)
     ap.add_argument("--no-sharding-aware", action="store_true")
     ap.add_argument("--remat", action="store_true")
@@ -216,7 +275,9 @@ def main():
         out = run_one(args.arch, args.shape, args.multi_pod, args.strategy,
                       args.fusion_mb, not args.no_sharding_aware,
                       remat=args.remat, wire_dtype=args.wire_dtype,
-                      spec_overrides=overrides)
+                      spec_overrides=overrides,
+                      selector_mode=args.selector_mode,
+                      selector_table=args.selector_table)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

@@ -92,6 +92,30 @@ def roofline_table(recs, mesh="16x16"):
     return "\n".join(out)
 
 
+def schedule_table(recs):
+    """Per-bucket reduction schedules (strategy='auto' mixes algorithms
+    per step): chosen algorithms, selector-predicted comm latency vs the
+    HLO-charged collective term."""
+    rows = [r for r in recs
+            if r.get("status") == "OK" and r.get("schedule")]
+    if not rows:
+        return ""
+    out = ["### Reduction schedules (per-bucket algorithm selection)\n",
+           "| arch | shape | strategy | buckets | algorithms | "
+           "predicted comm | charged comm |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        s = r["schedule"]
+        algs = " + ".join(f"{k}×{v}" for k, v in
+                          sorted(s["algorithms"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
+            f"{s['n_buckets']} | {algs} | "
+            f"{fmt_s(s['predicted_comm_s'])} | "
+            f"{fmt_s(s['charged_comm_s'])} |")
+    return "\n".join(out) + "\n"
+
+
 def skips(recs):
     seen = set()
     out = []
@@ -117,6 +141,10 @@ def main():
     print("† skips:\n" + skips(recs) + "\n")
     print("### Roofline (single-pod 16x16, per device per step)\n")
     print(roofline_table(recs))
+    sched = schedule_table(recs)
+    if sched:
+        print()
+        print(sched)
 
 
 if __name__ == "__main__":

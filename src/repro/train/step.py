@@ -94,4 +94,7 @@ def make_train_step(model: ModelApi, optimizer: Optimizer,
         in_shardings=(ns(pspecs), ns(sspecs), batch_sh),
         out_shardings=(ns(pspecs), ns(sspecs), None),
         donate_argnums=(0, 1) if donate else ())
-    return jitted, {"params": pspecs, "opt": sspecs, "batch": bspecs}
+    # "aggregator" rides along so callers (launch/dryrun, examples) can
+    # report the resolved per-bucket schedule of strategy="auto".
+    return jitted, {"params": pspecs, "opt": sspecs, "batch": bspecs,
+                    "aggregator": agg}

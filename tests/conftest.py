@@ -1,6 +1,19 @@
 import os
 import sys
 
-# tests must see the single real CPU device (the 512-device override is
-# strictly dry-run-local, per the mandate) — so no XLA_FLAGS here.
+# The tier-1 pytest process must see the single real CPU device (the
+# 512-device override is strictly dry-run-local, per the mandate) — so
+# no XLA_FLAGS here by default.
+#
+# REPRO_TEST_DEVICES is the OPT-IN escape hatch: set it to run the main
+# process with N forced host devices (e.g. to iterate on a multidev
+# check interactively under pytest). The multidev check scripts consume
+# the same variable via tests/devflags.py, so nothing hand-rolls
+# --xla_force_host_platform_device_count strings anymore. See
+# tests/README.md for the tier-1 vs multidev split.
+_n = os.environ.get("REPRO_TEST_DEVICES")
+if _n:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={int(_n)}"
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,13 +1,9 @@
 """Multi-device correctness checks, run as a SUBPROCESS by
 test_reducers_multidev.py with 8 host devices (keeps the main pytest
 process at 1 device). Exit code 0 = all checks passed."""
-import os
+from devflags import force_host_devices
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+force_host_devices(8)
 
 import jax
 import jax.numpy as jnp

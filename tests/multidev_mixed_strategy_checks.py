@@ -1,0 +1,197 @@
+"""Mixed per-bucket aggregation checks (strategy="auto" selection), run
+as a SUBPROCESS by test_reducers_multidev.py with 8 host devices.
+
+Pins the selector subsystem end to end, for axis sizes p ∈ {3, 4, 6, 8}:
+
+  * an empirical tuning table that forces TWO distinct strategies in a
+    single step (rhd_rsa for the small fused bucket, psum for the big
+    bucket) produces gradients BIT-EXACTLY equal to an all-psum
+    aggregator on integer-valued float32 data — mixing algorithms per
+    bucket is semantics-preserving with no tolerance to hide behind;
+  * the compiled HLO contains BOTH schedules: an ``all-reduce`` op (the
+    psum bucket) and at least the RHD step count of
+    ``collective-permute``s (the rhd bucket);
+  * at p=6 the ANALYTIC selector mixes naturally (no table): the big
+    bucket sits above the rhd/ring crossover, the small fused bucket
+    below, and the permute count equals steps(rhd) + steps(ring)
+    exactly — neither an all-rhd nor an all-ring schedule compiles to
+    that count.
+
+Exit code 0 = all checks passed."""
+from devflags import force_host_devices
+
+force_host_devices(8)
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+from repro.core import selector as sel
+from repro.core.compat import shard_map
+from repro.core.reducers import allreduce_steps
+
+# Forced table: below 32KiB rhd_rsa "measures" fastest, above it psum —
+# so one step legitimately mixes our explicit schedule with the vendor
+# collective, which makes the two schedules distinguishable in HLO.
+FORCED_SPLIT = 32 * 1024
+
+
+def forced_table(ps):
+    entries = []
+    for p in ps:
+        entries.append({"p": p, "bytes": 0,
+                        "latency_us": {"rhd_rsa": 1.0, "psum": 5.0,
+                                       "ring_rsa": 9.0}})
+        entries.append({"p": p, "bytes": FORCED_SPLIT,
+                        "latency_us": {"psum": 1.0, "rhd_rsa": 5.0,
+                                       "ring_rsa": 9.0}})
+    return {"schema": sel.TABLE_SCHEMA, "entries": entries}
+
+
+def int_grads(p):
+    """Integer-valued float32 gradients: every summation order is exact,
+    so bit-equality is the bar. Small fused leaves + one 48KiB-per-shard
+    leaf that lands above FORCED_SPLIT."""
+    return {
+        "a": jnp.arange(p * 24, dtype=jnp.float32).reshape(p * 8, 3),
+        "b": jnp.arange(p * 4, dtype=jnp.float32),
+        "w": (jnp.arange(p * 12288, dtype=jnp.float32) % 1024.0),
+    }
+
+
+def run_agg(cfg, mesh, grads):
+    agg = GradientAggregator(cfg, ("data",), cache=PlanCache())
+    fn = jax.jit(shard_map(lambda g: agg(g), mesh, in_specs=P("data"),
+                           out_specs=P("data"), axis_names={"data"},
+                           check_vma=False))
+    return fn(grads), agg, fn
+
+
+def check_empirical_forced_mix_bitexact():
+    devs = jax.devices()
+    ps = (3, 4, 6, 8)
+    with tempfile.TemporaryDirectory() as td:
+        table_path = os.path.join(td, "table.json")
+        with open(table_path, "w") as f:
+            json.dump(forced_table(ps), f)
+        for p in ps:
+            mesh = Mesh(np.array(devs[:p]), ("data",))
+            grads = int_grads(p)
+            auto_cfg = AggregatorConfig(strategy="auto",
+                                        selector_mode="empirical",
+                                        selector_table=table_path,
+                                        fusion_threshold_mb=0.02)
+            ref_cfg = AggregatorConfig(strategy="psum",
+                                       fusion_threshold_mb=0.02)
+            out_auto, agg, fn = run_agg(auto_cfg, mesh, grads)
+            out_ref, _, _ = run_agg(ref_cfg, mesh, grads)
+
+            chosen = {s for _, s in agg.last_schedule}
+            assert chosen == {"rhd_rsa", "psum"}, \
+                f"p={p}: expected a forced rhd+psum mix, got " \
+                f"{agg.last_schedule}"
+            for k in grads:
+                assert (np.asarray(out_auto[k])
+                        == np.asarray(out_ref[k])).all(), \
+                    f"p={p}: mixed-strategy aggregation != psum " \
+                    f"bit-exactly at leaf {k!r}"
+
+            txt = fn.lower(grads).compile().as_text()
+            n_ar = txt.count("all-reduce(")
+            n_perm = txt.count("collective-permute(")
+            rhd_steps = allreduce_steps("rhd_rsa", p)
+            assert n_ar >= 1, \
+                f"p={p}: psum bucket produced no all-reduce op"
+            assert n_perm >= rhd_steps, \
+                f"p={p}: {n_perm} permutes < RHD step count {rhd_steps} " \
+                f"— rhd bucket missing from the compiled schedule"
+    print("empirical forced mix bit-exact ok")
+
+
+def check_analytic_natural_mix_p6():
+    """No table, no forcing: at p=6 the analytic crossover
+    (~100KiB on the ICI profile) splits a real step into rhd (small
+    fused bucket) + ring (512KiB bucket)."""
+    devs = jax.devices()
+    p = 6
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    grads = {
+        "a": jnp.arange(p * 24, dtype=jnp.float32).reshape(p * 8, 3),
+        "b": jnp.arange(p * 4, dtype=jnp.float32),
+        "w": (jnp.arange(p * 131072, dtype=jnp.float32) % 512.0),
+    }
+    auto_cfg = AggregatorConfig(strategy="auto", selector_mode="analytic",
+                                selector_link="ici",
+                                fusion_threshold_mb=0.05)
+    ref_cfg = AggregatorConfig(strategy="psum", fusion_threshold_mb=0.05)
+    out_auto, agg, fn = run_agg(auto_cfg, mesh, grads)
+    out_ref, _, _ = run_agg(ref_cfg, mesh, grads)
+
+    chosen = {s for _, s in agg.last_schedule}
+    assert chosen == {"rhd_rsa", "ring_rsa"}, agg.last_schedule
+    for k in grads:
+        assert (np.asarray(out_auto[k]) == np.asarray(out_ref[k])).all(), \
+            f"analytic mixed aggregation != psum bit-exactly at {k!r}"
+
+    txt = fn.lower(grads).compile().as_text()
+    assert "all-reduce" not in txt, \
+        "analytic auto mode must compile to explicit schedules only"
+    n_perm = txt.count("collective-permute(")
+    want = allreduce_steps("rhd_rsa", p) + allreduce_steps("ring_rsa", p)
+    all_rhd = 2 * allreduce_steps("rhd_rsa", p)
+    all_ring = 2 * allreduce_steps("ring_rsa", p)
+    assert n_perm == want, \
+        f"expected the mixed schedule's {want} permutes " \
+        f"(all-rhd={all_rhd}, all-ring={all_ring}), got {n_perm}"
+    print("analytic natural mix (p=6) ok")
+
+
+def check_auto_trains_real_step():
+    """strategy='auto' drives a real multi-device train step: loss
+    decreases and the resolved schedule mixes ≥ 2 algorithms."""
+    from repro.configs import get_spec
+    from repro.core.compat import make_mesh
+    from repro.data.synthetic import SyntheticText
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train import TrainStepConfig, make_train_step
+
+    mesh = make_mesh((6,), ("data",))
+    spec = get_spec("smollm-360m").reduced()
+    model = build_model(spec)
+    data = SyntheticText(spec.vocab_size, batch=6, seq_len=32)
+    opt = adamw(1e-3)
+    cfg = TrainStepConfig(
+        aggregator=AggregatorConfig(strategy="auto",
+                                    fusion_threshold_mb=0.25),
+        dp_axes=("data",))
+    step_fn, shardings = make_train_step(model, opt, mesh, cfg,
+                                         data.batch_at(0), donate=False)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    losses = []
+    for i in range(12):
+        params, state, m = step_fn(params, state, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    agg = shardings["aggregator"]
+    chosen = {s for _, s in agg.last_schedule}
+    assert len(chosen) >= 2, \
+        f"auto training step resolved a single strategy: " \
+        f"{agg.last_schedule}"
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+    print(f"auto train step ok: {sorted(chosen)}, "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    check_empirical_forced_mix_bitexact()
+    check_analytic_natural_mix_p6()
+    check_auto_trains_real_step()
+    print("ALL MIXED STRATEGY CHECKS PASSED")

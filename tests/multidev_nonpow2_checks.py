@@ -12,13 +12,9 @@ Asserts, for p ∈ {3, 4, 6, 8, 12} submeshes:
   * ``hierarchical`` with a non-pow2 POD axis (3 pods × 4 data) matches
     psum over both axes.
 Exit code 0 = all checks passed."""
-import os
+from devflags import force_host_devices
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
-
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+force_host_devices(12)
 
 import jax
 import jax.numpy as jnp

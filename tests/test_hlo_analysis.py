@@ -82,3 +82,71 @@ print("OK")
                           env=env)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "OK" in proc.stdout
+
+
+def test_mixed_strategy_collective_bytes_equal_wire_bytes():
+    """DESIGN.md §4 agreement invariant, now under per-bucket MIXING:
+    the HLO collective-permute bytes of a mixed-strategy (auto) step
+    must equal the sum of reducers.wire_bytes over the resolved
+    per-bucket schedule. p=6 so rhd (pre/post fold, 3.5N) and ring
+    (5N/3) charge DIFFERENT byte counts — agreement can't come from a
+    single-algorithm accident. Bucket sizes are multiples of
+    lcm(core=4, p=6)=12 elements so no padding blurs the equality."""
+    import os
+    import subprocess
+    import sys
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+import sys, json, tempfile
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+from repro.core import selector as sel
+from repro.core.compat import shard_map
+from repro.core.reducers import wire_bytes
+from repro.launch import hlo_analysis as H
+
+p = 6
+mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
+# local shard sizes: small bucket 12+24=36 elems (144B, fused),
+# big bucket 12288 elems (49152B) -> all multiples of 12
+grads = {
+    "a": jnp.ones((p * 12,), jnp.float32),
+    "b": jnp.ones((p * 24,), jnp.float32),
+    "w": jnp.ones((p * 12288,), jnp.float32),
+}
+table = {"schema": sel.TABLE_SCHEMA, "entries": [
+    {"p": p, "bytes": 0,
+     "latency_us": {"rhd_rsa": 1.0, "ring_rsa": 5.0}},
+    {"p": p, "bytes": 32768,
+     "latency_us": {"ring_rsa": 1.0, "rhd_rsa": 5.0}},
+]}
+with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                 delete=False) as f:
+    json.dump(table, f)
+    path = f.name
+agg = GradientAggregator(
+    AggregatorConfig(strategy="auto", selector_mode="empirical",
+                     selector_table=path, fusion_threshold_mb=0.02),
+    ("data",), cache=PlanCache())
+fn = jax.jit(shard_map(lambda g: agg(g), mesh, in_specs=P("data"),
+                       out_specs=P("data"), axis_names={"data"},
+                       check_vma=False))
+txt = fn.lower(grads).compile().as_text()
+assert len({s for _, s in agg.last_schedule}) == 2, agg.last_schedule
+want = sum(wire_bytes(s, b, p) for b, s in agg.last_schedule)
+got = H.analyze(txt).collective_bytes.get("collective-permute", 0)
+assert got == want, (got, want, agg.last_schedule)
+print("OK", got, want)
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code % os.path.abspath(src)],
+                          capture_output=True, text=True, timeout=300,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-2000:]}"
+    assert "OK" in proc.stdout

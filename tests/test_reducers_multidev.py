@@ -1,5 +1,8 @@
-"""Multi-device reducer/aggregator/train correctness — one subprocess
-with 8 host devices (the main pytest process stays at 1 device)."""
+"""Multi-device reducer/aggregator/train correctness — each check file
+runs as one subprocess with forced host devices (the main pytest
+process stays at 1 device). The runner passes the device count through
+the REPRO_TEST_DEVICES env hook (see tests/devflags.py and
+tests/README.md) instead of each script hand-rolling XLA_FLAGS."""
 import os
 import subprocess
 import sys
@@ -7,16 +10,21 @@ import sys
 import pytest
 
 
-@pytest.mark.timeout(900)
-def test_multidev_checks():
-    script = os.path.join(os.path.dirname(__file__), "multidev_checks.py")
+def _run_checks(script_name: str, devices: int, sentinel: str):
+    script = os.path.join(os.path.dirname(__file__), script_name)
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
+    env["REPRO_TEST_DEVICES"] = str(devices)
     proc = subprocess.run([sys.executable, script], capture_output=True,
                           text=True, timeout=880, env=env)
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
-    assert "ALL MULTIDEV CHECKS PASSED" in proc.stdout
+    assert sentinel in proc.stdout
+
+
+@pytest.mark.timeout(900)
+def test_multidev_checks():
+    _run_checks("multidev_checks.py", 8, "ALL MULTIDEV CHECKS PASSED")
 
 
 @pytest.mark.timeout(900)
@@ -24,12 +32,15 @@ def test_multidev_nonpow2_checks():
     """rhd_rsa on p ∈ {3, 4, 6, 8, 12}: bit-exact vs psum, compiled to
     the RHD ppermute schedule (no ring/psum fallback), and hierarchical
     over a non-pow2 pod axis — deviation D2 removal."""
-    script = os.path.join(os.path.dirname(__file__),
-                          "multidev_nonpow2_checks.py")
-    env = dict(os.environ)
-    env.pop("XLA_FLAGS", None)
-    proc = subprocess.run([sys.executable, script], capture_output=True,
-                          text=True, timeout=880, env=env)
-    assert proc.returncode == 0, \
-        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}"
-    assert "ALL NONPOW2 CHECKS PASSED" in proc.stdout
+    _run_checks("multidev_nonpow2_checks.py", 12,
+                "ALL NONPOW2 CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
+def test_multidev_mixed_strategy_checks():
+    """strategy='auto' per-bucket selection on p ∈ {3, 4, 6, 8}:
+    empirically-forced rhd+psum mix and the p=6 analytic rhd+ring mix
+    are bit-exact with psum, the compiled HLO contains both schedules,
+    and a real train step mixes ≥ 2 algorithms."""
+    _run_checks("multidev_mixed_strategy_checks.py", 8,
+                "ALL MIXED STRATEGY CHECKS PASSED")

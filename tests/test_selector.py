@@ -1,0 +1,226 @@
+"""Selector unit tests: analytic argmin faithfulness, the paper's
+crossover structure under PAPER_LINK, switch-point fusion alignment,
+and the empirical tuning-table JSON round-trip (DESIGN.md §3.5)."""
+import json
+import math
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import fusion
+from repro.core import selector as S
+from repro.core.aggregator import AggregatorConfig
+
+GRID_P = (2, 3, 4, 6, 8, 12, 16, 24)
+GRID_BYTES = (8, 256, 4096, 65536, 1 << 20, 16 << 20, 256 << 20)
+
+
+def _argmin(candidates, n, p, link):
+    best, best_t = None, math.inf
+    for s in candidates:
+        t = cm.allreduce_latency(s, n, p, link=link)
+        if t < best_t:
+            best, best_t = s, t
+    return best
+
+
+def test_analytic_select_is_cost_model_argmin():
+    """Analytic mode IS the cost model: for every (bytes, p) on the
+    grid the selection equals the argmin over the candidate pool."""
+    for link in (cm.ICI, cm.PAPER_LINK, cm.DCN):
+        sel = S.AnalyticSelector(link=link)
+        for p in GRID_P:
+            for n in GRID_BYTES:
+                assert sel.select(n, (p,)) == \
+                    _argmin(sel.candidates, n, p, link), (p, n)
+
+
+def test_paper_link_crossover_rhd_below_bandwidth_optimal_above():
+    """The paper's Fig. 6 structure on its own link constants: RHD wins
+    the latency-bound regime, a bandwidth-optimal schedule wins above
+    the crossover."""
+    sel = S.AnalyticSelector(link=cm.PAPER_LINK)
+    for p in (6, 12, 24):
+        c = S.crossover_bytes(p, link=cm.PAPER_LINK)
+        assert 0 < c < math.inf, (p, c)
+        assert sel.select(max(1, int(c * 0.5)), (p,)) == "rhd_rsa"
+        assert sel.select(int(c * 2), (p,)) == "ring_rsa"
+
+
+def test_crossover_bytes_monotone_in_p():
+    """More ranks -> more ring alpha terms -> RHD stays competitive to
+    larger messages: the crossover grows with p. (p=3 is the degenerate
+    0: the pre/post fold erases RHD's step advantage entirely; pow2 p
+    has no crossover at all — RHD dominates ring at every size.)"""
+    xs = [S.crossover_bytes(p, link=cm.PAPER_LINK) for p in (3, 6, 12, 24)]
+    assert xs == sorted(xs), xs
+    assert xs[0] == 0.0
+    assert xs[1] < xs[2] < xs[3], xs
+    for p in (2, 4, 8, 16):
+        assert S.crossover_bytes(p, link=cm.PAPER_LINK) == math.inf, p
+
+
+def test_crossover_table_covers_range_and_matches_select():
+    sel = S.AnalyticSelector(link=cm.PAPER_LINK)
+    segs = sel.crossover_table((12,), lo=256, hi=64 << 20)
+    assert segs[-1][0] == 64 << 20
+    # segment winners agree with point selection inside each segment
+    lo = 256
+    for hi, strat in segs:
+        mid = (lo + hi) // 2
+        assert sel.select(mid, (12,)) == strat, (lo, hi, strat)
+        lo = hi
+
+
+def test_switch_points_bracket_the_crossover():
+    sel = S.AnalyticSelector(link=cm.PAPER_LINK)
+    c = S.crossover_bytes(6, link=cm.PAPER_LINK)
+    pts = sel.switch_points((6,), hi=16 << 20)
+    assert pts, "p=6 must have at least one switch point"
+    assert any(abs(pt - c) / c < 0.05 for pt in pts), (pts, c)
+    # cached: second call returns the identical tuple object
+    assert sel.switch_points((6,), hi=16 << 20) is pts
+
+
+def test_two_axis_selection_small_flat_large_hierarchical():
+    """On the 2-axis (pod, data) mesh: tiny messages avoid the
+    hierarchical schedule's extra alpha terms, huge messages take it to
+    keep N/d (not N) off the cross-pod links."""
+    sel = S.AnalyticSelector()
+    assert sel.select(8, (2, 16)) != "hierarchical"
+    assert sel.select(64 << 20, (2, 16)) == "hierarchical"
+
+
+def test_fusion_aligns_bucket_boundaries_to_switch_points():
+    """Selector-aware fusion: a fused bucket never straddles an
+    algorithm crossover."""
+    import jax
+
+    leaves = {f"l{i}": jax.ShapeDtypeStruct((10240,), "float32")
+              for i in range(6)}                      # 6 x 40KiB
+    switch = 100 * 1024
+    plan = fusion.build_plan(leaves, threshold_bytes=1 << 20,
+                             switch_points=(switch,))
+    assert plan.switch_points == (switch,)
+    sizes = [b.size * 4 for b in plan.buckets]
+    # without alignment all six fuse into one 240KiB bucket
+    base = fusion.build_plan(leaves, threshold_bytes=1 << 20)
+    assert len(base.buckets) == 1
+    assert len(plan.buckets) == 3 and all(s == 80 * 1024 for s in sizes)
+
+
+def test_fusion_switch_points_compare_in_wire_dtype_bytes():
+    """Switch points come from the selector, which sees WIRE bytes
+    (bf16 grads reduced in f32 are 2x their stored size): crossing must
+    be evaluated on element count × switch_itemsize, not leaf bytes."""
+    import jax
+
+    # 6 x 10240 bf16 elements = 20KiB stored, 40KiB on the wire (f32)
+    leaves = {f"l{i}": jax.ShapeDtypeStruct((10240,), "bfloat16")
+              for i in range(6)}
+    switch = 100 * 1024                       # wire-byte crossover
+    naive = fusion.build_plan(leaves, threshold_bytes=1 << 20,
+                              switch_points=(switch,))
+    # leaf-byte comparison packs 120KiB of wire bytes into one bucket —
+    # straddling the 100KiB crossover
+    assert any(b.size * 4 > switch for b in naive.buckets)
+    plan = fusion.build_plan(leaves, threshold_bytes=1 << 20,
+                             switch_points=(switch,), switch_itemsize=4)
+    assert all(b.size * 4 <= switch for b in plan.buckets)
+    assert len(plan.buckets) == 3             # 2 leaves (80KiB wire) each
+
+
+def test_empirical_roundtrip_through_json(tmp_path):
+    """Table built from the cost model, serialized, loaded back: the
+    empirical selector reproduces the analytic selections at every
+    table point."""
+    table = S.build_analytic_table(
+        ps=(4, 6, 12), sizes=(1024, 65536, 1 << 20, 16 << 20),
+        link=cm.PAPER_LINK)
+    S.validate_table(table)
+    path = str(tmp_path / "table.json")
+    S.save_table(table, path)
+    loaded = S.load_table(path)
+    assert loaded == json.loads(json.dumps(table))  # JSON-clean
+
+    emp = S.EmpiricalSelector(loaded)
+    ana = S.AnalyticSelector(link=cm.PAPER_LINK)
+    for p in (4, 6, 12):
+        for n in (1024, 65536, 1 << 20, 16 << 20):
+            assert emp.select(n, (p,)) == ana.select(n, (p,)), (p, n)
+    # off-grid bytes snap to the largest measured size below
+    assert emp.select(65536 + 5, (6,)) == emp.select(65536, (6,))
+    # unmeasured p snaps to the nearest measured process count
+    assert emp.select(1024, (5,)) == emp.select(1024, (4,))
+
+
+def test_validate_table_rejects_garbage():
+    good = S.build_analytic_table(ps=(4,), sizes=(1024,))
+    S.validate_table(good)
+    bad_schema = dict(good, schema="nope/v0")
+    with pytest.raises(ValueError, match="schema"):
+        S.validate_table(bad_schema)
+    with pytest.raises(ValueError, match="entries"):
+        S.validate_table({"schema": S.TABLE_SCHEMA, "entries": []})
+    bad_strategy = json.loads(json.dumps(good))
+    bad_strategy["entries"][0]["latency_us"]["warp_drive"] = 1.0
+    with pytest.raises(ValueError, match="unknown strategy"):
+        S.validate_table(bad_strategy)
+    bad_bytes = json.loads(json.dumps(good))
+    bad_bytes["entries"][0]["bytes"] = -1
+    with pytest.raises(ValueError, match="bytes"):
+        S.validate_table(bad_bytes)
+    dup = json.loads(json.dumps(good))
+    dup["entries"].append(dup["entries"][0])
+    with pytest.raises(ValueError, match="duplicate"):
+        S.validate_table(dup)
+    neg_lat = json.loads(json.dumps(good))
+    neg_lat["entries"][0]["latency_us"]["rhd_rsa"] = 0.0
+    with pytest.raises(ValueError, match="latency_us"):
+        S.validate_table(neg_lat)
+
+
+def test_selector_fingerprints_distinguish_configs(tmp_path):
+    a = S.AnalyticSelector(link=cm.ICI)
+    b = S.AnalyticSelector(link=cm.PAPER_LINK)
+    assert a.fingerprint() != b.fingerprint()
+    t1 = S.build_analytic_table(ps=(4,), sizes=(1024,))
+    t2 = S.build_analytic_table(ps=(8,), sizes=(1024,))
+    assert S.EmpiricalSelector(t1).fingerprint() != \
+        S.EmpiricalSelector(t2).fingerprint()
+
+
+def test_make_selector_and_config_validation(tmp_path):
+    assert S.make_selector("analytic").mode == "analytic"
+    with pytest.raises(ValueError, match="tuning table"):
+        S.make_selector("empirical")
+    with pytest.raises(ValueError, match="mode"):
+        S.make_selector("vibes")
+    with pytest.raises(ValueError, match="link"):
+        S.AnalyticSelector(link="warp")
+
+    AggregatorConfig(strategy="auto").validate()
+    with pytest.raises(ValueError, match="selector_table"):
+        AggregatorConfig(strategy="auto",
+                         selector_mode="empirical").validate()
+    with pytest.raises(ValueError, match="selector_mode"):
+        AggregatorConfig(selector_mode="vibes").validate()
+    with pytest.raises(ValueError, match="selector_link"):
+        AggregatorConfig(selector_link="warp").validate()
+    with pytest.raises(ValueError, match="strategy"):
+        AggregatorConfig(strategy="nope").validate()
+
+
+def test_bench_artifact_is_a_valid_tuning_table():
+    """The repo-root trajectory artifact written by
+    benchmarks/allreduce_micro.py --emit-table must always load into
+    the empirical selector."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_allreduce.json")
+    table = S.load_table(path)
+    emp = S.EmpiricalSelector(table)
+    for p in table["meta"]["ps"]:
+        # the artifact RECORDS ps_gather wall-clock, but the baseline is
+        # never auto-selected (candidate policy, DESIGN.md §3.5)
+        assert emp.select(1024, (p,)) in S.DEFAULT_CANDIDATES
