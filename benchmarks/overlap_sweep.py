@@ -1,0 +1,129 @@
+"""Overlap sweep: model × device count × strategy, overlap on/off.
+
+For each (model, p, strategy) the timeline simulator (core/overlap.py)
+plays bucket ready-times against per-bucket cost-model latencies and
+reports:
+
+  * ``step_serial_s``   — overlap OFF: compute + fully-serialized comm
+                          (what ``cost_model.step_time(..., 0.0)`` and
+                          the seed's post-backward block charge);
+  * ``step_overlap_s``  — overlap ON: the timeline's step time, with
+                          communication hidden under the backward to the
+                          extent bucket readiness allows;
+  * ``predicted_hidden_frac`` — the fraction of comm latency the
+                          timeline PREDICTS the backward hides, vs
+  * ``charged_hidden_frac``   — the fraction the serialized accounting
+                          CHARGES as hidden (always 0): the
+                          predicted-vs-charged gap is the win the
+                          overlap subsystem claims.
+
+    PYTHONPATH=src python benchmarks/overlap_sweep.py [--emit out.json]
+
+A default-grid run refreshes the repo-root ``BENCH_overlap.json``
+trajectory artifact (schema ``repro/overlap-sim/v1``); the sweep is
+fully analytic and deterministic, so the artifact tracks cost-model and
+scheduler changes across PRs, not measurement noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core import cost_model as cm
+from repro.core import overlap as ov
+from repro.models.cnn import PAPER_MODELS
+
+try:
+    from benchmarks.scaling import (BATCH_PER_DEV, FUSION_BYTES,
+                                    MODEL_VARIABLES, PROFILES,
+                                    compute_seconds)
+except ImportError:     # invoked as `python benchmarks/overlap_sweep.py`
+    from scaling import (BATCH_PER_DEV, FUSION_BYTES, MODEL_VARIABLES,
+                         PROFILES, compute_seconds)
+
+SCHEMA = "repro/overlap-sim/v1"
+SWEEP_PS = [4, 8, 16, 64]
+STRATEGIES = ("rhd_rsa", "ring_rsa", "psum")
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_overlap.json")
+
+
+def sweep_entries(profile: str = "paper", ps=SWEEP_PS,
+                  strategies=STRATEGIES) -> list[dict]:
+    prof = PROFILES[profile]
+    entries = []
+    for model, info in PAPER_MODELS.items():
+        compute_s = compute_seconds(model, prof)
+        grad_bytes = info["params"] * 4
+        for p in ps:
+            for strategy in strategies:
+                tl = cm.step_time_timeline(
+                    compute_s, grad_bytes, MODEL_VARIABLES[model],
+                    FUSION_BYTES, strategy, p, link=prof.link)
+                serial = compute_s + tl.comm_s
+                entries.append({
+                    "model": model, "p": p, "strategy": strategy,
+                    "link": profile,
+                    "comm_s": tl.comm_s,
+                    "predicted_hidden_frac": tl.overlap_fraction,
+                    "charged_hidden_frac": 0.0,
+                    "exposed_comm_s": tl.exposed_comm_s,
+                    "step_overlap_s": tl.step_s,
+                    "step_serial_s": serial,
+                    "speedup": serial / tl.step_s if tl.step_s else 1.0,
+                    "n_buckets": len(tl.events),
+                })
+    return entries
+
+
+def build_record(profile: str = "paper") -> dict:
+    return {
+        "schema": SCHEMA,
+        "entries": sweep_entries(profile),
+        "meta": {
+            "profile": profile,
+            "backward_fraction": ov.BACKWARD_FRACTION,
+            "fusion_bytes": FUSION_BYTES,
+            "batch_per_dev": BATCH_PER_DEV,
+            "ps": list(SWEEP_PS),
+            "strategies": list(STRATEGIES),
+        },
+    }
+
+
+def run(csv=True):
+    lines = []
+    for e in sweep_entries("paper"):
+        lines.append(
+            f"overlap_sweep.{e['model']}.{e['strategy']},"
+            f"{e['step_overlap_s'] * 1e6:.1f},"
+            f"p={e['p']} hidden={e['predicted_hidden_frac']:.2f} "
+            f"serial_us={e['step_serial_s'] * 1e6:.1f} "
+            f"speedup={e['speedup']:.3f} buckets={e['n_buckets']}")
+    return lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit", metavar="OUT.json",
+                    help="write the sweep record (also refreshes the "
+                         "repo-root BENCH_overlap.json trajectory "
+                         "artifact)")
+    ap.add_argument("--profile", default="paper",
+                    choices=sorted(PROFILES))
+    args = ap.parse_args(argv)
+    rec = build_record(args.profile)
+    if args.emit:
+        for path in (args.emit, ARTIFACT):
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, sort_keys=True)
+                f.write("\n")
+        print(f"wrote {len(rec['entries'])} entries to {args.emit} and "
+              f"{os.path.normpath(ARTIFACT)}")
+        return
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (allreduce_micro, batch_size, fusion_sweep,
-                            plan_cache, scaling, tf_cnn_analogue)
+                            overlap_sweep, plan_cache, scaling,
+                            tf_cnn_analogue)
 
     sections = [
         ("Fig2_batch_size", lambda: batch_size.run(
@@ -26,6 +27,7 @@ def main() -> None:
             measure=not args.fast)),
         ("Fig3_7_8_9_scaling", scaling.run),
         ("SecIIIC_fusion_sweep", fusion_sweep.run),
+        ("SecIIIC2_overlap_sweep", overlap_sweep.run),
         ("SecVB_plan_cache", plan_cache.run),
     ]
     if not args.fast:

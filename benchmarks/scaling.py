@@ -14,13 +14,19 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import cost_model as cm
-from repro.core import hw
+from repro.core import hw, overlap as ov
 from repro.models.cnn import PAPER_MODELS
 
 BATCH_PER_DEV = 64            # paper's per-GPU sweet spot (Fig. 2)
 WORKERS = [1, 2, 4, 8, 16, 32, 64, 128]
-OVERLAP = 0.5                 # grad comm overlapped with backward
-N_VARIABLES = 161             # ResNet-50 trainable variables (PS RPCs)
+FUSION_BYTES = 4 * 2 ** 20    # Horovod Tensor Fusion threshold (Sec. III-C2)
+
+# Trainable-variable counts: how many gradient tensors each model hands
+# the runtime per step.  ResNet-50's 161 is the paper's number (its PS
+# pays one RPC per variable); MobileNet-v1 / NASNet-large are estimates
+# from the layer structure (analytic-only, DESIGN.md D4).
+MODEL_VARIABLES = {"resnet50": 161, "mobilenet": 83, "nasnet-large": 930}
+N_VARIABLES = MODEL_VARIABLES["resnet50"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,14 +40,12 @@ class HwProfile:
     # on a shared, randomly-placed dragonfly (Piz Daint, paper Sec. VI-D)
     # vs a dedicated deterministic ICI torus (v5e: ~0).
     sync_s: float = 0.0
-    overlap: float = OVERLAP
 
 
 PROFILES = {
     "paper": HwProfile("paper", cm.PAPER_P100_FLOPS, 0.19,
                        cm.LinkParams(alpha_s=5e-6, bandwidth=3e9),
-                       cm.LinkParams(50e-6, 3e9), sync_s=6e-3,
-                       overlap=0.3),
+                       cm.LinkParams(50e-6, 3e9), sync_s=6e-3),
     "v5e": HwProfile("v5e", hw.V5E.peak_bf16_flops, 0.45, cm.ICI,
                      cm.GRPC),
 }
@@ -50,33 +54,63 @@ DESIGNS = ("gRPC_PS", "Baidu_ring", "Horovod_NCCL2", "Horovod_MPI",
            "Horovod_MPI_Opt")
 
 
-def step_time(model: str, p: int, design: str, prof: HwProfile) -> float:
-    info = PAPER_MODELS[model]
-    fwd_bwd_flops = 3 * info["gflops"] * 1e9 * BATCH_PER_DEV
-    compute_s = fwd_bwd_flops / (prof.flops * prof.mfu)
-    if p == 1:
-        return compute_s
-    grad_bytes = info["params"] * 4
+def _bucket_latency_fn(design: str, p: int, prof: HwProfile):
+    """Per-message allreduce latency for one fused bucket under each
+    design, plus the design's message granularity: the PS transport pays
+    one RPC per VARIABLE (no fusion — the paper's gRPC pain point), the
+    Horovod-family designs reduce FUSED buckets."""
     if design == "gRPC_PS":
-        # sharded PS over ~p/8 server processes + per-variable RPCs
-        comm = cm.allreduce_latency("ps_gather", grad_bytes, p,
-                                    link=prof.grpc,
-                                    ps_shards=max(p // 8, 1))
-        comm += N_VARIABLES * prof.grpc.alpha_s
-    elif design == "Baidu_ring":
-        comm = cm.allreduce_latency("ring_rsa", grad_bytes, p,
-                                    link=prof.link)
-    elif design == "Horovod_NCCL2":
-        comm = cm.allreduce_latency("psum", grad_bytes, p, link=prof.link)
-    elif design == "Horovod_MPI":
-        comm = cm.allreduce_latency_host_staged("rhd_rsa", grad_bytes, p,
-                                                link=prof.link)
-    else:                                      # Horovod_MPI_Opt
-        comm = cm.allreduce_latency("rhd_rsa", grad_bytes, p,
-                                    link=prof.link)
+        return lambda b: cm.allreduce_latency(
+            "ps_gather", b, p, link=prof.grpc, ps_shards=max(p // 8, 1))
+    if design == "Baidu_ring":
+        return lambda b: cm.allreduce_latency("ring_rsa", b, p,
+                                              link=prof.link)
+    if design == "Horovod_NCCL2":
+        return lambda b: cm.allreduce_latency("psum", b, p, link=prof.link)
+    if design == "Horovod_MPI":
+        return lambda b: cm.allreduce_latency_host_staged(
+            "rhd_rsa", b, p, link=prof.link)
+    # Horovod_MPI_Opt
+    return lambda b: cm.allreduce_latency("rhd_rsa", b, p, link=prof.link)
+
+
+def compute_seconds(model: str, prof: HwProfile) -> float:
+    """Per-device fwd+bwd compute time (3x forward FLOPs at the
+    profile's MFU) — shared with benchmarks/overlap_sweep.py so the
+    BENCH_overlap.json trajectory can never desynchronize from the
+    scaling claims."""
+    info = PAPER_MODELS[model]
+    return 3 * info["gflops"] * 1e9 * BATCH_PER_DEV \
+        / (prof.flops * prof.mfu)
+
+
+def step_timeline(model: str, p: int, design: str,
+                  prof: HwProfile) -> ov.Timeline:
+    """Timeline-simulated step: every design overlaps communication
+    with backward compute to the extent bucket readiness allows (the
+    wait-free-backprop schedule of core/overlap.py) — replacing the
+    hand-set overlap fraction the old model took on faith."""
+    info = PAPER_MODELS[model]
+    compute_s = compute_seconds(model, prof)
+    grad_bytes = info["params"] * 4
+    n_vars = MODEL_VARIABLES[model]
+    if p == 1:
+        return ov.model_timeline(0.0, 0, FUSION_BYTES, compute_s,
+                                 latency_fn=lambda b: 0.0)
+    # PS: one RPC per variable; allreduce designs: fused buckets.
+    threshold = 0 if design == "gRPC_PS" else FUSION_BYTES
+    return ov.model_timeline(grad_bytes, n_vars, threshold, compute_s,
+                             latency_fn=_bucket_latency_fn(design, p, prof),
+                             strategy=design)
+
+
+def _sync_s(p: int, prof: HwProfile) -> float:
     import math
-    sync = prof.sync_s * math.log2(p) if p > 1 else 0.0
-    return cm.step_time(compute_s, comm, prof.overlap) + sync
+    return prof.sync_s * math.log2(p) if p > 1 else 0.0
+
+
+def step_time(model: str, p: int, design: str, prof: HwProfile) -> float:
+    return step_timeline(model, p, design, prof).step_s + _sync_s(p, prof)
 
 
 def throughput(model: str, p: int, design: str, prof: HwProfile) -> float:
@@ -90,13 +124,18 @@ def run(csv=True):
             base = throughput(model, 1, "Horovod_MPI_Opt", prof)
             for design in DESIGNS:
                 for p in WORKERS:
-                    t = throughput(model, p, design, prof)
+                    # one simulation per row: step time, throughput and
+                    # the hidden fraction all derive from the same tl
+                    tl = step_timeline(model, p, design, prof)
+                    st = tl.step_s + _sync_s(p, prof)
+                    t = p * BATCH_PER_DEV / st
                     eff = t / (base * p)
                     lines.append(
                         f"scaling.{pname}.{model}.{design},"
-                        f"{step_time(model, p, design, prof) * 1e6:.1f},"
+                        f"{st * 1e6:.1f},"
                         f"p={p} images_per_s={t:.0f} "
-                        f"efficiency={eff:.3f}")
+                        f"efficiency={eff:.3f} "
+                        f"comm_hidden={tl.overlap_fraction:.2f}")
     # §Claims headline numbers (paper profile)
     prof = PROFILES["paper"]
     r50_64 = throughput("resnet50", 64, "Horovod_MPI_Opt", prof) / \

@@ -1,8 +1,12 @@
 """Core contribution: CUDA-Aware-MPI-Allreduce-as-JAX — explicit
-allreduce algorithms, tensor fusion, the plan (pointer) cache, and the
-message-size-aware algorithm selector (MVAPICH2-style tuning table)."""
+allreduce algorithms, tensor fusion, the plan (pointer) cache, the
+message-size-aware algorithm selector (MVAPICH2-style tuning table),
+and the Horovod-style overlap scheduler + timeline simulator."""
 from .aggregator import AggregatorConfig, GradientAggregator
 from .fusion import FusionPlan, build_plan
+from .overlap import (BACKWARD_FRACTION, BucketTask, Timeline,
+                      TimelineEvent, bucket_ready_times, model_timeline,
+                      readiness_order, simulate, simulate_plan)
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 from .reducers import STRATEGIES, allreduce, allreduce_steps, wire_bytes
 from .selector import (AnalyticSelector, EmpiricalSelector, Selector,
@@ -16,4 +20,7 @@ __all__ = [
     "AnalyticSelector", "EmpiricalSelector", "Selector",
     "build_analytic_table", "crossover_bytes", "load_table",
     "make_selector", "save_table", "validate_table",
+    "BACKWARD_FRACTION", "BucketTask", "Timeline", "TimelineEvent",
+    "bucket_ready_times", "model_timeline", "readiness_order",
+    "simulate", "simulate_plan",
 ]

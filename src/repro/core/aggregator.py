@@ -23,7 +23,8 @@ from typing import Hashable, Sequence
 import jax
 import jax.numpy as jnp
 
-from . import compat, fusion, reducers, selector as selector_mod
+from . import compat, fusion, overlap as overlap_mod, reducers, \
+    selector as selector_mod
 from .compat import axis_size
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 
@@ -62,6 +63,11 @@ class AggregatorConfig:
                                        # (selector.LINK_PROFILES)
     align_buckets: bool = True         # align fusion boundaries to the
                                        # selector's algorithm switch points
+    overlap: bool = False              # issue per-bucket reductions INSIDE
+                                       # the backward (wait-free backprop,
+                                       # core/overlap.py / DESIGN.md §3.6)
+                                       # via overlap_params; __call__ is
+                                       # the post-backward path
 
     @property
     def threshold_bytes(self) -> int:
@@ -114,8 +120,13 @@ class GradientAggregator:
         self.cache = cache if cache is not None else GLOBAL_PLAN_CACHE
         self.selector = config.make_selector()
         # (bucket bytes, strategy) per bucket, recorded at trace time by
-        # the last __call__ / schedule() — what launch/dryrun reports.
+        # the last __call__ / overlap_params / schedule() — what
+        # launch/dryrun reports.  For overlap_params the tuple is in
+        # readiness order, not plan order.
         self.last_schedule: tuple = ()
+        # FusionPlan of the last schedule() call — feeds the overlap
+        # timeline simulator (bucket ready-times need leaf layout).
+        self.last_plan: "fusion.FusionPlan | None" = None
 
     # -- per-bucket strategy resolution -------------------------------------
 
@@ -167,6 +178,7 @@ class GradientAggregator:
         plan = fusion.build_plan(grads, cfg.threshold_bytes, groups=groups,
                                  fuse=cfg.fuse, switch_points=switch,
                                  switch_itemsize=self._wire_itemsize())
+        self.last_plan = plan
         link = selector_mod.LINK_PROFILES[cfg.selector_link]
         rows = []
         for bucket in plan.buckets:
@@ -186,57 +198,120 @@ class GradientAggregator:
 
     # -- main entry point (call inside shard_map) ---------------------------
 
+    def _trace_context(self, grads, groups):
+        """(plan, axis_sizes, scale) resolved at shard_map trace time —
+        shared by the post-backward and in-backward paths."""
+        cfg = self.config
+        if not cfg.sharding_aware:
+            groups = None
+        # Mesh axis sizes are static inside the shard_map trace, so the
+        # per-bucket strategy resolution happens entirely at trace time —
+        # the compiled step hard-codes the mixed schedule.
+        axis_sizes = tuple(axis_size(ax) for ax in self.dp_axes)
+        switch, strategy_key = self._plan_context(axis_sizes)
+        plan = self.cache.get_or_build(
+            grads, cfg.threshold_bytes, groups=groups, fuse=cfg.fuse,
+            switch_points=switch, switch_itemsize=self._wire_itemsize(),
+            strategy=strategy_key, overlap=cfg.overlap)
+        dp_size = 1
+        for s in axis_sizes:
+            dp_size *= s
+        return plan, axis_sizes, 1.0 / dp_size
+
+    def _reduce_buffer(self, bucket, buf, axis_sizes, scale):
+        """Reduce ONE bucket's fused buffer: cast to the wire/accum
+        dtype, sum-allreduce with the bucket's resolved strategy, apply
+        the mean scale, cast back.  Returns (reduced, strategy)."""
+        cfg = self.config
+        accum = jnp.dtype(cfg.wire_dtype or cfg.accum_dtype)
+        orig = buf.dtype
+        if orig != accum:
+            buf = buf.astype(accum)
+        strategy = self._strategy_for(bucket, axis_sizes)
+        # chunked reducers slice along dim 0; if the bucket's leaf is
+        # model-sharded on dim 0, rotate an unsharded dim to the front
+        # so the auto sharding is never disturbed (§Perf it.0).
+        axis = _chunk_axis(bucket.group, buf.ndim)
+        if axis != 0:
+            buf = jnp.moveaxis(buf, axis, 0)
+        buf = reducers.allreduce(buf, self.dp_axes, strategy)
+        if axis != 0:
+            buf = jnp.moveaxis(buf, 0, axis)
+        return (buf * scale).astype(orig), strategy
+
     def __call__(self, grads, groups=None):
-        """Mean-allreduce ``grads`` over the data axes.
+        """Mean-allreduce ``grads`` over the data axes (post-backward
+        path: one aggregation block after ``value_and_grad``).
 
         ``groups``: optional pytree of sharding-group tags matching
         ``grads`` (from the model's parameter sharding rules); only used
         when ``config.sharding_aware`` to keep fused buffers from crossing
         auto-axis sharding classes.
         """
-        cfg = self.config
-        if not cfg.sharding_aware:
-            groups = None
-        # Mesh axis sizes are static inside the shard_map trace, so the
-        # per-bucket strategy resolution below happens entirely at trace
-        # time — the compiled step hard-codes the mixed schedule.
-        axis_sizes = tuple(axis_size(ax) for ax in self.dp_axes)
-        switch, strategy_key = self._plan_context(axis_sizes)
-        plan = self.cache.get_or_build(
-            grads, cfg.threshold_bytes, groups=groups, fuse=cfg.fuse,
-            switch_points=switch, switch_itemsize=self._wire_itemsize(),
-            strategy=strategy_key)
-
-        dp_size = 1
-        for s in axis_sizes:
-            dp_size *= s
-        scale = 1.0 / dp_size
-
-        accum = jnp.dtype(cfg.accum_dtype)
-        if cfg.wire_dtype:
-            accum = jnp.dtype(cfg.wire_dtype)
-        buffers = plan.flatten(grads)
+        plan, axis_sizes, scale = self._trace_context(grads, groups)
         reduced = []
         schedule = []
-        for bucket, buf in zip(plan.buckets, buffers):
-            orig = buf.dtype
-            if orig != accum:
-                buf = buf.astype(accum)
-            strategy = self._strategy_for(bucket, axis_sizes)
+        for bucket, buf in zip(plan.buckets, plan.flatten(grads)):
+            buf, strategy = self._reduce_buffer(bucket, buf, axis_sizes,
+                                                scale)
             schedule.append((self._bucket_bytes(bucket), strategy))
-            # chunked reducers slice along dim 0; if the bucket's leaf is
-            # model-sharded on dim 0, rotate an unsharded dim to the front
-            # so the auto sharding is never disturbed (§Perf it.0).
-            axis = _chunk_axis(bucket.group, buf.ndim)
-            if axis != 0:
-                buf = jnp.moveaxis(buf, axis, 0)
-            buf = reducers.allreduce(buf, self.dp_axes, strategy)
-            if axis != 0:
-                buf = jnp.moveaxis(buf, 0, axis)
-            buf = (buf * scale).astype(orig)
             reduced.append(buf)
         self.last_schedule = tuple(schedule)
         return plan.unflatten(reduced)
+
+    # -- overlapped (in-backward) path --------------------------------------
+
+    def _bucket_boundary(self, plan, bucket, axis_sizes, scale):
+        """Identity on the bucket's param leaves whose VJP mean-reduces
+        the cotangents — the reduction lands INSIDE the backward, gated
+        only on this bucket's own gradients."""
+        @jax.custom_vjp
+        def boundary(*leaves):
+            return leaves
+
+        def fwd(*leaves):
+            return leaves, None
+
+        def bwd(_, cts):
+            buf = plan.flatten_bucket(bucket, list(cts))
+            buf, _ = self._reduce_buffer(bucket, buf, axis_sizes, scale)
+            return tuple(plan.unflatten_bucket(bucket, buf))
+
+        boundary.defvjp(fwd, bwd)
+        return boundary
+
+    def overlap_params(self, params, groups=None):
+        """Stage per-bucket reductions inside the backward pass.
+
+        Returns ``params`` unchanged in value, but every fusion bucket's
+        leaves pass through a ``jax.custom_vjp`` boundary whose backward
+        rule mean-allreduces that bucket's cotangents (the Horovod
+        wait-free-backprop analogue, DESIGN.md §3.6): each collective
+        depends only on its own bucket's gradients, so XLA is free to
+        interleave it with the remaining backward compute instead of
+        emitting one trailing collective block.
+
+        Call INSIDE the function being differentiated; the gradients
+        that come out of ``value_and_grad`` are then already aggregated
+        — do not also pass them through :meth:`__call__`.  Buckets are
+        wrapped in readiness order (last layer's bucket first), matching
+        the order their reductions can launch.
+        """
+        plan, axis_sizes, scale = self._trace_context(params, groups)
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        out = list(flat)
+        schedule = []
+        for bi in overlap_mod.readiness_order(plan):
+            bucket = plan.buckets[bi]
+            schedule.append((self._bucket_bytes(bucket),
+                             self._strategy_for(bucket, axis_sizes)))
+            boundary = self._bucket_boundary(plan, bucket, axis_sizes,
+                                             scale)
+            wrapped = boundary(*[flat[i] for i in bucket.leaf_indices])
+            for i, leaf in zip(bucket.leaf_indices, wrapped):
+                out[i] = leaf
+        self.last_schedule = tuple(schedule)
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # -- scalars (loss/metrics) ---------------------------------------------
 

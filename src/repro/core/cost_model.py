@@ -169,11 +169,33 @@ def fused_latency(strategy: str, leaf_bytes: list[float], p: int,
 
 def step_time(compute_s: float, comm_s: float,
               overlap_fraction: float = 0.0) -> float:
-    """Application-level step time with partial compute/comm overlap.
-    overlap_fraction=0 reproduces the paper's synchronous Horovod numbers
-    conservatively; >0 models backward/allreduce pipelining."""
+    """Application-level step time with a HAND-SET compute/comm overlap
+    fraction.  Kept as the closed-form baseline; production callers
+    should prefer :func:`step_time_timeline`, which derives the overlap
+    from bucket readiness instead of taking it on faith."""
     overlapped = min(comm_s, compute_s * overlap_fraction)
     return compute_s + comm_s - overlapped
+
+
+def step_time_timeline(compute_s: float, total_bytes: float,
+                       n_variables: int, threshold_bytes: float,
+                       strategy: str, p: int,
+                       link: LinkParams = ICI,
+                       backward_fraction: float | None = None):
+    """Timeline-backed step time: the model's gradient variables fuse
+    into buckets, become ready in reverse order through the backward,
+    and their allreduces play out on a serialized comm channel
+    (core/overlap.py).  Returns the full Timeline — ``.step_s`` is the
+    drop-in replacement for :func:`step_time`'s scalar, and
+    ``.overlap_fraction`` is the DERIVED overlap the old API asked the
+    caller to guess."""
+    from . import overlap as overlap_mod
+    if backward_fraction is None:
+        backward_fraction = overlap_mod.BACKWARD_FRACTION
+    return overlap_mod.model_timeline(
+        total_bytes, n_variables, threshold_bytes, compute_s,
+        latency_fn=lambda b: allreduce_latency(strategy, b, p, link=link),
+        strategy=strategy, backward_fraction=backward_fraction)
 
 
 def scaling_efficiency(per_device_throughput_1: float,

@@ -66,37 +66,47 @@ class FusionPlan:
 
     # -- transforms ---------------------------------------------------------
 
+    def flatten_bucket(self, bucket: "Bucket",
+                       leaves: Sequence[jax.Array]) -> jax.Array:
+        """Fuse ONE bucket's leaf arrays (given in ``leaf_indices``
+        order) into its flat reduction buffer.  Used standalone by the
+        overlapped (in-backward) path, which receives each bucket's
+        cotangents separately instead of a whole gradient pytree."""
+        if len(bucket.leaf_indices) == 1:
+            leaf = leaves[0]
+            # Preserve rank for single-leaf buckets so chunked reducers
+            # can slice along the leading dim without disturbing
+            # auto-axis shardings of trailing dims.
+            return leaf if leaf.ndim >= 1 else leaf.reshape(1)
+        return jnp.concatenate([x.reshape(-1) for x in leaves])
+
+    def unflatten_bucket(self, bucket: "Bucket",
+                         buf: jax.Array) -> list[jax.Array]:
+        """Inverse of :meth:`flatten_bucket`: split a bucket's reduced
+        buffer back into leaf arrays (``leaf_indices`` order)."""
+        if len(bucket.leaf_indices) == 1:
+            return [buf.reshape(self.leaves[bucket.leaf_indices[0]].shape)]
+        out = []
+        off = 0
+        for i in bucket.leaf_indices:
+            m = self.leaves[i]
+            out.append(jax.lax.slice_in_dim(
+                buf, off, off + m.size).reshape(m.shape))
+            off += m.size
+        return out
+
     def flatten(self, tree) -> list[jax.Array]:
         """pytree -> list of fused flat buffers (one per bucket)."""
         flat = jax.tree_util.tree_leaves(tree)
-        out = []
-        for b in self.buckets:
-            if len(b.leaf_indices) == 1:
-                i = b.leaf_indices[0]
-                leaf = flat[i]
-                # Preserve rank for single-leaf buckets so chunked reducers
-                # can slice along the leading dim without disturbing
-                # auto-axis shardings of trailing dims.
-                out.append(leaf if leaf.ndim >= 1 else leaf.reshape(1))
-            else:
-                out.append(jnp.concatenate(
-                    [flat[i].reshape(-1) for i in b.leaf_indices]))
-        return out
+        return [self.flatten_bucket(b, [flat[i] for i in b.leaf_indices])
+                for b in self.buckets]
 
     def unflatten(self, buffers: Sequence[jax.Array]):
         """Inverse of :meth:`flatten`."""
         flat: list = [None] * len(self.leaves)
         for b, buf in zip(self.buckets, buffers):
-            if len(b.leaf_indices) == 1:
-                i = b.leaf_indices[0]
-                flat[i] = buf.reshape(self.leaves[i].shape)
-            else:
-                off = 0
-                for i in b.leaf_indices:
-                    m = self.leaves[i]
-                    flat[i] = jax.lax.slice_in_dim(
-                        buf, off, off + m.size).reshape(m.shape)
-                    off += m.size
+            for i, leaf in zip(b.leaf_indices, self.unflatten_bucket(b, buf)):
+                flat[i] = leaf
         return jax.tree_util.tree_unflatten(self.treedef, flat)
 
     # -- stats --------------------------------------------------------------

@@ -1,0 +1,271 @@
+"""Overlapped gradient aggregation — the Horovod schedule, not just the
+algorithm.
+
+The paper's characterization (Sec. III-C / IV) attributes the No-gRPC
+designs' win not only to the Allreduce algorithm but to *when* it runs:
+Horovod reduces fusion buckets as their gradients become ready during
+backpropagation (wait-free backprop), so all but the tail of the
+communication hides under backward compute.  This module reproduces
+that schedule in two pieces:
+
+1. a **bucket-readiness scheduler**: fusion buckets are ordered by
+   reverse layer-readiness (the last layer's gradients are produced
+   first) and each bucket gets a ready-time from per-leaf backward-FLOP
+   estimates — the analogue of Horovod's per-tensor readiness queue;
+
+2. a discrete-event **timeline simulator**: bucket ready-times are
+   played against per-bucket allreduce latencies on a single serialized
+   communication channel (Horovod's background thread / one collective
+   stream), yielding the predicted step time, the achieved overlap
+   fraction, and an idle/serialization breakdown.  This replaces the
+   hand-set ``overlap_fraction`` scalar that ``cost_model.step_time``
+   used to take on faith.
+
+On the execution side the TPU analogue of Horovod's background thread
+is XLA's scheduler: collectives overlap backward compute whenever the
+dataflow permits it.  ``GradientAggregator.overlap_params`` makes the
+dataflow permit it — per-bucket reductions are issued inside the
+backward via ``jax.custom_vjp`` boundaries, so no all-gradients barrier
+(e.g. a pre-aggregation global-norm clip) serializes the collectives
+into one trailing block.  Idealizations are registered as DESIGN.md D7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+# Backward share of a training step's compute: backward ≈ 2x forward
+# FLOPs (d/dW and d/dx matmuls per forward matmul), so of the 3x-forward
+# total, 2/3 is overlappable backward time and 1/3 (forward + optimizer)
+# is serial.
+BACKWARD_FRACTION = 2.0 / 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketTask:
+    """One fusion bucket's communication task."""
+    index: int            # bucket index in plan order
+    n_bytes: int          # wire bytes of the fused message
+    strategy: str         # resolved allreduce algorithm
+    ready_s: float        # when the bucket's grads are complete
+                          # (0 = backward start)
+    comm_s: float         # predicted allreduce latency
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineEvent:
+    task: BucketTask
+    start_s: float
+    end_s: float
+
+    @property
+    def wait_s(self) -> float:
+        """Time the bucket sat ready while the channel was busy."""
+        return self.start_s - self.task.ready_s
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """Result of playing bucket ready-times against a single serialized
+    communication channel."""
+    events: tuple[TimelineEvent, ...]
+    backward_s: float     # overlappable compute span (t=0 .. backward_s)
+    serial_s: float       # non-overlappable compute (forward + optimizer)
+    comm_s: float         # total communication latency
+    hidden_comm_s: float  # communication under the backward span
+    exposed_comm_s: float # communication past the backward span
+    idle_s: float         # channel idle between events (buckets not
+                          # ready yet) — serialization headroom
+
+    @property
+    def step_s(self) -> float:
+        end = self.events[-1].end_s if self.events else 0.0
+        return self.serial_s + max(self.backward_s, end)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of communication latency hidden under backward
+        compute (1.0 when there is no communication at all)."""
+        if self.comm_s <= 0.0:
+            return 1.0
+        return self.hidden_comm_s / self.comm_s
+
+    def to_dict(self) -> dict:
+        return {
+            "backward_s": self.backward_s,
+            "serial_s": self.serial_s,
+            "comm_s": self.comm_s,
+            "hidden_comm_s": self.hidden_comm_s,
+            "exposed_comm_s": self.exposed_comm_s,
+            "idle_s": self.idle_s,
+            "step_s": self.step_s,
+            "overlap_fraction": self.overlap_fraction,
+            "n_buckets": len(self.events),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Bucket-readiness scheduler
+# ---------------------------------------------------------------------------
+
+def leaf_backward_costs(leaves) -> tuple[float, ...]:
+    """Per-leaf backward-cost weights from the fusion plan's LeafMeta.
+
+    A parameter's backward FLOPs are proportional to its element count
+    (each matmul weight of size n costs ~4·n·tokens across the dW and dx
+    products), so relative cost = leaf size.  Scalar/empty leaves get
+    weight 1 so no leaf completes "for free".
+    """
+    return tuple(float(max(m.size, 1)) for m in leaves)
+
+
+def bucket_ready_times(plan, backward_s: float,
+                       costs: Sequence[float] | None = None
+                       ) -> tuple[float, ...]:
+    """Ready-time per bucket (plan order), assuming backward visits
+    leaves in REVERSE traversal order (the last layer's grads first) and
+    spends time proportional to each leaf's backward cost.
+
+    Leaf ``j`` completes once every leaf with index >= j has been
+    processed; a bucket is ready when ALL its leaves are complete, i.e.
+    at the completion time of its minimum leaf index.
+    """
+    costs = tuple(costs) if costs is not None \
+        else leaf_backward_costs(plan.leaves)
+    if len(costs) != len(plan.leaves):
+        raise ValueError(f"{len(costs)} costs for {len(plan.leaves)} leaves")
+    total = sum(costs) or 1.0
+    # completion[j] = backward_s * (sum of costs of leaves >= j) / total
+    completion = [0.0] * len(costs)
+    acc = 0.0
+    for j in range(len(costs) - 1, -1, -1):
+        acc += costs[j]
+        completion[j] = backward_s * acc / total
+    return tuple(completion[min(b.leaf_indices)] for b in plan.buckets)
+
+
+def readiness_order(plan) -> tuple[int, ...]:
+    """Bucket indices ordered earliest-ready first: descending minimum
+    leaf index (backward produces high-index leaves' grads first)."""
+    return tuple(sorted(range(len(plan.buckets)),
+                        key=lambda i: -min(plan.buckets[i].leaf_indices)))
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event timeline simulator
+# ---------------------------------------------------------------------------
+
+def simulate(tasks: Sequence[BucketTask], backward_s: float,
+             serial_s: float = 0.0) -> Timeline:
+    """Play ``tasks`` against one serialized communication channel.
+
+    Buckets are issued in readiness order (FIFO on ``ready_s``); each
+    allreduce starts when both the bucket is ready and the channel is
+    free.  Communication overlapping [0, backward_s] is hidden;
+    the remainder is exposed (the synchronization tail every rank waits
+    on).  ``serial_s`` (forward + optimizer) is added to the step time
+    but never overlaps communication.
+    """
+    ordered = sorted(tasks, key=lambda t: (t.ready_s, t.index))
+    events = []
+    free = 0.0
+    hidden = exposed = idle = comm = 0.0
+    for t in ordered:
+        start = max(t.ready_s, free)
+        if events:
+            idle += max(0.0, start - free)
+        end = start + t.comm_s
+        events.append(TimelineEvent(task=t, start_s=start, end_s=end))
+        comm += t.comm_s
+        exposed += max(0.0, end - max(start, backward_s))
+        free = end
+    exposed = min(exposed, comm)      # clamp float residue of the split
+    hidden = max(0.0, comm - exposed)
+    return Timeline(events=tuple(events), backward_s=backward_s,
+                    serial_s=serial_s, comm_s=comm, hidden_comm_s=hidden,
+                    exposed_comm_s=exposed, idle_s=idle)
+
+
+def simulate_plan(plan, schedule, compute_s: float,
+                  backward_fraction: float = BACKWARD_FRACTION,
+                  costs: Sequence[float] | None = None) -> Timeline:
+    """Timeline for a resolved aggregation schedule.
+
+    ``schedule``: one ``{"bytes", "strategy", "predicted_s"}`` row per
+    bucket in plan order (``GradientAggregator.schedule``'s format).
+    ``compute_s``: total per-step compute, split into an overlappable
+    backward span and a serial remainder by ``backward_fraction``.
+    """
+    if len(schedule) != len(plan.buckets):
+        raise ValueError(f"{len(schedule)} schedule rows for "
+                         f"{len(plan.buckets)} buckets")
+    backward_s = compute_s * backward_fraction
+    ready = bucket_ready_times(plan, backward_s, costs=costs)
+    tasks = [BucketTask(index=i, n_bytes=int(r["bytes"]),
+                        strategy=r["strategy"], ready_s=ready[i],
+                        comm_s=float(r["predicted_s"]))
+             for i, r in enumerate(schedule)]
+    return simulate(tasks, backward_s,
+                    serial_s=compute_s * (1.0 - backward_fraction))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic model timelines (analytic benchmarks: no FusionPlan in hand)
+# ---------------------------------------------------------------------------
+
+def fused_bucket_bytes(total_bytes: float, n_variables: int,
+                       threshold_bytes: float) -> list[float]:
+    """Greedy first-fit fusion of ``n_variables`` equal-size gradients
+    (the analytic stand-in for a model's variable list)."""
+    if n_variables <= 0:
+        return []
+    var = total_bytes / n_variables
+    if threshold_bytes <= 0 or var >= threshold_bytes:
+        return [var] * n_variables
+    buckets = []
+    cur = 0.0
+    for _ in range(n_variables):
+        if cur + var > threshold_bytes and cur > 0:
+            buckets.append(cur)
+            cur = 0.0
+        cur += var
+    if cur > 0:
+        buckets.append(cur)
+    return buckets
+
+
+def model_tasks(total_bytes: float, n_variables: int,
+                threshold_bytes: float, backward_s: float,
+                latency_fn: Callable[[float], float],
+                strategy: str = "?") -> list[BucketTask]:
+    """BucketTasks for an analytic model: variables are equal-size, fuse
+    greedily at ``threshold_bytes``, and become ready uniformly through
+    the backward in reverse order (bucket 0 = first layers = ready
+    last)."""
+    sizes = fused_bucket_bytes(total_bytes, n_variables, threshold_bytes)
+    total = sum(sizes) or 1.0
+    tasks = []
+    acc = 0.0
+    # walk buckets from the END of the variable list (ready first)
+    for i, b in zip(range(len(sizes) - 1, -1, -1), reversed(sizes)):
+        acc += b
+        tasks.append(BucketTask(index=i, n_bytes=int(b), strategy=strategy,
+                                ready_s=backward_s * acc / total,
+                                comm_s=float(latency_fn(b))))
+    return tasks
+
+
+def model_timeline(total_bytes: float, n_variables: int,
+                   threshold_bytes: float, compute_s: float,
+                   latency_fn: Callable[[float], float],
+                   strategy: str = "?",
+                   backward_fraction: float = BACKWARD_FRACTION
+                   ) -> Timeline:
+    """Timeline for an analytic model config (scaling / overlap-sweep
+    benchmarks): per-bucket latency from ``latency_fn`` (a closure over
+    ``cost_model.allreduce_latency`` for the design under study)."""
+    backward_s = compute_s * backward_fraction
+    tasks = model_tasks(total_bytes, n_variables, threshold_bytes,
+                        backward_s, latency_fn, strategy=strategy)
+    return simulate(tasks, backward_s,
+                    serial_s=compute_s * (1.0 - backward_fraction))

@@ -55,7 +55,8 @@ class PlanCache:
     @staticmethod
     def key_for(tree, threshold_bytes: int, groups, fuse: bool,
                 switch_points=None, switch_itemsize: int = 0,
-                strategy: Hashable = None) -> Hashable:
+                strategy: Hashable = None,
+                overlap: bool = False) -> Hashable:
         flat, treedef = jax.tree_util.tree_flatten(tree)
         shapes = tuple(tuple(x.shape) for x in flat)
         dtypes = tuple(str(jnp.dtype(x.dtype)) for x in flat)
@@ -69,15 +70,23 @@ class PlanCache:
         # switch-point alignments must never collide.
         skey = (tuple(int(s) for s in switch_points), switch_itemsize) \
             if switch_points else None
+        # `overlap` keys the aggregation MODE: the in-backward path
+        # wraps the plan's buckets in custom_vjp boundaries at trace
+        # time while the post-backward path flattens whole gradient
+        # trees — the layouts are identical today, but the modes must
+        # never alias if an overlap-specific layout (e.g. readiness-
+        # ordered fusion) is introduced.
         return (treedef, shapes, dtypes, gkey, threshold_bytes, fuse,
-                skey, strategy)
+                skey, strategy, overlap)
 
     def get_or_build(self, tree, threshold_bytes: int, groups=None,
                      fuse: bool = True, switch_points=None,
                      switch_itemsize: int = 0,
-                     strategy: Hashable = None) -> fusion.FusionPlan:
+                     strategy: Hashable = None,
+                     overlap: bool = False) -> fusion.FusionPlan:
         key = self.key_for(tree, threshold_bytes, groups, fuse,
-                           switch_points, switch_itemsize, strategy)
+                           switch_points, switch_itemsize, strategy,
+                           overlap)
         while True:
             with self._lock:
                 plan = self._plans.get(key)

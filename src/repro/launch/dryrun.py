@@ -30,7 +30,7 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                 fusion_mb: float, sharding_aware: bool = True,
                 remat: bool = False, wire_dtype: str = "",
                 spec_overrides=None, selector_mode: str = "analytic",
-                selector_table: str = ""):
+                selector_table: str = "", overlap: bool = False):
     """Returns (jitted_fn, arg_structs, aux); aux carries the
     GradientAggregator (train shapes only) so the caller can report the
     resolved per-bucket schedule."""
@@ -63,7 +63,8 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                                         sharding_aware=sharding_aware,
                                         wire_dtype=wire_dtype,
                                         selector_mode=selector_mode,
-                                        selector_table=selector_table),
+                                        selector_table=selector_table,
+                                        overlap=overlap),
             dp_axes=dp_axes)
         step, shardings = make_train_step(model, opt, mesh, cfg, specs,
                                           donate=False)
@@ -85,13 +86,16 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
     return step, (params, specs["cache"], specs["tokens"]), {}
 
 
-def _schedule_record(agg, mesh, dp_axes, params_struct,
-                     charged_comm_s: float) -> dict:
+def _schedule_record(agg, mesh, dp_axes, params_struct, roof) -> dict:
     """Resolve and summarize the per-bucket reduction schedule: which
     algorithm each fusion bucket got (one strategy everywhere unless
-    strategy='auto'), the cost-model latency the selector predicted, and
-    the collective latency the roofline actually charges from the
-    compiled HLO bytes."""
+    strategy='auto'), the cost-model latency the selector predicted, the
+    collective latency the roofline actually charges from the compiled
+    HLO bytes, and the overlap timeline — bucket ready-times played
+    against per-bucket latencies to predict how much of the comm the
+    backward hides (core/overlap.py)."""
+    from repro.core import overlap as overlap_mod
+    from repro.launch import roofline as rl
     from repro.models import param_groups
 
     axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
@@ -101,12 +105,15 @@ def _schedule_record(agg, mesh, dp_axes, params_struct,
     for r in rows:
         algorithms[r["strategy"]] = algorithms.get(r["strategy"], 0) + 1
     predicted = sum(r["predicted_s"] for r in rows)
+    timeline = overlap_mod.simulate_plan(agg.last_plan, rows,
+                                         compute_s=roof.compute_s)
     return {
         "axis_sizes": list(axis_sizes),
         "n_buckets": len(rows),
         "algorithms": algorithms,
         "predicted_comm_s": predicted,
-        "charged_comm_s": charged_comm_s,
+        "charged_comm_s": roof.collective_s,
+        "overlap": rl.overlap_report(roof, timeline),
         # cap the per-bucket listing so --all sweeps stay readable
         "buckets": [{"bytes": r["bytes"], "strategy": r["strategy"],
                      "predicted_us": round(r["predicted_s"] * 1e6, 2)}
@@ -119,7 +126,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             sharding_aware: bool = True, verbose: bool = True,
             remat: bool = False, wire_dtype: str = "",
             spec_overrides=None, selector_mode: str = "analytic",
-            selector_table: str = "") -> dict:
+            selector_table: str = "", overlap: bool = False) -> dict:
     import jax
     from repro.configs import SHAPES, get_spec, shape_supported
     from repro.core.compat import use_mesh
@@ -132,7 +139,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "strategy": strategy, "fusion_mb": fusion_mb,
            "sharding_aware": sharding_aware, "remat": remat,
-           "wire_dtype": wire_dtype,
+           "wire_dtype": wire_dtype, "overlap": overlap,
            "spec_overrides": spec_overrides or {}}
     if not ok:
         rec.update(status="SKIP", reason=why)
@@ -150,7 +157,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                           wire_dtype=wire_dtype,
                                           spec_overrides=spec_overrides,
                                           selector_mode=selector_mode,
-                                          selector_table=selector_table)
+                                          selector_table=selector_table,
+                                          overlap=overlap)
             lowered = step.lower(*args)
             t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
@@ -197,7 +205,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             if aux.get("aggregator") is not None:
                 rec["schedule"] = _schedule_record(
                     aux["aggregator"], mesh, aux["dp_axes"], args[0],
-                    charged_comm_s=roof.collective_s)
+                    roof=roof)
             if verbose:
                 print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
                       f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
@@ -218,6 +226,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                           f"[{algs}] predicted="
                           f"{sched['predicted_comm_s']*1e3:.2f}ms "
                           f"charged={sched['charged_comm_s']*1e3:.2f}ms")
+                    ov = sched["overlap"]
+                    print(f"  overlap: {ov['overlap_fraction']*100:.0f}% "
+                          f"of comm hidden — step "
+                          f"{ov['step_serial_s']*1e3:.2f}ms serial -> "
+                          f"{ov['step_overlapped_s']*1e3:.2f}ms "
+                          f"overlapped (exposed "
+                          f"{ov['exposed_comm_s']*1e3:.2f}ms)")
     except Exception as e:  # noqa: BLE001 — recorded, not swallowed
         rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
@@ -242,6 +257,9 @@ def main():
                     help="tuning-table JSON for --selector-mode empirical "
                          "(e.g. BENCH_allreduce.json)")
     ap.add_argument("--fusion-mb", type=float, default=4.0)
+    ap.add_argument("--overlap", action="store_true",
+                    help="issue per-bucket reductions inside the backward "
+                         "(aggregator.overlap_params; DESIGN.md §3.6)")
     ap.add_argument("--no-sharding-aware", action="store_true")
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--wire-dtype", default="")
@@ -277,7 +295,8 @@ def main():
                       remat=args.remat, wire_dtype=args.wire_dtype,
                       spec_overrides=overrides,
                       selector_mode=args.selector_mode,
-                      selector_table=args.selector_table)
+                      selector_table=args.selector_table,
+                      overlap=args.overlap)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

@@ -100,19 +100,28 @@ def schedule_table(recs):
             if r.get("status") == "OK" and r.get("schedule")]
     if not rows:
         return ""
-    out = ["### Reduction schedules (per-bucket algorithm selection)\n",
+    out = ["### Reduction schedules (per-bucket algorithm selection "
+           "+ predicted overlap)\n",
            "| arch | shape | strategy | buckets | algorithms | "
-           "predicted comm | charged comm |",
-           "|---|---|---|---|---|---|---|"]
+           "predicted comm | charged comm | comm hidden | step "
+           "serial→overlapped |",
+           "|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
         s = r["schedule"]
         algs = " + ".join(f"{k}×{v}" for k, v in
                           sorted(s["algorithms"].items()))
+        ov = s.get("overlap")
+        if ov:
+            hidden = f"{ov['overlap_fraction'] * 100:.0f}%"
+            step = (f"{fmt_s(ov['step_serial_s'])} → "
+                    f"{fmt_s(ov['step_overlapped_s'])}")
+        else:
+            hidden = step = "—"
         out.append(
             f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
             f"{s['n_buckets']} | {algs} | "
             f"{fmt_s(s['predicted_comm_s'])} | "
-            f"{fmt_s(s['charged_comm_s'])} |")
+            f"{fmt_s(s['charged_comm_s'])} | {hidden} | {step} |")
     return "\n".join(out) + "\n"
 
 

@@ -125,6 +125,42 @@ def compute_roofline_from_aggregate(agg, chips: int, model_flops: float,
         useful_ratio=(model_flops / total_flops) if total_flops else 0.0)
 
 
+def step_estimate_s(roof: "Roofline",
+                    exposed_collective_s: float | None = None) -> float:
+    """Single-number step prediction from the roofline terms: the
+    dominant on-chip term plus the collective term.  With
+    ``exposed_collective_s`` (from an overlap Timeline) only the
+    communication the backward could NOT hide is charged; ``None``
+    charges the fully serialized collective term (the no-overlap
+    baseline)."""
+    coll = roof.collective_s if exposed_collective_s is None \
+        else exposed_collective_s
+    return max(roof.compute_s, roof.memory_s) + coll
+
+
+def overlap_report(roof: "Roofline", timeline) -> dict:
+    """Predicted overlap efficiency of a config: the timeline's hidden/
+    exposed split rescaled to the roofline's HLO-charged collective
+    term (the timeline's own comm_s is the cost model's estimate; the
+    charged bytes are ground truth), plus serialized-vs-overlapped step
+    predictions.  Hidden comm is capped at the backward span — when the
+    charged term dwarfs the cost-model estimate, rescaling alone would
+    claim more hiding than the backward window physically offers."""
+    hidden = min(roof.collective_s * timeline.overlap_fraction,
+                 timeline.backward_s)
+    frac = hidden / roof.collective_s if roof.collective_s > 0 else 1.0
+    exposed = roof.collective_s - hidden
+    return {
+        "overlap_fraction": frac,
+        "hidden_comm_s": hidden,
+        "exposed_comm_s": exposed,
+        "step_serial_s": step_estimate_s(roof),
+        "step_overlapped_s": step_estimate_s(roof,
+                                             exposed_collective_s=exposed),
+        "timeline": timeline.to_dict(),
+    }
+
+
 def compute_roofline(cost: dict, coll: CollectiveStats, chips: int,
                      model_flops: float,
                      chip: hw.Chip = hw.V5E) -> Roofline:

@@ -83,13 +83,16 @@ def main():
             n_fail += st in ("FAIL", "TIMEOUT")
             dom = rec.get("roofline", {}).get("dominant", "-")
             sched = rec.get("schedule")
-            algs = ""
+            algs = ov = ""
             if sched:
                 algs = " algs=" + "+".join(
                     f"{s}x{n}" for s, n in
                     sorted(sched.get("algorithms", {}).items()))
+                if sched.get("overlap"):
+                    ov = (" overlap="
+                          f"{sched['overlap']['overlap_fraction']*100:.0f}%")
             print(f"{st:7s} {arch:22s} {shape:12s} {rec.get('mesh')} "
-                  f"dominant={dom}{algs} wall={rec.get('wall_s', 0)}s",
+                  f"dominant={dom}{algs}{ov} wall={rec.get('wall_s', 0)}s",
                   flush=True)
     print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
     return 1 if n_fail else 0

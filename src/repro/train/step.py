@@ -1,13 +1,19 @@
 """The distributed train step — where the paper's technique plugs in.
 
-Structure (DESIGN.md §3.1):
+Structure (DESIGN.md §3.1, §3.6):
 
     jax.jit( jax.shard_map(step, axis_names={pod, data}) )
                 │
-                ├─ value_and_grad(model.loss)    # local data shard
-                ├─ clip_by_global_norm           # on LOCAL grads (pre-
-                │                                #   aggregation, cheap)
-                ├─ GradientAggregator(...)       # fusion ∘ reducer ∘ cache
+                ├─ value_and_grad(model.loss)    # local data shard;
+                │     └─ overlap=True: per-bucket reductions issued
+                │        INSIDE the backward (aggregator.overlap_params)
+                ├─ GradientAggregator(...)       # overlap=False: one
+                │                                #   post-backward block
+                ├─ clip_by_global_norm           # on AGGREGATED grads —
+                │                                #   the TRUE global norm,
+                │                                #   identical on every
+                │                                #   rank (sync-SGD
+                │                                #   semantics)
                 └─ optimizer.update + apply      # replicated over data,
                                                  #   model-sharded via auto
 
@@ -15,6 +21,15 @@ The data axes are MANUAL: the gradient sum over data shards happens only
 through the aggregator's explicit algorithm (the compiled HLO contains
 our collective-permutes, no XLA-chosen allreduce). The `model` axis stays
 AUTO so GSPMD shards FFN/heads/experts/vocab via `param_pspecs` rules.
+
+Clipping order matters twice.  The seed clipped LOCAL grads by each
+rank's own shard norm before aggregation, which (a) is not synchronous
+SGD — every rank scaled by a different norm and the reported
+``grad_norm`` was rank-local — and (b) made every collective's input
+depend on EVERY gradient leaf through the norm scalar, serializing the
+whole schedule into one trailing block.  Clipping the aggregated mean
+gradient fixes the semantics and removes the barrier that would defeat
+the overlap path (pinned by tests/test_overlap_hlo.py).
 """
 from __future__ import annotations
 
@@ -56,10 +71,22 @@ def make_train_step(model: ModelApi, optimizer: Optimizer,
 
     def local_step(params, opt_state, batch):
         groups = param_groups(params)
+        if cfg.aggregator.overlap:
+            # In-backward aggregation: the boundary must sit inside the
+            # differentiated function so each bucket's reduction fires
+            # as its cotangents complete (readiness order).
+            def loss_fn(p, b):
+                return model.loss(agg.overlap_params(p, groups=groups), b)
+        else:
+            loss_fn = model.loss
         (loss, metrics), grads = jax.value_and_grad(
-            model.loss, has_aux=True)(params, batch)
+            loss_fn, has_aux=True)(params, batch)
+        if not cfg.aggregator.overlap:
+            grads = agg(grads, groups=groups)           # ← the technique
+        # Clip AFTER aggregation: the norm is the global-batch gradient
+        # norm, identical on every rank (model-axis partial sums are
+        # combined by GSPMD on the auto axis).
         grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
-        grads = agg(grads, groups=groups)               # ← the technique
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = jax.tree_util.tree_map(
             lambda p, u: p + u.astype(p.dtype), params, updates)

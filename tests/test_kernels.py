@@ -31,6 +31,41 @@ def test_fused_reduce_fp32_accumulation():
     np.testing.assert_allclose(np.asarray(got), 0.512, rtol=2e-3)
 
 
+def test_fused_reduce_bf16_provably_loses_bits_sequentially():
+    """A case where sequential bf16 rounding PROVABLY loses every
+    small addend: at magnitude 1024 the bf16 ulp is 8, so 1024 + 1
+    rounds back to 1024 — a running bf16 sum of [1024, 1, 1, ..., 1]
+    stays 1024 forever, while the exact sum is 1024 + 255.  The kernel's
+    fp32 accumulator must return the exact value."""
+    k, n = 256, 192
+    x = jnp.concatenate([jnp.full((1, n), 1024.0, jnp.bfloat16),
+                         jnp.ones((k - 1, n), jnp.bfloat16)])
+    # the provable-loss oracle: running sum in bf16 never moves
+    seq = x[0]
+    for i in range(1, k):
+        seq = (seq + x[i]).astype(jnp.bfloat16)
+    assert (np.asarray(seq, np.float32) == 1024.0).all()
+    got = ops.fused_reduce(x, use_pallas=True, out_dtype=jnp.float32)
+    assert (np.asarray(got) == 1024.0 + (k - 1)).all()
+
+
+def test_fused_reduce_padded_tail_exact():
+    """n % block_n != 0: the zero-padded tail tile must not perturb the
+    output — integer-valued inputs make exactness checkable bitwise."""
+    from repro.kernels.fused_reduce import fused_reduce as pallas_reduce
+    k, block_n = 7, 2048
+    for n in (block_n + 37, 3 * block_n - 1):
+        x = (jnp.arange(k * n, dtype=jnp.float32).reshape(k, n) % 513.0)
+        got = pallas_reduce(x, block_n=block_n, interpret=True)
+        want = np.asarray(x, np.float64).sum(0)
+        assert got.shape == (n,)
+        assert (np.asarray(got, np.float64) == want).all()
+        # the tail region specifically (past the last full tile)
+        tail = (n // block_n) * block_n
+        assert (np.asarray(got)[tail:] ==
+                want.astype(np.float32)[tail:]).all()
+
+
 @pytest.mark.parametrize("n", [512, 4096, 10001])
 @pytest.mark.parametrize("count", [1, 100])
 def test_fused_adamw(n, count):

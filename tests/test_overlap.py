@@ -1,0 +1,239 @@
+"""Overlap subsystem unit tests: the bucket-readiness scheduler, the
+discrete-event timeline simulator, and the headline prediction the
+paper's Horovod characterization rests on (comm hides under backward)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import fusion, overlap
+
+
+def _plan(leaf_elems, threshold_bytes=64):
+    """Fusion plan over float32 1-D leaves of the given element counts
+    (dict keys keep traversal order 'a', 'b', ...)."""
+    tree = {chr(ord("a") + i): jnp.zeros((n,), jnp.float32)
+            for i, n in enumerate(leaf_elems)}
+    return fusion.build_plan(tree, threshold_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Readiness scheduler
+# ---------------------------------------------------------------------------
+
+def test_readiness_order_is_reverse_traversal():
+    """Backward produces the LAST layer's grads first: the bucket with
+    the highest leaf indices must be scheduled first, the bucket holding
+    leaf 0 last."""
+    plan = _plan([4, 4, 4, 4], threshold_bytes=2 * 4 * 4)   # 2 leaves/bucket
+    order = overlap.readiness_order(plan)
+    mins = [min(plan.buckets[i].leaf_indices) for i in order]
+    assert mins == sorted(mins, reverse=True)
+    assert min(plan.buckets[order[-1]].leaf_indices) == 0
+
+
+def test_bucket_ready_times_reverse_and_span():
+    plan = _plan([10, 10, 10, 10], threshold_bytes=1)       # 1 leaf/bucket
+    ready = overlap.bucket_ready_times(plan, backward_s=1.0)
+    # plan order == traversal order: earlier leaves ready later
+    assert list(ready) == sorted(ready, reverse=True)
+    # the first-traversal leaf completes exactly when backward ends
+    assert ready[0] == pytest.approx(1.0)
+    # the last leaf completes after its own 1/4 share of the backward
+    assert ready[-1] == pytest.approx(0.25)
+
+
+def test_bucket_ready_times_weighted_by_flops():
+    """A leaf with 9x the parameters takes 9x the backward time: the
+    small leaf's bucket is ready after only 1/10 of the backward."""
+    plan = _plan([900, 100], threshold_bytes=1)
+    ready = overlap.bucket_ready_times(plan, backward_s=1.0)
+    assert ready[1] == pytest.approx(0.1)
+    assert ready[0] == pytest.approx(1.0)
+
+
+def test_bucket_ready_times_length_mismatch_raises():
+    plan = _plan([4, 4])
+    with pytest.raises(ValueError):
+        overlap.bucket_ready_times(plan, 1.0, costs=[1.0])
+
+
+# ---------------------------------------------------------------------------
+# Timeline simulator
+# ---------------------------------------------------------------------------
+
+def _task(i, ready, comm, n_bytes=1024, strategy="rhd_rsa"):
+    return overlap.BucketTask(index=i, n_bytes=n_bytes, strategy=strategy,
+                              ready_s=ready, comm_s=comm)
+
+
+def test_simulate_full_hiding():
+    """Buckets ready early with short comms: everything hides, the step
+    is pure compute."""
+    tl = overlap.simulate([_task(0, 0.5, 0.1), _task(1, 0.1, 0.1)],
+                          backward_s=1.0, serial_s=0.5)
+    assert tl.hidden_comm_s == pytest.approx(0.2)
+    assert tl.exposed_comm_s == 0.0
+    assert tl.overlap_fraction == pytest.approx(1.0)
+    assert tl.step_s == pytest.approx(1.5)
+
+
+def test_simulate_last_bucket_tail_exposed():
+    """The bucket that becomes ready exactly at backward end can never
+    hide: its comm is the synchronization tail."""
+    tl = overlap.simulate([_task(0, 1.0, 0.3)], backward_s=1.0)
+    assert tl.hidden_comm_s == 0.0
+    assert tl.exposed_comm_s == pytest.approx(0.3)
+    assert tl.overlap_fraction == 0.0
+    assert tl.step_s == pytest.approx(1.3)
+
+
+def test_simulate_channel_serializes():
+    """Two buckets ready simultaneously share one channel: the second
+    waits, and its spill past backward end is exposed."""
+    tl = overlap.simulate([_task(0, 0.8, 0.3), _task(1, 0.8, 0.3)],
+                          backward_s=1.0)
+    e0, e1 = tl.events
+    assert e1.start_s == pytest.approx(e0.end_s)
+    assert e1.wait_s == pytest.approx(0.3)
+    # [0.8, 1.1] and [1.1, 1.4]: 0.2 hidden, 0.4 exposed
+    assert tl.hidden_comm_s == pytest.approx(0.2)
+    assert tl.exposed_comm_s == pytest.approx(0.4)
+    assert tl.step_s == pytest.approx(1.4)
+
+
+def test_simulate_idle_counts_readiness_gaps():
+    tl = overlap.simulate([_task(0, 0.0, 0.1), _task(1, 0.5, 0.1)],
+                          backward_s=1.0)
+    assert tl.idle_s == pytest.approx(0.4)      # 0.1 .. 0.5 channel idle
+
+
+def test_simulate_conservation_and_empty():
+    tl = overlap.simulate([_task(0, 0.2, 0.4), _task(1, 0.9, 0.5),
+                           _task(2, 0.95, 0.2)], backward_s=1.0)
+    assert tl.hidden_comm_s + tl.exposed_comm_s == pytest.approx(tl.comm_s)
+    assert tl.step_s >= tl.backward_s + tl.serial_s
+    empty = overlap.simulate([], backward_s=1.0, serial_s=0.5)
+    assert empty.comm_s == 0.0
+    assert empty.overlap_fraction == 1.0
+    assert empty.step_s == pytest.approx(1.5)
+
+
+def test_simulate_plan_roundtrip():
+    """simulate_plan splits compute into backward + serial and zips the
+    schedule rows with plan-derived ready times."""
+    plan = _plan([100, 100], threshold_bytes=1)
+    rows = [{"bytes": 400, "strategy": "rhd_rsa", "predicted_s": 0.01},
+            {"bytes": 400, "strategy": "rhd_rsa", "predicted_s": 0.01}]
+    tl = overlap.simulate_plan(plan, rows, compute_s=3.0)
+    assert tl.backward_s == pytest.approx(3.0 * overlap.BACKWARD_FRACTION)
+    assert tl.serial_s == pytest.approx(3.0 * (1 - overlap.BACKWARD_FRACTION))
+    assert len(tl.events) == 2
+    # the bucket holding leaf 0 is ready only at backward end: exposed
+    assert tl.exposed_comm_s == pytest.approx(0.01)
+    with pytest.raises(ValueError):
+        overlap.simulate_plan(plan, rows[:1], compute_s=3.0)
+
+
+def test_timeline_to_dict_keys():
+    tl = overlap.simulate([_task(0, 0.0, 0.1)], backward_s=1.0)
+    d = tl.to_dict()
+    for k in ("step_s", "overlap_fraction", "hidden_comm_s",
+              "exposed_comm_s", "idle_s", "n_buckets"):
+        assert k in d
+
+
+# ---------------------------------------------------------------------------
+# Analytic model timelines + the timeline-backed cost_model entry point
+# ---------------------------------------------------------------------------
+
+def test_fused_bucket_bytes_matches_greedy_fusion():
+    assert overlap.fused_bucket_bytes(100.0, 10, 1000.0) == [100.0]
+    assert len(overlap.fused_bucket_bytes(100.0, 10, 30.0)) == 4
+    assert overlap.fused_bucket_bytes(100.0, 4, 0) == [25.0] * 4
+    assert overlap.fused_bucket_bytes(100.0, 0, 10.0) == []
+    assert sum(overlap.fused_bucket_bytes(97.0, 7, 30.0)) == \
+        pytest.approx(97.0)
+
+
+def test_step_time_timeline_bounds_hand_set_overlap():
+    """The timeline-backed step time always lies between the two
+    hand-set extremes: full overlap (fraction 1) and none (fraction 0)."""
+    compute_s, n, p = 0.1, 64 * 2 ** 20, 8
+    tl = cm.step_time_timeline(compute_s, n, 100, 4 * 2 ** 20,
+                               "rhd_rsa", p, link=cm.PAPER_LINK)
+    lo = cm.step_time(compute_s, tl.comm_s, 1.0)
+    hi = cm.step_time(compute_s, tl.comm_s, 0.0)
+    assert lo <= tl.step_s <= hi
+
+
+def test_resnet50_p8_paper_link_hides_30pct():
+    """Acceptance pin (ISSUE 3): at p=8 on the paper link profile the
+    ResNet-50 analogue config hides >= 30% of its allreduce latency
+    under backward compute — the wait-free-backprop effect the paper's
+    Horovod characterization measures."""
+    from repro.models.cnn import PAPER_MODELS
+    info = PAPER_MODELS["resnet50"]
+    compute_s = 3 * info["gflops"] * 1e9 * 64 \
+        / (cm.PAPER_P100_FLOPS * 0.19)
+    tl = cm.step_time_timeline(compute_s, info["params"] * 4, 161,
+                               4 * 2 ** 20, "rhd_rsa", 8,
+                               link=cm.PAPER_LINK)
+    assert tl.comm_s > 0
+    assert tl.overlap_fraction >= 0.30
+    assert tl.step_s < compute_s + tl.comm_s          # beats serialized
+
+
+def test_schedule_to_timeline_glue():
+    """The launch-layer path: GradientAggregator.schedule rows +
+    last_plan feed simulate_plan, and roofline.overlap_report rescales
+    the fraction to the HLO-charged collective term (what dryrun
+    records for every train config)."""
+    import jax
+
+    from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+    from repro.launch import roofline as rl
+
+    agg = GradientAggregator(
+        AggregatorConfig(strategy="auto", fusion_threshold_mb=0.05),
+        ("data",), cache=PlanCache())
+    grads = {f"w{i}": jax.ShapeDtypeStruct((4096 * (i + 1),), jnp.float32)
+             for i in range(6)}
+    rows = agg.schedule(grads, (8,))
+    assert agg.last_plan is not None
+    tl = overlap.simulate_plan(agg.last_plan, rows, compute_s=0.01)
+    assert len(tl.events) == len(rows)
+    assert tl.comm_s == pytest.approx(sum(r["predicted_s"] for r in rows))
+
+    roof = rl.Roofline(flops=1e12, hbm_bytes=1e9, collective_bytes=1e8,
+                       chips=8, compute_s=0.01, memory_s=0.002,
+                       collective_s=0.004, dominant="compute",
+                       model_flops=1e12, useful_ratio=1.0)
+    rep = rl.overlap_report(roof, tl)
+    assert rep["hidden_comm_s"] + rep["exposed_comm_s"] == \
+        pytest.approx(roof.collective_s)
+    assert rep["step_overlapped_s"] <= rep["step_serial_s"]
+    assert rep["step_serial_s"] == pytest.approx(
+        rl.step_estimate_s(roof))
+    assert 0.0 <= rep["overlap_fraction"] <= 1.0
+    assert rep["timeline"]["n_buckets"] == len(rows)
+
+
+def test_overlap_sweep_artifact_is_current():
+    """BENCH_overlap.json is the committed trajectory of the analytic
+    overlap sweep: regenerating it must be a no-op (the sweep is
+    deterministic — drift means the model changed without refreshing
+    the artifact)."""
+    import json
+    import os
+    import sys
+    root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, os.path.abspath(root))
+    try:
+        from benchmarks.overlap_sweep import SCHEMA, build_record
+    finally:
+        sys.path.pop(0)
+    with open(os.path.join(root, "BENCH_overlap.json")) as f:
+        committed = json.load(f)
+    assert committed["schema"] == SCHEMA
+    fresh = build_record(committed["meta"]["profile"])
+    assert committed == json.loads(json.dumps(fresh))   # via-JSON floats

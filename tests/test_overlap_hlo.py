@@ -1,0 +1,125 @@
+"""HLO-structure tests for the overlap subsystem (DESIGN.md §3.6).
+
+Runs a forced-multi-device subprocess (like test_hlo_analysis) and pins
+the compiled schedule, not just the math:
+
+  * with ``overlap=True`` the per-bucket collective-permutes are
+    INTERLEAVED into the backward pass — at least one full bucket's
+    reduction is scheduled before the last backward matmul;
+  * the seed's pre-aggregation local-norm clip reproduces the failure
+    mode the subsystem removes: the norm scalar makes every collective
+    depend on every gradient leaf, and the compiled schedule is one
+    trailing block (zero permutes before the last backward op);
+  * overlapping changes WHEN, never WHAT: total collective-permute
+    bytes equal the sum of per-bucket ``reducers.wire_bytes`` in both
+    modes, and the gradients are bit-exact between modes.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+from repro.core.compat import shard_map
+from repro.core.reducers import allreduce_steps, wire_bytes
+from repro.launch import hlo_analysis as H
+from repro.optim import clip_by_global_norm
+
+p = 4
+mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
+D = 16   # leading dims divisible by p: reducers pad nothing and the
+         # HLO permute bytes match wire_bytes exactly
+
+def loss(params, x):
+    h = x
+    for k in sorted(params):
+        h = jnp.tanh(h @ params[k])
+    return jnp.sum(h * h)
+
+params = {f"w{i}": jax.random.normal(jax.random.PRNGKey(i), (D, D)) * 0.3
+          for i in range(4)}
+x = jax.random.normal(jax.random.PRNGKey(9), (p * 2, D))
+
+def make(mode):
+    agg = GradientAggregator(
+        AggregatorConfig(strategy="rhd_rsa", fusion_threshold_mb=0.0005,
+                         overlap=(mode == "overlap")),
+        ("data",), cache=PlanCache())
+    def local(params, x):
+        if mode == "overlap":
+            g = jax.grad(lambda q: loss(agg.overlap_params(q), x))(params)
+        elif mode == "post":
+            g = jax.grad(loss)(params, x)
+            g = agg(g)
+        else:  # "barrier": the SEED schedule — local-norm clip BEFORE
+               # aggregation ties every collective to every grad leaf
+            g = jax.grad(loss)(params, x)
+            g, _ = clip_by_global_norm(g, 1.0)
+            g = agg(g)
+            return g
+        g, _ = clip_by_global_norm(g, 1.0)
+        return g
+    fn = jax.jit(shard_map(local, mesh, in_specs=(P(), P("data")),
+                           out_specs=P(), axis_names={"data"},
+                           check_vma=False))
+    return fn, agg
+
+def perm_vs_dots(txt):
+    lines = txt.splitlines()
+    perms = [i for i, l in enumerate(lines) if "collective-permute(" in l]
+    dots = [i for i, l in enumerate(lines) if " dot(" in l]
+    return sum(1 for i in perms if i < dots[-1]), len(perms)
+
+results, texts, scheds = {}, {}, {}
+for mode in ("overlap", "post", "barrier"):
+    fn, agg = make(mode)
+    results[mode] = fn(params, x)
+    texts[mode] = fn.lower(params, x).compile().as_text()
+    scheds[mode] = agg.last_schedule
+
+# 1. interleaving: overlap mode schedules at least one full bucket's
+#    RHD reduction before the last backward matmul
+before, total = perm_vs_dots(texts["overlap"])
+assert before >= allreduce_steps("rhd_rsa", p), (before, total)
+
+# 2. the seed's barrier serializes everything into a trailing block
+before_b, total_b = perm_vs_dots(texts["barrier"])
+assert before_b == 0, (before_b, total_b)
+assert total_b == total, (total_b, total)
+
+# 3. permute bytes unchanged and equal to the algorithmic wire bytes
+for mode in ("overlap", "post"):
+    want = sum(wire_bytes(s, b, p) for b, s in scheds[mode])
+    got = H.analyze(texts[mode]).collective_bytes.get(
+        "collective-permute", 0)
+    assert got == want, (mode, got, want)
+assert len(scheds["overlap"]) == len(scheds["post"]) == 4
+
+# 4. overlapping changes scheduling only: gradients are bit-exact
+for k in params:
+    a = np.asarray(results["overlap"][k])
+    b = np.asarray(results["post"][k])
+    assert (a == b).all(), k
+print("OK", before, "/", total)
+"""
+
+
+@pytest.mark.timeout(600)
+def test_overlap_hlo_structure():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SNIPPET % os.path.abspath(src)],
+        capture_output=True, text=True, timeout=580, env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "OK" in proc.stdout

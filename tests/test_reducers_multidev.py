@@ -44,3 +44,14 @@ def test_multidev_mixed_strategy_checks():
     and a real train step mixes ≥ 2 algorithms."""
     _run_checks("multidev_mixed_strategy_checks.py", 8,
                 "ALL MIXED STRATEGY CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
+def test_multidev_overlap_checks():
+    """overlap=True (in-backward per-bucket reductions) on
+    p ∈ {3, 4, 6, 8}: bit-exact with the post-backward path and with
+    psum, composes with mixed auto schedules, trains identically, and
+    every rank reports the single-process global gradient norm
+    (clip-after-aggregation fix)."""
+    _run_checks("multidev_overlap_checks.py", 8,
+                "ALL OVERLAP CHECKS PASSED")
