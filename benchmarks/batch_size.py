@@ -13,9 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import hw
 from repro.models import cnn
-from repro.models.cnn import PAPER_MODELS
 
 BATCHES = [1, 2, 4, 8, 16, 32, 64, 128]
 
@@ -47,17 +45,18 @@ def measured(batches=(1, 2, 4, 8), image=48, steps=3):
     return rows
 
 
-def analytic(model="resnet50", overhead_s=450e-6, mfu=0.45):
-    """images/sec vs batch with a fixed per-step overhead (dispatch,
-    optimizer, collectives setup) — the saturation curve of Fig. 2."""
-    info = PAPER_MODELS[model]
-    rows = []
-    for b in BATCHES:
-        compute = 3 * info["gflops"] * 1e9 * b / \
-            (hw.V5E.peak_bf16_flops * mfu)
-        t = compute + overhead_s
-        rows.append((b, b / t))
-    return rows
+def analytic(model="resnet50", profile="v5e"):
+    """images/sec vs batch on the experiment matrix's single-device
+    axis: the profile's fixed per-step overhead (dispatch, optimizer,
+    collectives setup) is what a larger batch amortizes — the
+    saturation curve of Fig. 2.  Shares the matrix definition with
+    scaling/claims so the sweet spot can never drift from the claims
+    wall (claim C10)."""
+    from repro.experiments import matrix as mx
+    prof = mx.PROFILES[profile]
+    return [(b, mx.throughput(model, 1, "Horovod_MPI_Opt", prof,
+                              batch_per_dev=b))
+            for b in BATCHES]
 
 
 def run(csv=True, measure=True):

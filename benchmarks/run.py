@@ -19,13 +19,18 @@ def main() -> None:
     from benchmarks import (allreduce_micro, batch_size, fusion_sweep,
                             overlap_sweep, plan_cache, scaling,
                             tf_cnn_analogue)
+    from repro.experiments import claims, regen
 
+    # one shared matrix context: the scaling section and the claims
+    # registry walk the same grid exactly once
+    ctx = claims.Ctx()
     sections = [
         ("Fig2_batch_size", lambda: batch_size.run(
             measure=not args.fast)),
         ("Fig4_6_allreduce_micro", lambda: allreduce_micro.run(
             measure=not args.fast)),
-        ("Fig3_7_8_9_scaling", scaling.run),
+        ("Fig3_7_8_9_scaling", lambda: scaling.run(ctx=ctx)),
+        ("Claims_experiments_registry", lambda: regen.run_lines(ctx=ctx)),
         ("SecIIIC_fusion_sweep", fusion_sweep.run),
         ("SecIIIC2_overlap_sweep", overlap_sweep.run),
         ("SecVB_plan_cache", plan_cache.run),

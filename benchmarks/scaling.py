@@ -2,7 +2,12 @@
 ResNet-50 / MobileNet / NASNet-large under every distributed-training
 design.
 
-Two hardware profiles:
+The grid itself is declarative now: this module is a thin CSV view over
+`repro.experiments.matrix` (design × model × p × batch, timeline-cost-
+model backend) plus the headline claim lines, which come from the same
+claims registry the EXPERIMENTS.md regenerator pins
+(`repro.experiments.claims`).  Two hardware profiles:
+
   * ``paper``  — P100 + Aries/EDR-class links: VALIDATES the model
     against the paper's own claims (≈90% efficiency @64, 1.8×/3.2×
     Horovod-vs-gRPC at 128 workers for ResNet-50/MobileNet).
@@ -11,157 +16,44 @@ Two hardware profiles:
 """
 from __future__ import annotations
 
-import dataclasses
+# Re-exported so existing consumers (benchmarks/overlap_sweep.py, ad-hoc
+# scripts) keep one import path; the definitions live in the matrix.
+from repro.experiments.matrix import (BATCH_PER_DEV, DESIGNS,  # noqa: F401
+                                      FUSION_BYTES, MODEL_VARIABLES,
+                                      PROFILES, WORKERS, HwProfile,
+                                      compute_seconds, design_latency_fn,
+                                      grid, run_matrix, step_time,
+                                      step_timeline, throughput)
+from repro.models.cnn import PAPER_MODELS  # noqa: F401
 
-from repro.core import cost_model as cm
-from repro.core import hw, overlap as ov
-from repro.models.cnn import PAPER_MODELS
-
-BATCH_PER_DEV = 64            # paper's per-GPU sweet spot (Fig. 2)
-WORKERS = [1, 2, 4, 8, 16, 32, 64, 128]
-FUSION_BYTES = 4 * 2 ** 20    # Horovod Tensor Fusion threshold (Sec. III-C2)
-
-# Trainable-variable counts: how many gradient tensors each model hands
-# the runtime per step.  ResNet-50's 161 is the paper's number (its PS
-# pays one RPC per variable); MobileNet-v1 / NASNet-large are estimates
-# from the layer structure (analytic-only, DESIGN.md D4).
-MODEL_VARIABLES = {"resnet50": 161, "mobilenet": 83, "nasnet-large": 930}
 N_VARIABLES = MODEL_VARIABLES["resnet50"]
 
-
-@dataclasses.dataclass(frozen=True)
-class HwProfile:
-    name: str
-    flops: float
-    mfu: float
-    link: cm.LinkParams
-    grpc: cm.LinkParams
-    # per-step synchronous-distributed overhead sigma0*log2(p): stragglers
-    # on a shared, randomly-placed dragonfly (Piz Daint, paper Sec. VI-D)
-    # vs a dedicated deterministic ICI torus (v5e: ~0).
-    sync_s: float = 0.0
+# back-compat alias: the per-design bucket latency closure used to live
+# here as a private helper
+_bucket_latency_fn = design_latency_fn
 
 
-PROFILES = {
-    "paper": HwProfile("paper", cm.PAPER_P100_FLOPS, 0.19,
-                       cm.LinkParams(alpha_s=5e-6, bandwidth=3e9),
-                       cm.LinkParams(50e-6, 3e9), sync_s=6e-3),
-    "v5e": HwProfile("v5e", hw.V5E.peak_bf16_flops, 0.45, cm.ICI,
-                     cm.GRPC),
-}
-
-DESIGNS = ("gRPC_PS", "Baidu_ring", "Horovod_NCCL2", "Horovod_MPI",
-           "Horovod_MPI_Opt")
-
-
-def _bucket_latency_fn(design: str, p: int, prof: HwProfile):
-    """Per-message allreduce latency for one fused bucket under each
-    design, plus the design's message granularity: the PS transport pays
-    one RPC per VARIABLE (no fusion — the paper's gRPC pain point), the
-    Horovod-family designs reduce FUSED buckets."""
-    if design == "gRPC_PS":
-        return lambda b: cm.allreduce_latency(
-            "ps_gather", b, p, link=prof.grpc, ps_shards=max(p // 8, 1))
-    if design == "Baidu_ring":
-        return lambda b: cm.allreduce_latency("ring_rsa", b, p,
-                                              link=prof.link)
-    if design == "Horovod_NCCL2":
-        return lambda b: cm.allreduce_latency("psum", b, p, link=prof.link)
-    if design == "Horovod_MPI":
-        return lambda b: cm.allreduce_latency_host_staged(
-            "rhd_rsa", b, p, link=prof.link)
-    # Horovod_MPI_Opt
-    return lambda b: cm.allreduce_latency("rhd_rsa", b, p, link=prof.link)
-
-
-def compute_seconds(model: str, prof: HwProfile) -> float:
-    """Per-device fwd+bwd compute time (3x forward FLOPs at the
-    profile's MFU) — shared with benchmarks/overlap_sweep.py so the
-    BENCH_overlap.json trajectory can never desynchronize from the
-    scaling claims."""
-    info = PAPER_MODELS[model]
-    return 3 * info["gflops"] * 1e9 * BATCH_PER_DEV \
-        / (prof.flops * prof.mfu)
-
-
-def step_timeline(model: str, p: int, design: str,
-                  prof: HwProfile) -> ov.Timeline:
-    """Timeline-simulated step: every design overlaps communication
-    with backward compute to the extent bucket readiness allows (the
-    wait-free-backprop schedule of core/overlap.py) — replacing the
-    hand-set overlap fraction the old model took on faith."""
-    info = PAPER_MODELS[model]
-    compute_s = compute_seconds(model, prof)
-    grad_bytes = info["params"] * 4
-    n_vars = MODEL_VARIABLES[model]
-    if p == 1:
-        return ov.model_timeline(0.0, 0, FUSION_BYTES, compute_s,
-                                 latency_fn=lambda b: 0.0)
-    # PS: one RPC per variable; allreduce designs: fused buckets.
-    threshold = 0 if design == "gRPC_PS" else FUSION_BYTES
-    return ov.model_timeline(grad_bytes, n_vars, threshold, compute_s,
-                             latency_fn=_bucket_latency_fn(design, p, prof),
-                             strategy=design)
-
-
-def _sync_s(p: int, prof: HwProfile) -> float:
-    import math
-    return prof.sync_s * math.log2(p) if p > 1 else 0.0
-
-
-def step_time(model: str, p: int, design: str, prof: HwProfile) -> float:
-    return step_timeline(model, p, design, prof).step_s + _sync_s(p, prof)
-
-
-def throughput(model: str, p: int, design: str, prof: HwProfile) -> float:
-    return p * BATCH_PER_DEV / step_time(model, p, design, prof)
-
-
-def run(csv=True):
+def run(csv=True, ctx=None):
+    """``ctx``: an optional shared `repro.experiments.claims.Ctx` so a
+    driver that also prints the claims registry (benchmarks/run.py)
+    evaluates the grid once.  The §Claims headline lines themselves
+    live in the registry section (`regen.run_lines`) — the same pinned
+    values EXPERIMENTS.md commits, not a parallel computation here."""
+    from repro.experiments import claims as claims_mod
+    ctx = ctx or claims_mod.Ctx()
     lines = []
-    for pname, prof in PROFILES.items():
-        for model in PAPER_MODELS:
-            base = throughput(model, 1, "Horovod_MPI_Opt", prof)
-            for design in DESIGNS:
-                for p in WORKERS:
-                    # one simulation per row: step time, throughput and
-                    # the hidden fraction all derive from the same tl
-                    tl = step_timeline(model, p, design, prof)
-                    st = tl.step_s + _sync_s(p, prof)
-                    t = p * BATCH_PER_DEV / st
-                    eff = t / (base * p)
-                    lines.append(
-                        f"scaling.{pname}.{model}.{design},"
-                        f"{st * 1e6:.1f},"
-                        f"p={p} images_per_s={t:.0f} "
-                        f"efficiency={eff:.3f} "
-                        f"comm_hidden={tl.overlap_fraction:.2f}")
-    # §Claims headline numbers (paper profile)
-    prof = PROFILES["paper"]
-    r50_64 = throughput("resnet50", 64, "Horovod_MPI_Opt", prof) / \
-        (throughput("resnet50", 1, "Horovod_MPI_Opt", prof) * 64)
-    r50_16 = throughput("resnet50", 16, "Horovod_MPI_Opt", prof) / \
-        (throughput("resnet50", 1, "Horovod_MPI_Opt", prof) * 16)
-    r50_ratio = throughput("resnet50", 128, "Horovod_MPI_Opt", prof) / \
-        throughput("resnet50", 128, "gRPC_PS", prof)
-    mbn_ratio = throughput("mobilenet", 128, "Horovod_MPI_Opt", prof) / \
-        throughput("mobilenet", 128, "gRPC_PS", prof)
-    nas_64 = throughput("nasnet-large", 64, "Horovod_MPI_Opt", prof) / \
-        (throughput("nasnet-large", 1, "Horovod_MPI_Opt", prof) * 64)
-    mbn_64 = throughput("mobilenet", 64, "Horovod_MPI_Opt", prof) / \
-        (throughput("mobilenet", 1, "Horovod_MPI_Opt", prof) * 64)
-    lines += [
-        f"scaling.claim.resnet50_eff_16,{r50_16:.3f},paper≈0.98",
-        f"scaling.claim.resnet50_eff_64,{r50_64:.3f},paper≈0.90",
-        f"scaling.claim.resnet50_vs_grpc_128,{r50_ratio:.2f},paper=1.8x",
-        f"scaling.claim.mobilenet_vs_grpc_128,{mbn_ratio:.2f},paper=3.2x",
-        f"scaling.claim.ordering_nasnet_best,"
-        f"{float(nas_64 > r50_64 > mbn_64):.0f},"
-        f"paper: nasnet(0.92) > resnet50(0.71) > mobilenet(0.16) "
-        f"[ours: {nas_64:.2f} > {r50_64:.2f} > {mbn_64:.2f}]",
-    ]
+    for pname in PROFILES:
+        for r in ctx.rows(pname):
+            lines.append(
+                f"scaling.{pname}.{r['model']}.{r['design']},"
+                f"{r['step_s'] * 1e6:.1f},"
+                f"p={r['p']} images_per_s={r['images_per_s']:.0f} "
+                f"efficiency={r['efficiency']:.3f} "
+                f"comm_hidden={r['hidden_frac']:.2f}")
     return lines
 
 
 if __name__ == "__main__":
+    from repro.experiments import regen
     print("\n".join(run()))
+    print("\n".join(regen.run_lines()))

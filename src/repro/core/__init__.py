@@ -8,7 +8,8 @@ from .overlap import (BACKWARD_FRACTION, BucketTask, Timeline,
                       TimelineEvent, bucket_ready_times, model_timeline,
                       readiness_order, simulate, simulate_plan)
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
-from .reducers import STRATEGIES, allreduce, allreduce_steps, wire_bytes
+from .reducers import (STRATEGIES, allreduce, allreduce_steps,
+                       hierarchical_wire_bytes, wire_bytes)
 from .selector import (AnalyticSelector, EmpiricalSelector, Selector,
                        build_analytic_table, crossover_bytes, load_table,
                        make_selector, save_table, validate_table)
@@ -16,7 +17,7 @@ from .selector import (AnalyticSelector, EmpiricalSelector, Selector,
 __all__ = [
     "AggregatorConfig", "GradientAggregator", "FusionPlan", "build_plan",
     "GLOBAL_PLAN_CACHE", "PlanCache", "STRATEGIES", "allreduce",
-    "allreduce_steps", "wire_bytes",
+    "allreduce_steps", "hierarchical_wire_bytes", "wire_bytes",
     "AnalyticSelector", "EmpiricalSelector", "Selector",
     "build_analytic_table", "crossover_bytes", "load_table",
     "make_selector", "save_table", "validate_table",

@@ -73,6 +73,23 @@ _HAS_LAX_AXIS_SIZE = hasattr(lax, "axis_size")
 
 _degraded = threading.local()
 
+# Largest mesh the old-jax partial-auto degraded mode is validated on
+# (multidev checks run it up to 12 devices; 32 leaves headroom for
+# host-mesh experiments).  Beyond this, legacy partial-auto lowering is
+# known to die inside XLA's SPMD partitioner with a FATAL C++ check —
+#     F xla/hlo/utils/hlo_sharding_util.cc: Check failed:
+#     sharding.IsManualSubgroup()
+# — a process abort no Python try/except can catch (observed on every
+# train-shape dry-run on the 256/512-device production meshes), and the
+# one-hot psum emulation's p·N wire cost would be prohibitive there
+# anyway.  We refuse up front with an actionable error instead.
+PARTIAL_AUTO_MAX_DEVICES = 32
+
+
+class PartialAutoUnsupported(RuntimeError):
+    """Partial-auto ``shard_map`` on legacy jax over a mesh larger than
+    the validated degraded-mode scale (see PARTIAL_AUTO_MAX_DEVICES)."""
+
 
 def _degraded_idx(axis):
     """Traced rank of ``axis`` if inside a degraded region, else None."""
@@ -215,6 +232,21 @@ def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
     # Partial-auto on old jax: enter degraded mode (see module docstring).
     # PartitionSpec is a tuple subclass, so a bare P(...) must be treated
     # as a single-argument spec, not unpacked into per-argument specs.
+    n_devices = int(mesh.devices.size)
+    if n_devices > PARTIAL_AUTO_MAX_DEVICES:
+        raise PartialAutoUnsupported(
+            f"partial-auto shard_map (manual axes "
+            f"{sorted(set(mesh.axis_names) - auto)}, auto axes "
+            f"{sorted(auto)}) on a {n_devices}-device mesh is not "
+            f"supported on this jax version ({jax.__version__}): legacy "
+            f"lowering aborts the PROCESS inside XLA's SPMD partitioner "
+            f"(fatal 'Check failed: sharding.IsManualSubgroup()', "
+            f"hlo_sharding_util.cc), and the psum-emulation fallback is "
+            f"validated only up to {PARTIAL_AUTO_MAX_DEVICES} devices. "
+            f"Upgrade to a jax with the new jax.shard_map(check_vma=...) "
+            f"API for native partial-auto lowering, or run this config "
+            f"on a <= {PARTIAL_AUTO_MAX_DEVICES}-device host mesh "
+            f"(DESIGN.md §3.7 known-limit registry).")
     manual = tuple(ax for ax in mesh.axis_names if ax not in auto)
     single_arg = not isinstance(in_specs, tuple) or isinstance(in_specs, P)
     specs = (in_specs,) if single_arg else in_specs

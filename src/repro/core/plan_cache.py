@@ -67,9 +67,14 @@ class PlanCache:
         # `strategy` is the RESOLVED reduction strategy context (a plain
         # strategy name, or the auto selector's fingerprint + axis
         # sizes): plans laid out under different selection functions /
-        # switch-point alignments must never collide.
-        skey = (tuple(int(s) for s in switch_points), switch_itemsize) \
-            if switch_points else None
+        # switch-point alignments must never collide.  switch_itemsize
+        # is the aggregator's WIRE itemsize and is always part of the
+        # key — even without switch points the wire dtype is part of the
+        # aggregation config a plan was resolved under, and aliasing
+        # wire dtypes would silently survive a future layout that
+        # depends on wire bytes (tests/test_wire_dtype.py pins this).
+        skey = (tuple(int(s) for s in switch_points) if switch_points
+                else None, switch_itemsize)
         # `overlap` keys the aggregation MODE: the in-backward path
         # wraps the plan's buckets in custom_vjp boundaries at trace
         # time while the post-backward path flattens whole gradient

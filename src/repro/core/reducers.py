@@ -262,16 +262,62 @@ def allreduce(x: jax.Array, axes: Sequence[Axis], strategy: str) -> jax.Array:
     return x
 
 
-def wire_bytes(strategy: str, n_bytes: int, p: int) -> int:
-    """Algorithmic wire bytes per device (critical path) for a
-    single-axis allreduce of ``n_bytes`` over ``p`` devices (used by the
-    cost model and tests).
+def hierarchical_wire_bytes(n_bytes: int, d: int, pods: int) -> dict:
+    """Per-level wire bytes of the two-level schedule, on the busiest
+    device: ``intra`` = ring reduce-scatter + ring allgather over the
+    d-way pod-local axis (each moves N(d-1)/d bytes), ``inter`` = RHD
+    allreduce of the 1/d-sized chunk across ``pods`` (non-pow2 pod
+    counts pay the MVAPICH2 pre/post fold on the chunk).  The two levels
+    ride different links (ICI vs DCN), which is why the accounting is
+    kept split instead of collapsed into one number."""
+    if d == 1:
+        return {"intra": 0, "inter": wire_bytes("rhd_rsa", n_bytes, pods)}
+    intra = 2 * int(n_bytes * (d - 1) / d)
+    inter = wire_bytes("rhd_rsa", n_bytes // d, pods)
+    return {"intra": intra, "inter": inter}
+
+
+def _axis_sizes(p) -> tuple[int, ...]:
+    """Normalize a device count (int) or per-axis sizes (outermost/pod
+    axis first, matching ``allreduce``'s ``axes``) to a tuple."""
+    if isinstance(p, int):
+        return (p,)
+    sizes = tuple(int(s) for s in p)
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"axis sizes must be positive ints, got {p!r}")
+    return sizes
+
+
+def wire_bytes(strategy: str, n_bytes: int, p) -> int:
+    """Algorithmic wire bytes per device (critical path) for an
+    allreduce of ``n_bytes`` with ``strategy`` (used by the cost model
+    and tests).  ``p`` is a device count for a single-axis reduction, or
+    per-axis sizes ``(pods, d)`` (outermost first, matching
+    ``allreduce``'s ``axes``) for a multi-axis mesh.
+
+    Flat strategies on a multi-axis mesh fold a FULL N-byte allreduce
+    over each axis (exactly what ``allreduce`` executes), so their total
+    is the per-axis sum.  ``hierarchical`` charges its per-level
+    schedule (see :func:`hierarchical_wire_bytes`); on a single axis it
+    degenerates to ring, like the executed reducer.
 
     For non-pow2 ``rhd_rsa`` the busiest device is a core rank paired
     with an excess rank: it receives the N-byte pre-fold, runs the pow2
     core schedule on ``core = 2^⌊log2 p⌋`` ranks, and sends the N-byte
     post broadcast — the MVAPICH2 +2·N pre/post overhead.
     """
+    sizes = _axis_sizes(p)
+    if strategy == "hierarchical":
+        if len(sizes) == 1:
+            return wire_bytes("ring_rsa", n_bytes, sizes[0])
+        if len(sizes) != 2:
+            raise ValueError("hierarchical expects (pods, d) axis sizes")
+        pods, d = sizes
+        levels = hierarchical_wire_bytes(n_bytes, d=d, pods=pods)
+        return levels["intra"] + levels["inter"]
+    if len(sizes) > 1:
+        return sum(wire_bytes(strategy, n_bytes, s) for s in sizes)
+    (p,) = sizes
     if p == 1:
         return 0
     if strategy == "rhd_rsa":
@@ -282,14 +328,26 @@ def wire_bytes(strategy: str, n_bytes: int, p: int) -> int:
         return int(2 * n_bytes * (p - 1) / p)
     if strategy == "ps_gather":
         return int(n_bytes * (p - 1))  # recv-dominated
-    if strategy == "hierarchical":
-        raise ValueError("hierarchical is multi-axis; use cost_model")
     raise ValueError(strategy)
 
 
-def allreduce_steps(strategy: str, p: int) -> int:
+def allreduce_steps(strategy: str, p) -> int:
     """Number of sequential communication steps (alpha terms) on the
-    critical path of a single-axis allreduce over ``p`` devices."""
+    critical path of an allreduce over ``p`` devices (int) or per-axis
+    sizes (outermost first; flat strategies sum per-axis full
+    reductions, ``hierarchical`` charges ring-RS + RHD + ring-AG)."""
+    sizes = _axis_sizes(p)
+    if strategy == "hierarchical":
+        if len(sizes) == 1:
+            return allreduce_steps("ring_rsa", sizes[0])
+        if len(sizes) != 2:
+            raise ValueError("hierarchical expects (pods, d) axis sizes")
+        pods, d = sizes
+        intra = 2 * (d - 1)              # ring RS + ring AG
+        return intra + allreduce_steps("rhd_rsa", pods)
+    if len(sizes) > 1:
+        return sum(allreduce_steps(strategy, s) for s in sizes)
+    (p,) = sizes
     if p == 1:
         return 0
     if strategy == "rhd_rsa":
@@ -302,6 +360,4 @@ def allreduce_steps(strategy: str, p: int) -> int:
         return 2                          # push all, pull all
     if strategy == "psum":
         raise ValueError("psum steps are vendor-chosen; use cost_model")
-    if strategy == "hierarchical":
-        raise ValueError("hierarchical is multi-axis; use cost_model")
     raise ValueError(strategy)

@@ -1,0 +1,25 @@
+"""Characterization subsystem — the paper's experiment matrix as data.
+
+The paper's title promises *Characterization, Designs, and Performance
+Evaluation*; `repro.core` is the Designs half, this package is the
+Characterization half (DESIGN.md §3.7):
+
+``matrix``  the declarative experiment grid (design × model × p ×
+            per-device batch) with a cost-model backend for any p and a
+            real multi-device measurement backend for host-scale p;
+``claims``  the registry of the paper's quantitative claims, each
+            binding a matrix query to a tolerance band;
+``regen``   the CLI that re-runs the matrix and regenerates the
+            committed ``EXPERIMENTS.md`` + ``BENCH_experiments.json``.
+"""
+from .matrix import (BATCHES, DESIGN_STRATEGY, DESIGNS, PROFILES, WORKERS,
+                     ExperimentPoint, HwProfile, compute_seconds,
+                     design_latency_fn, grid, run_matrix, run_point,
+                     step_time, step_timeline, throughput)
+
+__all__ = [
+    "BATCHES", "DESIGN_STRATEGY", "DESIGNS", "PROFILES", "WORKERS",
+    "ExperimentPoint", "HwProfile", "compute_seconds", "design_latency_fn",
+    "grid", "run_matrix", "run_point", "step_time", "step_timeline",
+    "throughput",
+]

@@ -1,0 +1,363 @@
+"""The characterization experiment matrix — the paper's grid as data.
+
+Every application-level figure in the paper (Figs. 2/3/7/8/9) is a walk
+over the same four axes:
+
+    design ∈ {gRPC_PS, Baidu_ring, Horovod_NCCL2, Horovod_MPI,
+              Horovod_MPI_Opt}
+  × model  ∈ {resnet50, mobilenet, nasnet-large}
+  × p      ∈ {1, 2, 4, ..., 64, 128}
+  × per-device batch ∈ {16, 32, 64}
+
+This module makes that grid declarative (:func:`grid` builds
+:class:`ExperimentPoint` lists, :func:`run_matrix` evaluates them) so
+benchmarks, the claims registry (claims.py), and the EXPERIMENTS.md
+regenerator (regen.py) all consume ONE experiment definition instead of
+hard-coded loops.
+
+Two execution backends:
+
+``model``     the timeline cost model — per-design bucket latencies
+              from `repro.core.cost_model` played through the overlap
+              simulator (`repro.core.overlap`).  Works for any p,
+              including the 64/128-worker points no host can measure.
+``measured``  real wall-clock of the design's reducer schedule on XLA
+              host devices (requires a multi-device process — the
+              `REPRO_TEST_DEVICES` hook; see tests/README.md).  Each
+              distinct fused-bucket size is measured once per (design,
+              p) and the same timeline composition is applied, so
+              measured and modeled rows are directly comparable.
+
+The design → reducer mapping is DESIGN_STRATEGY (the PS transport maps
+to the `ps_gather` pattern per DESIGN.md A3; both MPI designs execute
+`rhd_rsa` — host staging is a cost-model term, not a host-CPU
+behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Mapping, Sequence
+
+from repro.core import cost_model as cm
+from repro.core import hw
+from repro.core import overlap as ov
+from repro.models.cnn import PAPER_MODELS
+
+# -- axes -------------------------------------------------------------------
+
+DESIGNS = ("gRPC_PS", "Baidu_ring", "Horovod_NCCL2", "Horovod_MPI",
+           "Horovod_MPI_Opt")
+MODELS = tuple(PAPER_MODELS)
+WORKERS = (1, 2, 4, 8, 16, 32, 64, 128)
+BATCHES = (16, 32, 64)
+
+BATCH_PER_DEV = 64            # paper's per-GPU sweet spot (Fig. 2)
+FUSION_BYTES = 4 * 2 ** 20    # Horovod Tensor Fusion threshold (Sec. III-C2)
+
+# Trainable-variable counts: how many gradient tensors each model hands
+# the runtime per step.  ResNet-50's 161 is the paper's number (its PS
+# pays one RPC per variable); MobileNet-v1 / NASNet-large are estimates
+# from the layer structure (analytic-only, DESIGN.md D4).
+MODEL_VARIABLES = {"resnet50": 161, "mobilenet": 83, "nasnet-large": 930}
+
+# What each design EXECUTES (measured backend / multidev checks): the
+# gRPC PS is represented by its communication pattern (DESIGN.md A3);
+# host staging (Horovod_MPI vs _Opt) is a cost-model-only term.
+DESIGN_STRATEGY = {
+    "gRPC_PS": "ps_gather",
+    "Baidu_ring": "ring_rsa",
+    "Horovod_NCCL2": "psum",
+    "Horovod_MPI": "rhd_rsa",
+    "Horovod_MPI_Opt": "rhd_rsa",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HwProfile:
+    name: str
+    flops: float
+    mfu: float
+    link: cm.LinkParams
+    grpc: cm.LinkParams
+    # per-step synchronous-distributed overhead sigma0*log2(p): stragglers
+    # on a shared, randomly-placed dragonfly (Piz Daint, paper Sec. VI-D)
+    # vs a dedicated deterministic ICI torus (v5e: ~0).
+    sync_s: float = 0.0
+    # fixed per-step overhead (dispatch, optimizer, collective setup):
+    # the term a larger per-device batch amortizes — the saturation
+    # curve of the paper's Fig. 2.
+    overhead_s: float = 450e-6
+
+
+PROFILES = {
+    "paper": HwProfile("paper", cm.PAPER_P100_FLOPS, 0.19,
+                       cm.LinkParams(alpha_s=5e-6, bandwidth=3e9),
+                       cm.LinkParams(50e-6, 3e9), sync_s=6e-3),
+    "v5e": HwProfile("v5e", hw.V5E.peak_bf16_flops, 0.45, cm.ICI,
+                     cm.GRPC),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentPoint:
+    """One cell of the characterization grid."""
+    design: str
+    model: str
+    p: int
+    batch_per_dev: int = BATCH_PER_DEV
+
+    def validate(self):
+        if self.design not in DESIGNS:
+            raise ValueError(f"design {self.design!r} not in {DESIGNS}")
+        if self.model not in PAPER_MODELS:
+            raise ValueError(f"model {self.model!r} not in {MODELS}")
+        if self.p < 1 or self.batch_per_dev < 1:
+            raise ValueError(f"p/batch must be >= 1: {self}")
+
+
+def grid(designs: Sequence[str] = DESIGNS,
+         models: Sequence[str] = MODELS,
+         workers: Sequence[int] = WORKERS,
+         batches: Sequence[int] = (BATCH_PER_DEV,)) -> list[ExperimentPoint]:
+    """The declarative grid: the cross product of the four axes."""
+    pts = [ExperimentPoint(d, m, p, b)
+           for d in designs for m in models for p in workers
+           for b in batches]
+    for pt in pts:
+        pt.validate()
+    return pts
+
+
+# -- per-design communication costs -----------------------------------------
+
+def design_latency_fn(design: str, p: int,
+                      prof: HwProfile) -> Callable[[float], float]:
+    """Per-message allreduce latency for one fused bucket under each
+    design: the PS transport pays one RPC per VARIABLE (no fusion — the
+    paper's gRPC pain point), the Horovod-family designs reduce FUSED
+    buckets."""
+    if design == "gRPC_PS":
+        return lambda b: cm.allreduce_latency(
+            "ps_gather", b, p, link=prof.grpc, ps_shards=max(p // 8, 1))
+    if design == "Baidu_ring":
+        return lambda b: cm.allreduce_latency("ring_rsa", b, p,
+                                              link=prof.link)
+    if design == "Horovod_NCCL2":
+        return lambda b: cm.allreduce_latency("psum", b, p, link=prof.link)
+    if design == "Horovod_MPI":
+        return lambda b: cm.allreduce_latency_host_staged(
+            "rhd_rsa", b, p, link=prof.link)
+    if design == "Horovod_MPI_Opt":
+        return lambda b: cm.allreduce_latency("rhd_rsa", b, p,
+                                              link=prof.link)
+    raise ValueError(f"unknown design {design!r}; one of {DESIGNS}")
+
+
+def fusion_threshold(design: str) -> int:
+    """PS reduces one message per variable; allreduce designs fuse."""
+    return 0 if design == "gRPC_PS" else FUSION_BYTES
+
+
+def compute_seconds(model: str, prof: HwProfile,
+                    batch_per_dev: int = BATCH_PER_DEV) -> float:
+    """Per-device fwd+bwd compute time (3x forward FLOPs at the
+    profile's MFU) — shared with benchmarks/overlap_sweep.py so the
+    BENCH_overlap.json trajectory can never desynchronize from the
+    scaling claims."""
+    info = PAPER_MODELS[model]
+    return 3 * info["gflops"] * 1e9 * batch_per_dev \
+        / (prof.flops * prof.mfu)
+
+
+def step_timeline(model: str, p: int, design: str, prof: HwProfile,
+                  batch_per_dev: int = BATCH_PER_DEV,
+                  latency_fn: Callable[[float], float] | None = None
+                  ) -> ov.Timeline:
+    """Timeline-simulated step: every design overlaps communication
+    with backward compute to the extent bucket readiness allows (the
+    wait-free-backprop schedule of core/overlap.py).  ``latency_fn``
+    overrides the cost model — the measured backend passes measured
+    per-bucket latencies through the SAME composition."""
+    info = PAPER_MODELS[model]
+    compute_s = compute_seconds(model, prof, batch_per_dev)
+    grad_bytes = info["params"] * 4
+    n_vars = MODEL_VARIABLES[model]
+    if p == 1:
+        return ov.model_timeline(0.0, 0, FUSION_BYTES, compute_s,
+                                 latency_fn=lambda b: 0.0)
+    if latency_fn is None:
+        latency_fn = design_latency_fn(design, p, prof)
+    return ov.model_timeline(grad_bytes, n_vars, fusion_threshold(design),
+                             compute_s, latency_fn=latency_fn,
+                             strategy=design)
+
+
+def sync_seconds(p: int, prof: HwProfile) -> float:
+    import math
+    return prof.sync_s * math.log2(p) if p > 1 else 0.0
+
+
+def step_time(model: str, p: int, design: str, prof: HwProfile,
+              batch_per_dev: int = BATCH_PER_DEV) -> float:
+    tl = step_timeline(model, p, design, prof, batch_per_dev)
+    return tl.step_s + sync_seconds(p, prof) + prof.overhead_s
+
+
+def throughput(model: str, p: int, design: str, prof: HwProfile,
+               batch_per_dev: int = BATCH_PER_DEV) -> float:
+    return p * batch_per_dev / step_time(model, p, design, prof,
+                                         batch_per_dev)
+
+
+# -- matrix execution -------------------------------------------------------
+
+def _row(point: ExperimentPoint, prof: HwProfile, backend: str,
+         tl: ov.Timeline) -> dict:
+    st = tl.step_s + sync_seconds(point.p, prof) + prof.overhead_s
+    ips = point.p * point.batch_per_dev / st
+    base = throughput(point.model, 1, "Horovod_MPI_Opt", prof,
+                      point.batch_per_dev)
+    return {
+        "design": point.design, "model": point.model, "p": point.p,
+        "batch_per_dev": point.batch_per_dev,
+        "profile": prof.name, "backend": backend,
+        "step_s": st, "images_per_s": ips,
+        "efficiency": ips / (base * point.p),
+        "comm_s": tl.comm_s, "exposed_comm_s": tl.exposed_comm_s,
+        "hidden_frac": tl.overlap_fraction,
+        "n_buckets": len(tl.events),
+    }
+
+
+def run_point(point: ExperimentPoint, profile: str = "paper",
+              backend: str = "model",
+              measured_latencies: Mapping[int, float] | None = None) -> dict:
+    """Evaluate one grid cell.  ``backend="measured"`` needs the
+    per-bucket-size measured latency table from
+    :func:`measure_design_latencies` (seconds, keyed by message bytes)."""
+    point.validate()
+    prof = PROFILES[profile]
+    if backend == "model":
+        tl = step_timeline(point.model, point.p, point.design, prof,
+                           point.batch_per_dev)
+    elif backend == "measured":
+        if point.p > 1 and measured_latencies is None:
+            raise ValueError("backend='measured' needs measured_latencies "
+                             "(measure_design_latencies)")
+        lat = None if point.p == 1 else \
+            (lambda b: measured_latencies[int(b)])
+        tl = step_timeline(point.model, point.p, point.design, prof,
+                           point.batch_per_dev, latency_fn=lat)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; model|measured")
+    return _row(point, prof, backend, tl)
+
+
+def run_matrix(points: Iterable[ExperimentPoint] | None = None,
+               profile: str = "paper", backend: str = "model") -> list[dict]:
+    """Evaluate the matrix on the cost-model backend (the measured
+    backend goes point-by-point through :func:`run_point` with its
+    latency tables — see tests/multidev_experiments_checks.py)."""
+    if points is None:
+        points = grid()
+    return [run_point(pt, profile=profile, backend=backend)
+            for pt in points]
+
+
+def query(rows: Iterable[Mapping], **filters) -> list[dict]:
+    """Filter matrix rows by exact field match:
+    ``query(rows, model="resnet50", p=64)``."""
+    out = []
+    for r in rows:
+        if all(r.get(k) == v for k, v in filters.items()):
+            out.append(dict(r))
+    return out
+
+
+def value(rows: Iterable[Mapping], field: str, **filters) -> float:
+    """The single value of ``field`` selected by ``filters`` — raises if
+    the query is not unique (a claim must pin ONE cell)."""
+    hits = query(rows, **filters)
+    if len(hits) != 1:
+        raise ValueError(f"query {filters} matched {len(hits)} rows, "
+                         "expected exactly 1")
+    return hits[0][field]
+
+
+# -- measured backend (multi-device process only) ---------------------------
+
+def bucket_sizes(model: str, design: str) -> list[int]:
+    """The distinct fused-message sizes the design's schedule reduces
+    for ``model`` — what the measured backend has to wall-clock."""
+    info = PAPER_MODELS[model]
+    sizes = ov.fused_bucket_bytes(info["params"] * 4,
+                                  MODEL_VARIABLES[model],
+                                  fusion_threshold(design))
+    return sorted({int(b) for b in sizes})
+
+
+def measure_design_latencies(design: str, p: int,
+                             sizes: Sequence[int], reps: int = 5,
+                             scale: float = 1.0) -> dict[int, float]:
+    """Wall-clock the design's reducer on the first ``p`` XLA devices
+    for each message size (bytes).  Requires a multi-device process
+    (REPRO_TEST_DEVICES); returns {bytes: seconds}.
+
+    ``scale`` shrinks the MEASURED message so CPU-hosted checks stay
+    fast on the ~100 MB ResNet-50 buckets; the returned latency is the
+    honest wall-clock of the scaled message, keyed by the full-size
+    bucket bytes (NOT rescaled back up — a linear rescale would inflate
+    the fixed per-call dispatch/alpha term by 1/scale).  Scaled
+    measurements therefore sit closer to the alpha-dominated regime:
+    per-design comparisons at equal scale remain apples-to-apples, and
+    the per-message-count effects they emphasize (the PS transport's
+    one-RPC-per-variable pain) are exactly the paper's point, but
+    absolute full-size latencies need scale=1."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import reducers
+    from repro.core.compat import shard_map
+
+    strategy = DESIGN_STRATEGY[design]
+    devs = jax.devices()
+    if len(devs) < p:
+        raise RuntimeError(f"measured backend needs {p} devices, "
+                           f"have {len(devs)} (set REPRO_TEST_DEVICES)")
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    fn = jax.jit(shard_map(
+        lambda xl: reducers.allreduce(xl, ("data",), strategy),
+        mesh, in_specs=P("data"), out_specs=P("data")))
+    out: dict[int, float] = {}
+    for n_bytes in sizes:
+        meas_bytes = max(int(n_bytes * scale), 4)
+        n = max(meas_bytes // 4, 1)
+        x = jnp.ones((p * n,), jnp.float32)
+        r = fn(x)
+        r.block_until_ready()
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = fn(x)
+            r.block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        out[int(n_bytes)] = best
+    return out
+
+
+def run_measured_point(point: ExperimentPoint, profile: str = "paper",
+                       reps: int = 5, scale: float = 1.0) -> dict:
+    """One grid cell on the measured backend: wall-clock every distinct
+    bucket size of the design's schedule, then compose the SAME timeline
+    the model backend uses."""
+    lats = None
+    if point.p > 1:
+        lats = measure_design_latencies(
+            point.design, point.p, bucket_sizes(point.model, point.design),
+            reps=reps, scale=scale)
+    return run_point(point, profile=profile, backend="measured",
+                     measured_latencies=lats)

@@ -86,14 +86,16 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
     return step, (params, specs["cache"], specs["tokens"]), {}
 
 
-def _schedule_record(agg, mesh, dp_axes, params_struct, roof) -> dict:
+def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
+                     collective_bytes=None) -> dict:
     """Resolve and summarize the per-bucket reduction schedule: which
     algorithm each fusion bucket got (one strategy everywhere unless
     strategy='auto'), the cost-model latency the selector predicted, the
     collective latency the roofline actually charges from the compiled
-    HLO bytes, and the overlap timeline — bucket ready-times played
-    against per-bucket latencies to predict how much of the comm the
-    backward hides (core/overlap.py)."""
+    HLO bytes, the measured-vs-modeled wire-byte cross-check, and the
+    overlap timeline — bucket ready-times played against per-bucket
+    latencies to predict how much of the comm the backward hides
+    (core/overlap.py)."""
     from repro.core import overlap as overlap_mod
     from repro.launch import roofline as rl
     from repro.models import param_groups
@@ -113,6 +115,8 @@ def _schedule_record(agg, mesh, dp_axes, params_struct, roof) -> dict:
         "algorithms": algorithms,
         "predicted_comm_s": predicted,
         "charged_comm_s": roof.collective_s,
+        "wire_check": rl.wire_check(rows, axis_sizes,
+                                    collective_bytes or {}),
         "overlap": rl.overlap_report(roof, timeline),
         # cap the per-bucket listing so --all sweeps stay readable
         "buckets": [{"bytes": r["bytes"], "strategy": r["strategy"],
@@ -205,7 +209,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             if aux.get("aggregator") is not None:
                 rec["schedule"] = _schedule_record(
                     aux["aggregator"], mesh, aux["dp_axes"], args[0],
-                    roof=roof)
+                    roof=roof, collective_bytes=coll.bytes_by_kind)
             if verbose:
                 print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
                       f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
@@ -226,6 +230,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                           f"[{algs}] predicted="
                           f"{sched['predicted_comm_s']*1e3:.2f}ms "
                           f"charged={sched['charged_comm_s']*1e3:.2f}ms")
+                    wc = sched.get("wire_check") or {}
+                    if wc:
+                        print(f"  wire: predicted "
+                              f"{wc['predicted_total']/2**20:.1f} MiB vs "
+                              f"charged {wc['charged_total']/2**20:.1f} "
+                              f"MiB — "
+                              + ("consistent" if wc["consistent"]
+                                 else "MISMATCH"))
                     ov = sched["overlap"]
                     print(f"  overlap: {ov['overlap_fraction']*100:.0f}% "
                           f"of comm hidden — step "
@@ -234,6 +246,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                           f"overlapped (exposed "
                           f"{ov['exposed_comm_s']*1e3:.2f}ms)")
     except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+        from repro.core.compat import PartialAutoUnsupported
+        if isinstance(e, PartialAutoUnsupported):
+            # Environment limitation, not a config error: the guard in
+            # core/compat.py turned what used to be a fatal XLA process
+            # abort (IsManualSubgroup) into a clean, recorded skip —
+            # pinned by tests/test_partial_auto_guard.py.
+            rec.update(status="SKIP", reason=str(e))
+            if verbose:
+                print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
+                      f"SKIP (partial-auto unsupported on this jax)")
+            return rec
         rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
         if verbose:

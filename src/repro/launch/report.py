@@ -103,9 +103,9 @@ def schedule_table(recs):
     out = ["### Reduction schedules (per-bucket algorithm selection "
            "+ predicted overlap)\n",
            "| arch | shape | strategy | buckets | algorithms | "
-           "predicted comm | charged comm | comm hidden | step "
-           "serial→overlapped |",
-           "|---|---|---|---|---|---|---|---|---|"]
+           "predicted comm | charged comm | wire bytes (pred→charged) | "
+           "comm hidden | step serial→overlapped |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
         s = r["schedule"]
         algs = " + ".join(f"{k}×{v}" for k, v in
@@ -117,11 +117,18 @@ def schedule_table(recs):
                     f"{fmt_s(ov['step_overlapped_s'])}")
         else:
             hidden = step = "—"
+        wc = s.get("wire_check")
+        if wc:
+            mark = "✓" if wc["consistent"] else "**✗**"
+            wire = (f"{fmt_bytes(wc['predicted_total'])} → "
+                    f"{fmt_bytes(wc['charged_total'])} {mark}")
+        else:
+            wire = "—"
         out.append(
             f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
             f"{s['n_buckets']} | {algs} | "
             f"{fmt_s(s['predicted_comm_s'])} | "
-            f"{fmt_s(s['charged_comm_s'])} | {hidden} | {step} |")
+            f"{fmt_s(s['charged_comm_s'])} | {wire} | {hidden} | {step} |")
     return "\n".join(out) + "\n"
 
 

@@ -138,6 +138,61 @@ def step_estimate_s(roof: "Roofline",
     return max(roof.compute_s, roof.memory_s) + coll
 
 
+def wire_check(schedule_rows, axis_sizes, collective_bytes,
+               rel_tol: float = 0.02) -> dict:
+    """Measured-vs-modeled comm-byte consistency (DESIGN.md §3.7/§4):
+    compare the HLO-charged collective bytes of a compiled step against
+    the wire bytes the experiment matrix's accounting predicts for the
+    resolved per-bucket schedule.
+
+    ``schedule_rows``: GradientAggregator.schedule rows ({bytes,
+    strategy, ...}); ``axis_sizes``: data-axis sizes, outermost first
+    (multi-axis meshes route through the hierarchical/flat multi-axis
+    accounting in ``reducers.wire_bytes``); ``collective_bytes``: the
+    per-kind byte dict from the HLO parse.  Each strategy predicts the
+    HLO kind it compiles to: ppermute-schedule strategies →
+    collective-permute, ``psum`` → all-reduce payload (one result-size
+    charge, the vendor op), ``ps_gather`` → all-gather (its recv-side
+    N(p-1) wire bytes sit inside the p·N gathered result).  The charged
+    side may legitimately exceed the prediction (model-axis GSPMD
+    collectives, padding on non-divisible chunks, old-jax degraded-mode
+    emulation), so the verdict is per kind: ``consistent`` = every
+    predicted kind is within ``rel_tol`` below the charge it explains
+    or lower.
+    """
+    from repro.core.reducers import wire_bytes as _wire
+    sizes = tuple(int(s) for s in axis_sizes)
+    predicted: dict = {}
+    for r in schedule_rows:
+        strat, b = r["strategy"], int(r["bytes"])
+        if strat == "psum":
+            kind = "all-reduce"
+            n = b
+        else:
+            kind = "all-gather" if strat == "ps_gather" \
+                else "collective-permute"
+            n = _wire(strat, b, sizes if len(sizes) > 1 else sizes[0])
+        predicted[kind] = predicted.get(kind, 0) + n
+    charged = {k: int(v) for k, v in collective_bytes.items()}
+    kinds = {}
+    for kind, want in sorted(predicted.items()):
+        got = charged.get(kind, 0)
+        kinds[kind] = {
+            "predicted": int(want), "charged": got,
+            "ratio": (got / want) if want else None,
+            # charged >= predicted*(1-tol): the schedule's bytes are in
+            # the HLO (extra charge from other collectives is allowed)
+            "ok": got >= want * (1.0 - rel_tol),
+        }
+    return {
+        "axis_sizes": list(sizes),
+        "predicted_total": int(sum(predicted.values())),
+        "charged_total": int(sum(charged.values())),
+        "kinds": kinds,
+        "consistent": all(k["ok"] for k in kinds.values()),
+    }
+
+
 def overlap_report(roof: "Roofline", timeline) -> dict:
     """Predicted overlap efficiency of a config: the timeline's hidden/
     exposed split rescaled to the roofline's HLO-charged collective

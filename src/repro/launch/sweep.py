@@ -83,7 +83,7 @@ def main():
             n_fail += st in ("FAIL", "TIMEOUT")
             dom = rec.get("roofline", {}).get("dominant", "-")
             sched = rec.get("schedule")
-            algs = ov = ""
+            algs = ov = wire = ""
             if sched:
                 algs = " algs=" + "+".join(
                     f"{s}x{n}" for s, n in
@@ -91,8 +91,13 @@ def main():
                 if sched.get("overlap"):
                     ov = (" overlap="
                           f"{sched['overlap']['overlap_fraction']*100:.0f}%")
+                wc = sched.get("wire_check")
+                if wc:
+                    wire = " wire=" + ("ok" if wc.get("consistent")
+                                       else "MISMATCH")
             print(f"{st:7s} {arch:22s} {shape:12s} {rec.get('mesh')} "
-                  f"dominant={dom}{algs}{ov} wall={rec.get('wall_s', 0)}s",
+                  f"dominant={dom}{algs}{ov}{wire} "
+                  f"wall={rec.get('wall_s', 0)}s",
                   flush=True)
     print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
     return 1 if n_fail else 0

@@ -103,3 +103,94 @@ def test_step_time_overlap():
 def test_unknown_strategy_raises():
     with pytest.raises(ValueError):
         cm.allreduce_latency("nope", 1, 2)
+    with pytest.raises(ValueError):
+        wire_bytes("nope", 1024, 4)
+    with pytest.raises(ValueError):
+        allreduce_steps("nope", 4)
+
+
+# ---------------------------------------------------------------------------
+# Multi-axis wire accounting (hierarchical two-level + flat folds)
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_wire_bytes_decompose_into_levels():
+    from repro.core.reducers import hierarchical_wire_bytes
+    n = 12 * (1 << 20)
+    for pods, d in ((2, 3), (3, 4), (2, 16), (6, 4)):
+        levels = hierarchical_wire_bytes(n, d=d, pods=pods)
+        assert levels["intra"] == 2 * int(n * (d - 1) / d)
+        assert levels["inter"] == wire_bytes("rhd_rsa", n // d, pods)
+        assert wire_bytes("hierarchical", n, (pods, d)) == \
+            levels["intra"] + levels["inter"]
+
+
+def test_hierarchical_wire_bytes_degenerate_axes():
+    from repro.core.reducers import hierarchical_wire_bytes
+    n = 1 << 20
+    # single-axis hierarchical degenerates to ring, like the reducer
+    assert wire_bytes("hierarchical", n, 8) == wire_bytes("ring_rsa", n, 8)
+    assert allreduce_steps("hierarchical", 8) == \
+        allreduce_steps("ring_rsa", 8)
+    # one pod: pure intra ring; one-device pods: pure inter RHD
+    assert hierarchical_wire_bytes(n, d=4, pods=1)["inter"] == 0
+    assert hierarchical_wire_bytes(n, d=1, pods=4) == \
+        {"intra": 0, "inter": wire_bytes("rhd_rsa", n, 4)}
+
+
+def test_hierarchical_beats_flat_on_wire():
+    """The point of the two-level schedule: only N/d crosses the pod
+    links, so total wire bytes undercut the flat per-axis fold for
+    every axis factorization."""
+    n = 24 * (1 << 20)
+    for pods in (2, 3, 4, 6, 8):
+        for d in (2, 3, 4, 6, 8):
+            hier = wire_bytes("hierarchical", n, (pods, d))
+            flat = wire_bytes("rhd_rsa", n, (pods, d))
+            assert hier < flat, (pods, d, hier, flat)
+
+
+def test_flat_multiaxis_wire_is_per_axis_sum():
+    n = 1 << 20
+    for strategy in ("ring_rsa", "rhd_rsa", "psum", "ps_gather"):
+        assert wire_bytes(strategy, n, (3, 4)) == \
+            wire_bytes(strategy, n, 3) + wire_bytes(strategy, n, 4)
+    for strategy in ("ring_rsa", "rhd_rsa", "ps_gather"):
+        assert allreduce_steps(strategy, (3, 4)) == \
+            allreduce_steps(strategy, 3) + allreduce_steps(strategy, 4)
+
+
+def test_hierarchical_steps_two_levels():
+    # ring RS + ring AG over d, RHD over pods
+    assert allreduce_steps("hierarchical", (2, 3)) == \
+        2 * (3 - 1) + allreduce_steps("rhd_rsa", 2)
+    assert allreduce_steps("hierarchical", (3, 4)) == \
+        2 * 3 + allreduce_steps("rhd_rsa", 3)
+
+
+def test_multiaxis_validation():
+    with pytest.raises(ValueError):
+        wire_bytes("hierarchical", 1024, (2, 3, 4))   # 3 axes
+    with pytest.raises(ValueError):
+        allreduce_steps("hierarchical", (2, 3, 4))
+    with pytest.raises(ValueError):
+        wire_bytes("ring_rsa", 1024, ())
+    with pytest.raises(ValueError):
+        wire_bytes("ring_rsa", 1024, (0, 4))
+
+
+def test_hierarchical_latency_charges_wire_accounting():
+    """The cost model's inter-pod term must flow through the same wire
+    accounting the HLO pin verifies (reducers.hierarchical_wire_bytes),
+    not a parallel formula: subtracting the alpha/gamma terms leaves
+    exactly intra/inter bytes at the two link betas."""
+    from repro.core.reducers import hierarchical_wire_bytes
+    n, d, pods = float(48 << 20), 4, 3
+    intra, inter = cm.ICI, cm.DCN
+    lat = cm.hierarchical_latency(n, d, pods, intra=intra, inter=inter,
+                                  gamma=0.0)
+    alphas = 2 * (d - 1) * intra.alpha_s \
+        + allreduce_steps("rhd_rsa", pods) * inter.alpha_s
+    levels = hierarchical_wire_bytes(int(n), d=d, pods=pods)
+    want = alphas + levels["intra"] * intra.beta \
+        + levels["inter"] * inter.beta
+    assert lat == pytest.approx(want, rel=1e-9)

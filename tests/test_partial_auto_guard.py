@@ -1,0 +1,105 @@
+"""PR-3 known-limit turned guarded failure: on legacy jax, partial-auto
+shard_map over a production-scale mesh used to ABORT the process inside
+XLA's SPMD partitioner (fatal ``Check failed: sharding.IsManualSubgroup``
+— uncatchable from Python).  core/compat.py now refuses up front with
+an actionable PartialAutoUnsupported, and launch/dryrun records the
+config as a clean SKIP instead of dying mid-sweep."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import compat
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+needs_legacy = pytest.mark.skipif(
+    compat._HAS_NEW_SHARD_MAP,
+    reason="new-jax shard_map lowers partial-auto natively — no guard")
+
+
+def test_exception_type_and_threshold_constant():
+    assert issubclass(compat.PartialAutoUnsupported, RuntimeError)
+    # the threshold must stay >= the largest multidev-validated mesh
+    # (12 devices today) or the degraded-mode test wall stops running
+    assert compat.PARTIAL_AUTO_MAX_DEVICES >= 12
+
+
+@needs_legacy
+@pytest.mark.timeout(300)
+def test_guard_raises_before_lowering():
+    """64-device partial-auto mesh: shard_map construction itself must
+    raise (no lowering, no compile, no process abort); a 8-device
+    partial-auto mesh stays allowed (degraded mode, multidev-validated);
+    full-manual meshes of any size never hit the guard."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import sys
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import compat
+
+devs = np.array(jax.devices())
+f = lambda x: x
+
+# 64-device partial-auto: refused with the actionable error
+mesh = Mesh(devs.reshape(8, 8), ("data", "model"))
+try:
+    compat.shard_map(f, mesh, in_specs=P("data"), out_specs=P("data"),
+                     axis_names={"data"})
+except compat.PartialAutoUnsupported as e:
+    msg = str(e)
+    assert "IsManualSubgroup" in msg, msg
+    assert "jax.shard_map" in msg, msg          # upgrade path named
+    assert str(compat.PARTIAL_AUTO_MAX_DEVICES) in msg, msg
+else:
+    raise SystemExit("64-device partial-auto was not refused")
+
+# 8-device partial-auto: still allowed (the validated degraded mode)
+small = Mesh(devs[:8].reshape(4, 2), ("data", "model"))
+fn = compat.shard_map(f, small, in_specs=P("data"), out_specs=P("data"),
+                      axis_names={"data"})
+assert fn is not None
+
+# full-manual 64-device mesh: no guard (native legacy lowering)
+full = Mesh(devs.reshape(8, 8), ("data", "model"))
+fn = compat.shard_map(f, full, in_specs=P(("data", "model")),
+                      out_specs=P(("data", "model")))
+out = jax.jit(fn)(jnp.arange(128.0))
+assert out.shape == (128,)
+print("GUARD-OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code % SRC],
+                          capture_output=True, text=True, timeout=280,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "GUARD-OK" in proc.stdout
+
+
+@needs_legacy
+@pytest.mark.timeout(420)
+def test_dryrun_train_records_skip_not_abort(tmp_path):
+    """The exact PR-3 crash scenario: a train-shape dry-run on the
+    256-chip production mesh.  It must now exit 0 with a SKIP record
+    naming the limitation (previously: SIGABRT mid-compile, no JSON)."""
+    out = tmp_path / "rec.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "smollm-360m", "--shape", "train_4k", "--json", str(out)],
+        capture_output=True, text=True, timeout=400, env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    rec = json.loads(out.read_text())
+    assert rec["status"] == "SKIP"
+    assert "IsManualSubgroup" in rec["reason"]
+    assert rec["mesh"] == "16x16"

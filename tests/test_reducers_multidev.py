@@ -47,6 +47,17 @@ def test_multidev_mixed_strategy_checks():
 
 
 @pytest.mark.timeout(900)
+def test_multidev_experiments_checks():
+    """Measured backend of the characterization matrix on p ∈ {3, 4, 8}:
+    real reducer wall-clock composed through the model's timeline, with
+    the No-gRPC-beats-gRPC_PS ordering; the hierarchical two-level HLO
+    wire decomposition; and the roofline.wire_check consistency layer
+    against a real compiled step."""
+    _run_checks("multidev_experiments_checks.py", 8,
+                "ALL EXPERIMENTS CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
 def test_multidev_overlap_checks():
     """overlap=True (in-backward per-bucket reductions) on
     p ∈ {3, 4, 6, 8}: bit-exact with the post-backward path and with

@@ -1,0 +1,137 @@
+"""wire_dtype coverage (§Perf C2 knob): bf16 wire halves the HLO
+permute bytes, the aggregated mean stays within a DERIVED bf16
+summation tolerance of the fp32 reference, and the plan cache never
+aliases plans resolved under different wire dtypes."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+
+from repro.core import PlanCache
+
+
+def test_plan_cache_key_distinguishes_wire_itemsize():
+    """The wire itemsize is part of the plan key unconditionally —
+    with AND without selector switch points (two aggregators differing
+    only in wire_dtype must never share a cache entry)."""
+    tree = {"a": jnp.zeros((64,), jnp.float32)}
+    for pts in (None, (100,)):
+        k4 = PlanCache.key_for(tree, 1024, None, True,
+                               switch_points=pts, switch_itemsize=4)
+        k2 = PlanCache.key_for(tree, 1024, None, True,
+                               switch_points=pts, switch_itemsize=2)
+        assert k4 != k2, pts
+    # and the itemsize never collides with an unrelated key field
+    cache = PlanCache()
+    cache.get_or_build(tree, 1024, switch_itemsize=4)
+    cache.get_or_build(tree, 1024, switch_itemsize=2)
+    assert len(cache) == 2
+
+
+def test_bf16_wire_halves_permute_bytes_and_bounds_error():
+    """Lowered + compiled on 4 forced host devices (subprocess, like
+    test_hlo_analysis):
+
+    * the LOWERED program's collective-permute bytes with
+      wire_dtype='bfloat16' are EXACTLY half the float32-wire bytes,
+      and each equals the per-schedule `reducers.wire_bytes` sum (the
+      compiled CPU module re-widens bf16 buffers to f32 — XLA:CPU float
+      normalization — so the wire claim is pinned on the program we
+      emit, which lowers natively on the TPU target; the compiled
+      schedule SHAPE must still be unchanged);
+    * the bf16-wire aggregated mean is within the derived tolerance
+      (log2(p) sequential bf16 adds + input rounding, eps=2^-8) of the
+      fp32-wire reference on random [0,1) gradients;
+    * both aggregators share one PlanCache and occupy TWO entries.
+    """
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, %r)
+import math, re
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+from repro.core.compat import shard_map
+from repro.core.reducers import wire_bytes
+from repro.launch import hlo_analysis as H
+
+p = 4
+mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
+rng = np.random.RandomState(0)
+# local-shard element counts divisible by the RHD core so no padding
+# blurs the byte accounting; a+b fuse (12 KiB < 16 KiB), w stays single
+shapes = {"a": 1024, "b": 2048, "w": 8192}
+grads = {k: jnp.asarray(rng.rand(p * n).astype(np.float32))
+         for k, n in shapes.items()}
+
+def stablehlo_permute_bytes(txt):
+    total, count = 0, 0
+    for line in txt.splitlines():
+        if "stablehlo.collective_permute" not in line:
+            continue
+        m = re.search(r"tensor<(\d+)x(f32|bf16)>\)\s*->", line)
+        assert m, line
+        count += 1
+        total += int(m.group(1)) * (4 if m.group(2) == "f32" else 2)
+    return total, count
+
+cache = PlanCache()
+def run(wire):
+    agg = GradientAggregator(
+        AggregatorConfig(strategy="rhd_rsa", fusion_threshold_mb=0.015625,
+                         wire_dtype=wire), ("data",), cache=cache)
+    fn = jax.jit(shard_map(lambda g: agg(g), mesh, in_specs=P("data"),
+                           out_specs=P("data")))
+    lowered = fn.lower(grads)
+    ir_bytes, ir_count = stablehlo_permute_bytes(lowered.as_text())
+    compiled = H.analyze(lowered.compile().as_text())
+    out = fn(grads)
+    return agg, ir_bytes, ir_count, compiled, \
+        {k: np.asarray(v) for k, v in out.items()}
+
+agg32, b32, n32, comp32, out32 = run("")
+aggbf, bbf, nbf, compbf, outbf = run("bfloat16")
+
+assert b32 == 2 * bbf, (b32, bbf)
+assert b32 == sum(wire_bytes(s, b, p) for b, s in agg32.last_schedule), \
+    (b32, agg32.last_schedule)
+assert bbf == sum(wire_bytes(s, b, p) for b, s in aggbf.last_schedule), \
+    (bbf, aggbf.last_schedule)
+# the schedules' wire bytes themselves halve (2-byte vs 4-byte wire)
+assert [b for b, _ in aggbf.last_schedule] == \
+    [b // 2 for b, _ in agg32.last_schedule]
+# compiled schedule shape is identical (same permute count, no
+# all-reduce fallback) even where XLA:CPU re-widens the buffers
+assert compbf.collective_counts.get("collective-permute") == \
+    comp32.collective_counts.get("collective-permute") == n32 == nbf
+assert "all-reduce" not in compbf.collective_counts
+
+# derived tolerance: inputs in [0,1) are rounded once to bf16
+# (rel eps 2^-8), then log2(p) sequential bf16 adds each round a
+# partial sum of magnitude <= p; the mean divides by p.
+eps = 2.0 ** -8
+atol = (math.log2(p) + 1) * eps
+for k in out32:
+    a = out32[k].reshape(p, -1)
+    b = outbf[k].reshape(p, -1)
+    assert (a == a[0]).all() and (b == b[0]).all()   # replicated mean
+    err = np.abs(a[0] - b[0]).max()
+    assert err <= atol, (k, err, atol)
+    assert err > 0.0    # bf16 wire really did lose precision (knob works)
+
+assert len(cache) == 2, len(cache)
+print("OK")
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c",
+                           code % os.path.abspath(src)],
+                          capture_output=True, text=True, timeout=300,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "OK" in proc.stdout

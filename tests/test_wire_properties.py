@@ -1,0 +1,72 @@
+"""Wire-accounting property tests: all strategies × axis factorizations
+(p = d·pods for d, pods ∈ {2,3,4,6,8}), hypothesis-driven.
+
+Skipped cleanly when ``hypothesis`` (dev extra, requirements-dev.txt) is
+not installed; the deterministic unit tests in test_cost_model.py always
+run."""
+import pytest
+
+from repro.core.reducers import (STRATEGIES, allreduce_steps,
+                                 hierarchical_wire_bytes, wire_bytes)
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+AXIS = st.sampled_from((2, 3, 4, 6, 8))
+# messages divisible by every d·core combination keep int arithmetic
+# exact (d up to 8, RHD core up to 8 → lcm 840 covers 3·8, 6·4, ...)
+NBYTES = st.integers(1, 4096).map(lambda k: k * 840 * 8)
+FLAT = tuple(s for s in STRATEGIES if s != "hierarchical")
+
+
+@settings(max_examples=100, deadline=None)
+@given(strategy=st.sampled_from(FLAT), d=AXIS, pods=AXIS, n=NBYTES)
+def test_flat_multiaxis_is_per_axis_sum(strategy, d, pods, n):
+    """A flat strategy on the (pods, d) mesh folds a FULL allreduce per
+    axis (what reducers.allreduce executes): bytes and steps decompose
+    into the per-axis sums."""
+    assert wire_bytes(strategy, n, (pods, d)) == \
+        wire_bytes(strategy, n, pods) + wire_bytes(strategy, n, d)
+    if strategy != "psum":     # psum steps are vendor-chosen
+        assert allreduce_steps(strategy, (pods, d)) == \
+            allreduce_steps(strategy, pods) + allreduce_steps(strategy, d)
+
+
+@settings(max_examples=100, deadline=None)
+@given(d=AXIS, pods=AXIS, n=NBYTES)
+def test_hierarchical_decomposes_and_beats_flat(d, pods, n):
+    levels = hierarchical_wire_bytes(n, d=d, pods=pods)
+    total = wire_bytes("hierarchical", n, (pods, d))
+    # exact two-level decomposition
+    assert total == levels["intra"] + levels["inter"]
+    # the inter level carries the 1/d chunk, never the full buffer
+    assert levels["inter"] <= wire_bytes("rhd_rsa", n // d, pods)
+    assert levels["intra"] == 2 * n * (d - 1) // d
+    # and undercuts the flat per-axis fold of the paper's design
+    assert total < wire_bytes("rhd_rsa", n, (pods, d))
+
+
+@settings(max_examples=100, deadline=None)
+@given(strategy=st.sampled_from(STRATEGIES), d=AXIS, pods=AXIS,
+       k=st.integers(1, 1024))
+def test_wire_bytes_monotone_in_message_size(strategy, d, pods, k):
+    n_small = k * 840 * 8
+    n_big = 2 * n_small
+    assert wire_bytes(strategy, n_small, (pods, d)) <= \
+        wire_bytes(strategy, n_big, (pods, d))
+    assert wire_bytes(strategy, n_small, (pods, d)) >= 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(strategy=st.sampled_from(STRATEGIES), d=AXIS, pods=AXIS)
+def test_steps_positive_and_size_free(strategy, d, pods):
+    if strategy == "psum":
+        return
+    steps = allreduce_steps(strategy, (pods, d))
+    assert steps > 0
+    # degenerate single-device axes contribute nothing
+    assert allreduce_steps(strategy, (1, d)) == allreduce_steps(strategy, d)
+    if strategy != "hierarchical":
+        assert allreduce_steps(strategy, (pods, 1)) == \
+            allreduce_steps(strategy, pods)
