@@ -49,6 +49,16 @@ NONPOW2_P = [3, 6, 12, 24]
 # to bandwidth-bound regimes.
 TABLE_PS = [3, 4, 6, 8, 12]
 TABLE_SIZES = [1024, 16 * 1024, 256 * 1024, 1 << 20, 8 << 20]
+# Multi-axis (pod × data) host meshes for the composed two-level sweep:
+# (pods, d) with d×pods ∈ {2×3, 4×2, 2×4} — 6/8/8 devices.  Each mesh
+# measures the flat folds AND the composed ring_rsa×{rhd_rsa, ring_rsa,
+# psum} schedules (core/schedule.py decomposition trees), emitted as
+# "axes" entries so the empirical selector can prefer a composition
+# per bucket on multi-axis meshes.
+TABLE_MESHES = [(3, 2), (2, 4), (4, 2)]
+MULTIAXIS_STRATEGIES = ["psum", "ring_rsa", "rhd_rsa",
+                        "ring_rsa×rhd_rsa", "ring_rsa×ring_rsa",
+                        "ring_rsa×psum"]
 BENCH_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_allreduce.json")
 
@@ -149,6 +159,70 @@ def measured_rows(sizes=None, device_counts=(8,)):
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+_MEASURE_MULTIAXIS_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+import sys, time, json
+sys.path.insert(0, {src!r})
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import reducers
+from repro.core import schedule as S
+from repro.core.compat import shard_map
+
+devs = jax.devices()
+out = []
+for pods, d in {meshes!r}:
+    p = pods * d
+    mesh = Mesh(np.array(devs[:p]).reshape(pods, d), ("pod", "data"))
+    for n_bytes in {sizes!r}:
+        n = max(n_bytes // 4, 1)
+        x = jnp.ones((p * n,), jnp.float32)
+        row = {{"p": p, "axes": [pods, d], "bytes": n_bytes,
+                "latency_us": {{}}}}
+        for strat in {strategies!r}:
+            stages = S.decompose(strat, n_bytes, ("pod", "data"),
+                                 (pods, d))
+            fn = jax.jit(shard_map(
+                lambda xl: reducers.execute_stages(xl, stages),
+                mesh, in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+                axis_names={{"pod", "data"}}, check_vma=False))
+            r = fn(x); r.block_until_ready()
+            reps = 20 if n_bytes < (1 << 20) else 5
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r = fn(x)
+            r.block_until_ready()
+            row["latency_us"][strat] = \
+                (time.perf_counter() - t0) / reps * 1e6
+        out.append(row)
+print(json.dumps(out))
+"""
+
+
+def measured_multiaxis_rows(sizes=None, meshes=None):
+    """Wall-clock flat folds and composed two-level schedules on
+    (pod × data) host meshes — executed stage-by-stage through the SAME
+    ``reducers.execute_stages`` path the aggregator uses for a resolved
+    ReduceSchedule."""
+    sizes = sizes or TABLE_SIZES
+    meshes = [tuple(m) for m in (meshes or TABLE_MESHES)]
+    ndev = max(pods * d for pods, d in meshes)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _MEASURE_MULTIAXIS_SNIPPET.format(
+        src=os.path.abspath(src), sizes=list(sizes), ndev=ndev,
+        meshes=meshes, strategies=MULTIAXIS_STRATEGIES)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def measured_tuning_entries(ps=None, sizes=None):
     """Measured-mode tuning entries: wall-clock each strategy on real
     XLA host submeshes — the MVAPICH2 way (run on the deployment
@@ -165,16 +239,26 @@ def measured_tuning_entries(ps=None, sizes=None):
     return entries
 
 
-def build_tuning_table(mode="measured", ps=None, sizes=None) -> dict:
+def build_tuning_table(mode="measured", ps=None, sizes=None,
+                       meshes=None) -> dict:
     ps = list(ps or TABLE_PS)
     sizes = list(sizes or TABLE_SIZES)
     if mode == "analytic":
         table = sel.build_analytic_table(ps, sizes, link=cm.ICI)
         table["meta"] = {"mode": "analytic", "link": "ici"}
     elif mode == "measured":
+        entries = measured_tuning_entries(ps, sizes)
+        meshes = [list(m) for m in (meshes if meshes is not None
+                                    else TABLE_MESHES)]
+        if meshes:
+            # composed two-level sweep on (pod × data) host meshes —
+            # "axes" entries the empirical selector matches exactly
+            entries += measured_multiaxis_rows(sizes=sizes,
+                                               meshes=meshes)
         table = {"schema": sel.TABLE_SCHEMA, "link": "host-cpu",
-                 "entries": measured_tuning_entries(ps, sizes),
-                 "meta": {"mode": "measured", "platform": "xla-host-cpu"}}
+                 "entries": entries,
+                 "meta": {"mode": "measured", "platform": "xla-host-cpu",
+                          "meshes": meshes}}
     else:
         raise ValueError(f"table mode {mode!r}; one of analytic|measured")
     table["meta"].update({
@@ -236,6 +320,13 @@ def run(csv=True, measure=True):
                     lines.append(f"allreduce_micro.measured.{k[:-3]},"
                                  f"{v:.1f},p={r['p']} bytes={r['bytes']}"
                                  f" host-cpu")
+        # composed two-level schedules on (pod × data) meshes
+        for r in measured_multiaxis_rows(sizes=[64 * 1024, 1 << 20]):
+            pods, d = r["axes"]
+            for s, v in r["latency_us"].items():
+                lines.append(f"allreduce_micro.multiaxis.{s},"
+                             f"{v:.1f},axes={pods}x{d} "
+                             f"bytes={r['bytes']} host-cpu")
     return lines
 
 

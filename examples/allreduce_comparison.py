@@ -13,7 +13,7 @@ os.environ.setdefault("XLA_FLAGS",
 import jax
 
 from repro.configs import get_spec
-from repro.core import AggregatorConfig, cost_model
+from repro.core import AggregatorConfig
 from repro.data.synthetic import SyntheticText
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -69,30 +69,19 @@ def main():
             if n:
                 counts[kind] = n
         agg = shardings["aggregator"]
-        if strategy == "auto":
-            # the selector mixed algorithms per fusion bucket: the
-            # projection is the sum of each bucket's own best latency
-            proj = sum(
-                cost_model.hierarchical_latency(b, d=4, pods=2)
-                if s == "hierarchical"
-                else cost_model.flat_multiaxis_latency(s, b, d=4, pods=2)
-                for b, s in agg.last_schedule)
-        elif strategy == "hierarchical":
-            proj = cost_model.hierarchical_latency(grad_bytes, d=4,
-                                                   pods=2)
-        else:
-            proj = cost_model.flat_multiaxis_latency(strategy, grad_bytes,
-                                                     d=4, pods=2)
+        # the resolved ReduceSchedule IR records every bucket's
+        # decomposition tree and predicted latency — the projection is
+        # just its stage-sum, whatever mix the selector chose
+        sched = agg.last_schedule
+        proj = sched.predicted_s
         print(f"{strategy:13s} | {LABEL[strategy]}")
         print(f"  losses: {['%.3f' % l for l in losses]}")
         print(f"  schedule: {dict(counts)}")
         if strategy == "auto":
-            mix = {}
-            for b, s in agg.last_schedule:
-                mix[s] = mix.get(s, 0) + 1
-            print(f"  per-bucket selection: "
-                  + " + ".join(f"{s}×{n}" for s, n in sorted(mix.items()))
-                  + f"  ({[f'{b // 1024}KiB:{s}' for b, s in sorted(agg.last_schedule, reverse=True)[:4]]} ...)")
+            big = sorted(sched.buckets, key=lambda b: -b.n_bytes)[:4]
+            print(f"  per-bucket selection: {sched.render()}  "
+                  f"({[f'{b.n_bytes // 1024}KiB:{b.render()}' for b in big]}"
+                  " ...)")
         print(f"  projected v5e allreduce latency: {proj * 1e6:.0f} µs\n")
 
 

@@ -1,15 +1,26 @@
 """Core contribution: CUDA-Aware-MPI-Allreduce-as-JAX — explicit
 allreduce algorithms, tensor fusion, the plan (pointer) cache, the
 message-size-aware algorithm selector (MVAPICH2-style tuning table),
-and the Horovod-style overlap scheduler + timeline simulator."""
+the Horovod-style overlap scheduler + timeline simulator, and the
+ReduceSchedule IR that ties them together (core/schedule.py)."""
 from .aggregator import AggregatorConfig, GradientAggregator
 from .fusion import FusionPlan, build_plan
 from .overlap import (BACKWARD_FRACTION, BucketTask, Timeline,
                       TimelineEvent, bucket_ready_times, model_timeline,
-                      readiness_order, simulate, simulate_plan)
+                      readiness_order, schedule_tasks, simulate,
+                      simulate_schedule)
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 from .reducers import (STRATEGIES, allreduce, allreduce_steps,
-                       hierarchical_wire_bytes, wire_bytes)
+                       execute_stages, hierarchical_wire_bytes,
+                       wire_bytes)
+from .schedule import (BucketSchedule, ReduceSchedule, Stage,
+                       composed_name, decompose, is_strategy,
+                       normalize_strategy, split_strategy,
+                       strategy_latency)
+from .schedule import SCHEMA as SCHEDULE_SCHEMA
+from .schedule import from_json as schedule_from_json
+from .schedule import plan as plan_schedule
+from .schedule import synthetic as synthetic_schedule
 from .selector import (AnalyticSelector, EmpiricalSelector, Selector,
                        build_analytic_table, crossover_bytes, load_table,
                        make_selector, save_table, validate_table)
@@ -17,11 +28,16 @@ from .selector import (AnalyticSelector, EmpiricalSelector, Selector,
 __all__ = [
     "AggregatorConfig", "GradientAggregator", "FusionPlan", "build_plan",
     "GLOBAL_PLAN_CACHE", "PlanCache", "STRATEGIES", "allreduce",
-    "allreduce_steps", "hierarchical_wire_bytes", "wire_bytes",
+    "allreduce_steps", "execute_stages", "hierarchical_wire_bytes",
+    "wire_bytes",
+    "BucketSchedule", "ReduceSchedule", "Stage", "SCHEDULE_SCHEMA",
+    "composed_name", "decompose", "is_strategy", "normalize_strategy",
+    "split_strategy", "strategy_latency", "schedule_from_json",
+    "plan_schedule", "synthetic_schedule",
     "AnalyticSelector", "EmpiricalSelector", "Selector",
     "build_analytic_table", "crossover_bytes", "load_table",
     "make_selector", "save_table", "validate_table",
     "BACKWARD_FRACTION", "BucketTask", "Timeline", "TimelineEvent",
     "bucket_ready_times", "model_timeline", "readiness_order",
-    "simulate", "simulate_plan",
+    "schedule_tasks", "simulate", "simulate_schedule",
 ]

@@ -8,6 +8,16 @@ and applies them to a gradient pytree *inside* a ``shard_map`` whose data
 axes are manual. The aggregator returns the MEAN gradient over all data
 shards (the semantics data-parallel training expects).
 
+Resolution goes through ONE path (DESIGN.md §3.8): :meth:`resolve`
+produces a :class:`repro.core.schedule.ReduceSchedule` — the frozen IR
+carrying every bucket's leaf layout, wire bytes, readiness rank and
+per-axis decomposition tree — and both execution paths, the overlap
+timeline, the dryrun records and the roofline wire check consume that
+same object.  Execution is stage-by-stage
+(:func:`repro.core.reducers.execute_stages`), so a composed two-level
+schedule is just another stage list: per-LEVEL algorithm choice on
+multi-axis meshes and overlap × hierarchical compose for free.
+
 Precision policy: reductions accumulate in ``accum_dtype`` (default
 float32) regardless of the gradient dtype — the TPU analogue of the
 paper's "do the reduction on the accelerator with full fidelity" (their
@@ -18,15 +28,16 @@ bf16 gradient summation over 512 shards, so we upcast).
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from . import compat, fusion, overlap as overlap_mod, reducers, \
+from . import compat, reducers, schedule as schedule_mod, \
     selector as selector_mod
 from .compat import axis_size
 from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
+from .schedule import ReduceSchedule
 
 
 def _chunk_axis(group, ndim: int) -> int:
@@ -42,10 +53,12 @@ def _chunk_axis(group, ndim: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class AggregatorConfig:
-    strategy: str = "rhd_rsa"          # reducers.STRATEGIES, or "auto":
-                                       # per-bucket message-size-aware
-                                       # selection (core/selector.py,
-                                       # DESIGN.md §3.5)
+    strategy: str = "rhd_rsa"          # reducers.STRATEGIES, a composed
+                                       # two-level name ("ring_rsa×rhd_rsa",
+                                       # core/schedule.py), or "auto":
+                                       # per-bucket (and per-level)
+                                       # message-size-aware selection
+                                       # (core/selector.py, DESIGN.md §3.5)
     fuse: bool = True                  # Horovod Tensor Fusion on/off
     fusion_threshold_mb: float = 4.0   # Horovod default threshold = 64MB;
                                        # tuned per-platform like the paper
@@ -60,7 +73,7 @@ class AggregatorConfig:
                                        # table JSON (allreduce_micro
                                        # --emit-table / BENCH_allreduce.json)
     selector_link: str = "ici"         # analytic mode link profile
-                                       # (selector.LINK_PROFILES)
+                                       # (cost_model.LINK_PROFILES)
     align_buckets: bool = True         # align fusion boundaries to the
                                        # selector's algorithm switch points
     overlap: bool = False              # issue per-bucket reductions INSIDE
@@ -73,12 +86,17 @@ class AggregatorConfig:
     def threshold_bytes(self) -> int:
         return int(self.fusion_threshold_mb * 2 ** 20)
 
+    @property
+    def placement(self) -> str:
+        return "in_backward" if self.overlap else "post_backward"
+
     def validate(self):
-        if self.strategy != "auto" and \
-                self.strategy not in reducers.STRATEGIES:
+        if self.strategy != "auto" \
+                and not schedule_mod.is_strategy(self.strategy):
             raise ValueError(
                 f"strategy {self.strategy!r} not in "
-                f"{reducers.STRATEGIES + ('auto',)}")
+                f"{reducers.STRATEGIES + ('auto',)} and not a composed "
+                f"'<inner>{schedule_mod.SEP}<outer>' schedule name")
         if self.selector_mode not in selector_mod.MODES:
             raise ValueError(
                 f"selector_mode {self.selector_mode!r} not in "
@@ -119,125 +137,80 @@ class GradientAggregator:
         self.dp_axes = tuple(dp_axes)
         self.cache = cache if cache is not None else GLOBAL_PLAN_CACHE
         self.selector = config.make_selector()
-        # (bucket bytes, strategy) per bucket, recorded at trace time by
-        # the last __call__ / overlap_params / schedule() — what
-        # launch/dryrun reports.  For overlap_params the tuple is in
-        # readiness order, not plan order.
-        self.last_schedule: tuple = ()
-        # FusionPlan of the last schedule() call — feeds the overlap
-        # timeline simulator (bucket ready-times need leaf layout).
-        self.last_plan: "fusion.FusionPlan | None" = None
+        # The ReduceSchedule resolved by the last resolve() /
+        # __call__ / overlap_params — EVERY path records the same IR
+        # (preview and execution can never disagree; the old split
+        # last_schedule/last_plan pair could go stale when a preview
+        # preceded a real call with different grads).
+        self.last_schedule: ReduceSchedule | None = None
 
-    # -- per-bucket strategy resolution -------------------------------------
+    # -- resolution (the single path) ---------------------------------------
 
-    def _wire_itemsize(self) -> int:
+    def _wire_dtype(self) -> str:
         cfg = self.config
-        return jnp.dtype(cfg.wire_dtype or cfg.accum_dtype).itemsize
+        return str(jnp.dtype(cfg.wire_dtype or cfg.accum_dtype))
 
-    def _plan_context(self, axis_sizes):
-        """(switch_points, strategy_key) for the plan-cache lookup.
+    def resolve(self, grads, axis_sizes: Sequence[int],
+                groups=None) -> ReduceSchedule:
+        """Resolve ``grads`` (arrays or ShapeDtypeStructs) into the
+        :class:`ReduceSchedule` IR without running a reduction.
 
-        For a FIXED strategy the plan layout is strategy-independent, so
-        the strategy component stays None and aggregators that differ
-        only in algorithm share one cached plan. Only "auto" needs the
-        resolution context (selector fingerprint + axis sizes) in the
-        key: different tables/links may align buckets differently.
-        """
-        cfg = self.config
-        if self.selector is None:
-            return None, None
-        switch = None
-        if cfg.fuse and cfg.align_buckets:
-            switch = self.selector.switch_points(
-                axis_sizes, hi=max(cfg.threshold_bytes, 257))
-        return switch, ("auto", self.selector.fingerprint(),
-                        tuple(axis_sizes))
-
-    def _bucket_bytes(self, bucket) -> int:
-        return int(bucket.size) * self._wire_itemsize()
-
-    def _strategy_for(self, bucket, axis_sizes) -> str:
-        if self.selector is None:
-            return self.config.strategy
-        return self.selector.select(self._bucket_bytes(bucket), axis_sizes)
-
-    def schedule(self, grads, axis_sizes: Sequence[int], groups=None):
-        """Resolve the per-bucket schedule WITHOUT running a reduction:
-        list of {bytes, strategy, predicted_s} dicts, one per bucket.
-
-        ``grads`` may be arrays or ShapeDtypeStructs; ``axis_sizes`` are
-        the data-axis sizes (outermost first, matching ``dp_axes``) —
-        passed explicitly because this runs outside ``shard_map``.
-        Used by launch/dryrun.py to report what "auto" chose.
+        ``axis_sizes`` are the data-axis sizes (outermost first,
+        matching ``dp_axes``) — passed explicitly because this also
+        runs outside ``shard_map`` (launch/dryrun's preview path).
+        The same call happens at trace time inside ``__call__`` /
+        ``overlap_params``, so the preview IS the executed schedule.
         """
         cfg = self.config
         if not cfg.sharding_aware:
             groups = None
-        axis_sizes = tuple(int(s) for s in axis_sizes)
-        switch, _ = self._plan_context(axis_sizes)
-        plan = fusion.build_plan(grads, cfg.threshold_bytes, groups=groups,
-                                 fuse=cfg.fuse, switch_points=switch,
-                                 switch_itemsize=self._wire_itemsize())
-        self.last_plan = plan
-        link = selector_mod.LINK_PROFILES[cfg.selector_link]
-        rows = []
-        for bucket in plan.buckets:
-            n_bytes = self._bucket_bytes(bucket)
-            if self.selector is not None:
-                choice = self.selector.choose(n_bytes, axis_sizes)
-                strat, pred = choice.strategy, choice.predicted_s
-            else:
-                strat = cfg.strategy
-                pred = selector_mod.predict_latency(
-                    strat, n_bytes, axis_sizes, link=link)
-            rows.append({"bytes": n_bytes, "strategy": strat,
-                         "predicted_s": pred})
-        self.last_schedule = tuple(
-            (r["bytes"], r["strategy"]) for r in rows)
-        return rows
-
-    # -- main entry point (call inside shard_map) ---------------------------
+        sched = schedule_mod.plan(
+            grads, axis_names=self.dp_axes,
+            axis_sizes=tuple(int(s) for s in axis_sizes),
+            strategy=cfg.strategy if cfg.strategy != "auto" else "rhd_rsa",
+            selector=self.selector,
+            threshold_bytes=cfg.threshold_bytes, fuse=cfg.fuse,
+            groups=groups, wire_dtype=self._wire_dtype(),
+            align_buckets=cfg.align_buckets, placement=cfg.placement,
+            intra=cfg.selector_link, inter="dcn", cache=self.cache)
+        self.last_schedule = sched
+        return sched
 
     def _trace_context(self, grads, groups):
-        """(plan, axis_sizes, scale) resolved at shard_map trace time —
-        shared by the post-backward and in-backward paths."""
-        cfg = self.config
-        if not cfg.sharding_aware:
-            groups = None
-        # Mesh axis sizes are static inside the shard_map trace, so the
-        # per-bucket strategy resolution happens entirely at trace time —
-        # the compiled step hard-codes the mixed schedule.
+        """(schedule, scale) resolved at shard_map trace time — shared
+        by the post-backward and in-backward paths.  Mesh axis sizes
+        are static inside the trace, so the whole schedule (fusion
+        layout, per-bucket strategy, per-axis stages) is resolved at
+        trace time and the compiled step hard-codes it."""
         axis_sizes = tuple(axis_size(ax) for ax in self.dp_axes)
-        switch, strategy_key = self._plan_context(axis_sizes)
-        plan = self.cache.get_or_build(
-            grads, cfg.threshold_bytes, groups=groups, fuse=cfg.fuse,
-            switch_points=switch, switch_itemsize=self._wire_itemsize(),
-            strategy=strategy_key, overlap=cfg.overlap)
+        sched = self.resolve(grads, axis_sizes, groups=groups)
         dp_size = 1
         for s in axis_sizes:
             dp_size *= s
-        return plan, axis_sizes, 1.0 / dp_size
+        return sched, 1.0 / dp_size
 
-    def _reduce_buffer(self, bucket, buf, axis_sizes, scale):
+    # -- execution ----------------------------------------------------------
+
+    def _reduce_buffer(self, bucket: "schedule_mod.BucketSchedule",
+                       group, buf, scale):
         """Reduce ONE bucket's fused buffer: cast to the wire/accum
-        dtype, sum-allreduce with the bucket's resolved strategy, apply
-        the mean scale, cast back.  Returns (reduced, strategy)."""
+        dtype, run the bucket's decomposition tree stage-by-stage,
+        apply the mean scale, cast back."""
         cfg = self.config
         accum = jnp.dtype(cfg.wire_dtype or cfg.accum_dtype)
         orig = buf.dtype
         if orig != accum:
             buf = buf.astype(accum)
-        strategy = self._strategy_for(bucket, axis_sizes)
         # chunked reducers slice along dim 0; if the bucket's leaf is
         # model-sharded on dim 0, rotate an unsharded dim to the front
         # so the auto sharding is never disturbed (§Perf it.0).
-        axis = _chunk_axis(bucket.group, buf.ndim)
+        axis = _chunk_axis(group, buf.ndim)
         if axis != 0:
             buf = jnp.moveaxis(buf, axis, 0)
-        buf = reducers.allreduce(buf, self.dp_axes, strategy)
+        buf = reducers.execute_stages(buf, bucket.stages)
         if axis != 0:
             buf = jnp.moveaxis(buf, 0, axis)
-        return (buf * scale).astype(orig), strategy
+        return (buf * scale).astype(orig)
 
     def __call__(self, grads, groups=None):
         """Mean-allreduce ``grads`` over the data axes (post-backward
@@ -248,23 +221,23 @@ class GradientAggregator:
         when ``config.sharding_aware`` to keep fused buffers from crossing
         auto-axis sharding classes.
         """
-        plan, axis_sizes, scale = self._trace_context(grads, groups)
+        sched, scale = self._trace_context(grads, groups)
+        plan = sched.plan
         reduced = []
-        schedule = []
-        for bucket, buf in zip(plan.buckets, plan.flatten(grads)):
-            buf, strategy = self._reduce_buffer(bucket, buf, axis_sizes,
-                                                scale)
-            schedule.append((self._bucket_bytes(bucket), strategy))
-            reduced.append(buf)
-        self.last_schedule = tuple(schedule)
+        for bucket, buf in zip(sched.buckets, plan.flatten(grads)):
+            reduced.append(self._reduce_buffer(
+                bucket, plan.buckets[bucket.index].group, buf, scale))
         return plan.unflatten(reduced)
 
     # -- overlapped (in-backward) path --------------------------------------
 
-    def _bucket_boundary(self, plan, bucket, axis_sizes, scale):
+    def _bucket_boundary(self, sched, bucket, scale):
         """Identity on the bucket's param leaves whose VJP mean-reduces
         the cotangents — the reduction lands INSIDE the backward, gated
         only on this bucket's own gradients."""
+        plan = sched.plan
+        group = plan.buckets[bucket.index].group
+
         @jax.custom_vjp
         def boundary(*leaves):
             return leaves
@@ -273,9 +246,11 @@ class GradientAggregator:
             return leaves, None
 
         def bwd(_, cts):
-            buf = plan.flatten_bucket(bucket, list(cts))
-            buf, _ = self._reduce_buffer(bucket, buf, axis_sizes, scale)
-            return tuple(plan.unflatten_bucket(bucket, buf))
+            buf = plan.flatten_bucket(plan.buckets[bucket.index],
+                                      list(cts))
+            buf = self._reduce_buffer(bucket, group, buf, scale)
+            return tuple(plan.unflatten_bucket(
+                plan.buckets[bucket.index], buf))
 
         boundary.defvjp(fwd, bwd)
         return boundary
@@ -294,23 +269,20 @@ class GradientAggregator:
         Call INSIDE the function being differentiated; the gradients
         that come out of ``value_and_grad`` are then already aggregated
         — do not also pass them through :meth:`__call__`.  Buckets are
-        wrapped in readiness order (last layer's bucket first), matching
-        the order their reductions can launch.
+        wrapped in the IR's readiness order (last layer's bucket
+        first), matching the order their reductions can launch — this
+        works for ANY stage list, so overlap composes with the
+        two-level schedules.
         """
-        plan, axis_sizes, scale = self._trace_context(params, groups)
+        sched, scale = self._trace_context(params, groups)
         flat, treedef = jax.tree_util.tree_flatten(params)
         out = list(flat)
-        schedule = []
-        for bi in overlap_mod.readiness_order(plan):
-            bucket = plan.buckets[bi]
-            schedule.append((self._bucket_bytes(bucket),
-                             self._strategy_for(bucket, axis_sizes)))
-            boundary = self._bucket_boundary(plan, bucket, axis_sizes,
-                                             scale)
+        for bi in sched.readiness_order():
+            bucket = sched.buckets[bi]
+            boundary = self._bucket_boundary(sched, bucket, scale)
             wrapped = boundary(*[flat[i] for i in bucket.leaf_indices])
             for i, leaf in zip(bucket.leaf_indices, wrapped):
                 out[i] = leaf
-        self.last_schedule = tuple(schedule)
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # -- scalars (loss/metrics) ---------------------------------------------

@@ -38,6 +38,22 @@ GRPC = LinkParams(hw.GRPC_ALPHA_S, hw.GRPC_BANDWIDTH)
 # EDR InfiniBand class links. Used by benchmarks/scaling.py to check the
 # model reproduces the paper's *absolute* claims before projecting to TPU.
 PAPER_LINK = LinkParams(alpha_s=5e-6, bandwidth=8e9)
+
+# Named link profiles accepted wherever a LinkParams is expected (the
+# selector and the schedule planner resolve names through this table;
+# selector.LINK_PROFILES is an alias kept for importers).
+LINK_PROFILES = {"ici": ICI, "dcn": DCN, "paper": PAPER_LINK}
+
+
+def resolve_link(link) -> "LinkParams":
+    """A LinkParams, or a profile name from LINK_PROFILES."""
+    if isinstance(link, LinkParams):
+        return link
+    try:
+        return LINK_PROFILES[link]
+    except KeyError:
+        raise ValueError(
+            f"unknown link profile {link!r}; one of {sorted(LINK_PROFILES)}")
 PAPER_P100_FLOPS = 10.6e12       # fp32 peak
 PAPER_P100_MFU = 0.55
 
@@ -120,19 +136,34 @@ def allreduce_latency_host_staged(strategy: str, n_bytes: float, p: int,
         + reduce_bytes / host_reduce_bandwidth
 
 
+def composed_latency(outer_alg: str, n_bytes: float, d: int, pods: int,
+                     intra: LinkParams = ICI,
+                     inter: LinkParams = DCN,
+                     gamma: float = GAMMA_S_PER_BYTE) -> float:
+    """Two-level composed schedule: ring reduce-scatter over d
+    (intra-pod) + ``outer_alg`` allreduce of N/d over pods (inter-pod) +
+    ring allgather over d.  The per-LEVEL algorithm is a free choice —
+    the schedule planner's decomposition trees (core/schedule.py) argmin
+    over ``outer_alg`` per bucket; the classic ``hierarchical`` strategy
+    is the ``outer_alg="rhd_rsa"`` point of this family."""
+    frac_d = (d - 1) / d
+    rs = (d - 1) * intra.alpha_s + n_bytes * frac_d * intra.beta \
+        + n_bytes * frac_d * gamma
+    mid = allreduce_latency(outer_alg, n_bytes / d, pods, link=inter,
+                            gamma=gamma)
+    ag = (d - 1) * intra.alpha_s + n_bytes * frac_d * intra.beta
+    return rs + mid + ag
+
+
 def hierarchical_latency(n_bytes: float, d: int, pods: int,
                          intra: LinkParams = ICI,
                          inter: LinkParams = DCN,
                          gamma: float = GAMMA_S_PER_BYTE) -> float:
     """ring reduce-scatter over d (intra-pod) + rhd allreduce of N/d over
-    pods (inter-pod) + ring allgather over d."""
-    frac_d = (d - 1) / d
-    rs = (d - 1) * intra.alpha_s + n_bytes * frac_d * intra.beta \
-        + n_bytes * frac_d * gamma
-    mid = allreduce_latency("rhd_rsa", n_bytes / d, pods, link=inter,
-                            gamma=gamma)
-    ag = (d - 1) * intra.alpha_s + n_bytes * frac_d * intra.beta
-    return rs + mid + ag
+    pods (inter-pod) + ring allgather over d — the fixed-RHD point of
+    :func:`composed_latency`."""
+    return composed_latency("rhd_rsa", n_bytes, d, pods, intra=intra,
+                            inter=inter, gamma=gamma)
 
 
 def flat_multiaxis_latency(strategy: str, n_bytes: float, d: int, pods: int,

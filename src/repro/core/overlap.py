@@ -186,25 +186,47 @@ def simulate(tasks: Sequence[BucketTask], backward_s: float,
                     exposed_comm_s=exposed, idle_s=idle)
 
 
-def simulate_plan(plan, schedule, compute_s: float,
-                  backward_fraction: float = BACKWARD_FRACTION,
-                  costs: Sequence[float] | None = None) -> Timeline:
-    """Timeline for a resolved aggregation schedule.
+def schedule_tasks(sched, backward_s: float,
+                   costs: Sequence[float] | None = None
+                   ) -> list[BucketTask]:
+    """BucketTasks (plan order) for a resolved
+    :class:`repro.core.schedule.ReduceSchedule`.
 
-    ``schedule``: one ``{"bytes", "strategy", "predicted_s"}`` row per
-    bucket in plan order (``GradientAggregator.schedule``'s format).
-    ``compute_s``: total per-step compute, split into an overlappable
-    backward span and a serial remainder by ``backward_fraction``.
+    Attached schedules (``sched.plan`` set) derive ready-times from the
+    fusion plan's per-leaf backward costs; DETACHED schedules (matrix
+    synthetics, JSON round-trips) fall back to bucket sizes: walking
+    buckets in readiness order, each accumulates backward time
+    proportional to its element count — the same uniform model
+    :func:`model_tasks` uses.
     """
-    if len(schedule) != len(plan.buckets):
-        raise ValueError(f"{len(schedule)} schedule rows for "
-                         f"{len(plan.buckets)} buckets")
+    if sched.plan is not None:
+        ready = bucket_ready_times(sched.plan, backward_s, costs=costs)
+    else:
+        total = sum(max(b.size, 1) for b in sched.buckets) or 1.0
+        ready_by_rank = {}
+        acc = 0.0
+        for bi in sched.readiness_order():
+            acc += max(sched.buckets[bi].size, 1)
+            ready_by_rank[bi] = backward_s * acc / total
+        ready = [ready_by_rank[i] for i in range(len(sched.buckets))]
+    return [BucketTask(index=b.index, n_bytes=b.n_bytes,
+                       strategy=b.strategy, ready_s=ready[i],
+                       comm_s=float(b.predicted_s))
+            for i, b in enumerate(sched.buckets)]
+
+
+def simulate_schedule(sched, compute_s: float,
+                      backward_fraction: float = BACKWARD_FRACTION,
+                      costs: Sequence[float] | None = None) -> Timeline:
+    """Timeline for a resolved :class:`ReduceSchedule` IR — per-bucket
+    bytes, strategy and predicted latency come straight from the
+    schedule object the aggregator executes, so the simulated and the
+    compiled schedule can never drift apart.  ``compute_s``: total
+    per-step compute, split into an overlappable backward span and a
+    serial remainder by ``backward_fraction``.
+    """
     backward_s = compute_s * backward_fraction
-    ready = bucket_ready_times(plan, backward_s, costs=costs)
-    tasks = [BucketTask(index=i, n_bytes=int(r["bytes"]),
-                        strategy=r["strategy"], ready_s=ready[i],
-                        comm_s=float(r["predicted_s"]))
-             for i, r in enumerate(schedule)]
+    tasks = schedule_tasks(sched, backward_s, costs=costs)
     return simulate(tasks, backward_s,
                     serial_s=compute_s * (1.0 - backward_fraction))
 

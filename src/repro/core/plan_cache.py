@@ -84,14 +84,9 @@ class PlanCache:
         return (treedef, shapes, dtypes, gkey, threshold_bytes, fuse,
                 skey, strategy, overlap)
 
-    def get_or_build(self, tree, threshold_bytes: int, groups=None,
-                     fuse: bool = True, switch_points=None,
-                     switch_itemsize: int = 0,
-                     strategy: Hashable = None,
-                     overlap: bool = False) -> fusion.FusionPlan:
-        key = self.key_for(tree, threshold_bytes, groups, fuse,
-                           switch_points, switch_itemsize, strategy,
-                           overlap)
+    def _get_or_build(self, key: Hashable, builder):
+        """Intern ``builder()`` under ``key`` with the per-key build
+        guard (shared by the raw-plan and resolved-schedule paths)."""
         while True:
             with self._lock:
                 plan = self._plans.get(key)
@@ -119,10 +114,7 @@ class PlanCache:
                     # DURING the build voids the store below.
                     generation = self._generation
                 try:
-                    plan = fusion.build_plan(
-                        tree, threshold_bytes, groups=groups, fuse=fuse,
-                        switch_points=switch_points,
-                        switch_itemsize=switch_itemsize)
+                    plan = builder()
                     with self._lock:
                         # A clear() while we were building invalidated
                         # the cache: hand the plan to our caller but
@@ -137,6 +129,33 @@ class PlanCache:
                         if self._build_locks.get(key) is build_lock:
                             del self._build_locks[key]
             return plan
+
+    def get_or_build(self, tree, threshold_bytes: int, groups=None,
+                     fuse: bool = True, switch_points=None,
+                     switch_itemsize: int = 0,
+                     strategy: Hashable = None,
+                     overlap: bool = False) -> fusion.FusionPlan:
+        """Raw FusionPlan interning (layout only — no strategy
+        resolution).  The aggregator path goes through :meth:`resolve`;
+        this entry point remains for layout-only callers
+        (benchmarks/plan_cache.py, fusion tests)."""
+        key = self.key_for(tree, threshold_bytes, groups, fuse,
+                           switch_points, switch_itemsize, strategy,
+                           overlap)
+        return self._get_or_build(
+            key, lambda: fusion.build_plan(
+                tree, threshold_bytes, groups=groups, fuse=fuse,
+                switch_points=switch_points,
+                switch_itemsize=switch_itemsize))
+
+    def resolve(self, request, builder):
+        """Intern a resolved :class:`repro.core.schedule.ReduceSchedule`
+        keyed by its :class:`~repro.core.schedule.ScheduleRequest`
+        fingerprint — the IR analogue of the pointer cache: the key is
+        derived from the gradient pytree + full resolution context, so
+        a stale schedule is impossible by construction."""
+        return self._get_or_build(("schedule", request.fingerprint()),
+                                  builder)
 
     def clear(self):
         with self._lock:

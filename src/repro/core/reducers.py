@@ -232,6 +232,48 @@ def hierarchical(x: jax.Array, data_axis: Axis, pod_axis: Axis) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# stage executor (ReduceSchedule decomposition trees, core/schedule.py)
+# ---------------------------------------------------------------------------
+
+def execute_stages(x: jax.Array, stages) -> jax.Array:
+    """Run a bucket's decomposition tree (a sequence of
+    ``schedule.Stage``-like objects with ``op``/``algorithm``/``axis``)
+    against the manual mesh axes.  ``reduce_scatter``/``all_gather``
+    pairs nest like parentheses: the gather pops the original length
+    recorded by its matching scatter.  This is the ONLY reduction entry
+    point of the aggregator — ``hierarchical`` is not a special-cased
+    monolith but the stage list ``[reduce_scatter@data, allreduce@pod,
+    all_gather@data]``, which is exactly what :func:`hierarchical`
+    composes by hand."""
+    pending: list = []                      # (axis, orig_len) stack
+    for st in stages:
+        if st.op == "reduce_scatter":
+            if st.algorithm != "ring_rsa":
+                raise ValueError(f"unknown reduce-scatter algorithm "
+                                 f"{st.algorithm!r}")
+            x, n = ring_reduce_scatter(x, st.axis)
+            pending.append((st.axis, n))
+        elif st.op == "all_gather":
+            if not pending or pending[-1][0] != st.axis:
+                raise ValueError(
+                    f"all_gather@{st.axis} without a matching "
+                    f"reduce_scatter (pending {pending})")
+            _, n = pending.pop()
+            x = ring_all_gather(x, st.axis, n)
+        elif st.op == "allreduce":
+            fn = _FLAT_FNS.get(st.algorithm)
+            if fn is None:
+                raise ValueError(f"unknown allreduce algorithm "
+                                 f"{st.algorithm!r}")
+            x = fn(x, st.axis)
+        else:
+            raise ValueError(f"unknown stage op {st.op!r}")
+    if pending:
+        raise ValueError(f"unterminated reduce_scatter stages: {pending}")
+    return x
+
+
+# ---------------------------------------------------------------------------
 # public dispatch
 # ---------------------------------------------------------------------------
 
@@ -254,12 +296,17 @@ def allreduce(x: jax.Array, axes: Sequence[Axis], strategy: str) -> jax.Array:
             raise ValueError("hierarchical expects (pod_axis, data_axis)")
         pod_axis, data_axis = axes
         return hierarchical(x, data_axis=data_axis, pod_axis=pod_axis)
-    fn: Callable = {"psum": psum, "ring_rsa": ring_rsa,
-                    "rhd_rsa": rhd_rsa, "ps_gather": ps_gather}[strategy]
+    fn: Callable = _FLAT_FNS[strategy]
     # Innermost (fastest, intra-pod) axis first.
     for ax in reversed(axes):
         x = fn(x, ax)
     return x
+
+
+# Flat per-axis allreduce dispatch, shared by ``allreduce`` and the
+# stage executor above.
+_FLAT_FNS = {"psum": psum, "ring_rsa": ring_rsa,
+             "rhd_rsa": rhd_rsa, "ps_gather": ps_gather}
 
 
 def hierarchical_wire_bytes(n_bytes: int, d: int, pods: int) -> dict:

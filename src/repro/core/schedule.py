@@ -1,0 +1,682 @@
+"""ReduceSchedule — the resolved-schedule IR (DESIGN.md §3.8).
+
+MVAPICH2's tuning tables resolve a collective call to a *schedule*, not
+just an algorithm name, and modeling work (Shi et al.) shows the cost
+model must describe the exact schedule that runs.  This module is that
+object for our stack: ONE planner (:func:`plan`) resolves a gradient
+pytree + aggregation config into a frozen, hashable, JSON-serializable
+:class:`ReduceSchedule`, and every consumer — the executing aggregator,
+the overlap timeline, the roofline wire check, the dryrun/report/sweep
+records, the experiment matrix — takes the IR as its single input
+instead of re-deriving its own view.
+
+Structure:
+
+``ReduceSchedule``
+    axis names/sizes (outermost first, matching the aggregator's
+    ``dp_axes``), wire dtype, placement, and one ``BucketSchedule`` per
+    fusion bucket, plus the :class:`~repro.core.fusion.FusionPlan` the
+    executor needs (``plan=None`` on *detached* schedules deserialized
+    from JSON or built synthetically by the experiment matrix).
+
+``BucketSchedule``
+    leaf indices, fused wire bytes, readiness rank (the order the
+    in-backward path issues reductions), placement, the canonical
+    strategy name, and the bucket's *decomposition tree*: a tuple of
+    per-axis :class:`Stage` s, each with its own predicted latency and
+    algorithmic wire bytes.
+
+``Stage``
+    one collective phase on one mesh axis — ``reduce_scatter`` /
+    ``allreduce`` / ``all_gather`` with an algorithm.  Flat strategies
+    on a multi-axis mesh decompose into one full ``allreduce`` stage
+    per axis (innermost first — exactly the fold the reducers execute);
+    composed two-level strategies decompose into
+    ``reduce_scatter@inner → allreduce@outer → all_gather@inner``.
+
+Strategy naming: a flat name is a ``reducers.STRATEGIES`` entry; a
+composed two-level name is ``"<inner>×<outer>"`` (ASCII ``x`` accepted),
+e.g. ``"ring_rsa×rhd_rsa"`` = ring RS/AG on the inner (data) axis with
+an RHD allreduce of the 1/d chunk on the outer (pod) axis.  The legacy
+``"hierarchical"`` strategy is an alias for ``"ring_rsa×rhd_rsa"`` —
+it is no longer an opaque monolith: the selector's per-bucket argmin
+extends to the per-LEVEL algorithm choice (``ring_rsa×{rhd_rsa,
+ring_rsa,psum}``) on multi-axis meshes, and because execution is
+stage-by-stage, overlap composes with hierarchical schedules.
+
+Serialization: ``to_json()`` emits schema ``repro/schedule/v1``;
+``from_json()`` rebuilds a detached schedule.  ``fingerprint()`` hashes
+the structural content (everything except predicted latencies), giving
+dryrun records, the plan cache, and tests a stable identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Hashable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import cost_model, fusion, overlap as overlap_mod, reducers
+
+SCHEMA = "repro/schedule/v1"
+
+# Canonical composed-name separator (ASCII "x" accepted on input).
+SEP = "×"
+
+# Placements: where the bucket's reduction is issued.
+PLACEMENTS = ("post_backward", "in_backward")
+
+# The only reduce-scatter/allgather primitive we implement is the ring;
+# the per-level freedom is the OUTER (cross-pod) allreduce algorithm.
+INNER_ALGORITHMS = ("ring_rsa",)
+OUTER_ALGORITHMS = ("rhd_rsa", "ring_rsa", "psum")
+
+_FLAT = tuple(s for s in reducers.STRATEGIES if s != "hierarchical")
+
+
+# ---------------------------------------------------------------------------
+# Strategy names
+# ---------------------------------------------------------------------------
+
+def composed_name(inner: str, outer: str) -> str:
+    return f"{inner}{SEP}{outer}"
+
+
+def split_strategy(name: str) -> tuple[str, ...]:
+    """("alg",) for a flat strategy, ("inner", "outer") for a composed
+    two-level one.  Raises ValueError on anything else."""
+    parts = tuple(name.replace("x", SEP).split(SEP)) \
+        if (SEP in name or ("x" in name and name not in
+                            reducers.STRATEGIES)) else (name,)
+    if len(parts) == 1:
+        if name not in reducers.STRATEGIES:
+            raise ValueError(f"unknown strategy {name!r}; a flat name "
+                             f"from {reducers.STRATEGIES} or a composed "
+                             f"'<inner>{SEP}<outer>' name")
+        return (name,)
+    if len(parts) != 2:
+        raise ValueError(f"composed strategy {name!r} must have exactly "
+                         f"two levels '<inner>{SEP}<outer>'")
+    inner, outer = parts
+    if inner not in INNER_ALGORITHMS:
+        raise ValueError(f"composed inner level {inner!r} not in "
+                         f"{INNER_ALGORITHMS}")
+    if outer not in OUTER_ALGORITHMS:
+        raise ValueError(f"composed outer level {outer!r} not in "
+                         f"{OUTER_ALGORITHMS}")
+    return (inner, outer)
+
+
+def is_strategy(name: str) -> bool:
+    try:
+        split_strategy(name)
+        return True
+    except ValueError:
+        return False
+
+
+def normalize_strategy(name: str, n_axes: int) -> str:
+    """Resolve aliases against the mesh rank: ``hierarchical`` becomes
+    ``ring_rsa`` on one axis (what the reducer degenerates to) and the
+    canonical ``ring_rsa×rhd_rsa`` composition on two; composed names
+    on a single-axis mesh are invalid."""
+    if name == "hierarchical":
+        return "ring_rsa" if n_axes == 1 else \
+            composed_name("ring_rsa", "rhd_rsa")
+    parts = split_strategy(name)
+    if len(parts) == 2 and n_axes != 2:
+        raise ValueError(f"composed strategy {name!r} needs a 2-axis "
+                         f"mesh, got {n_axes} axis(es)")
+    return name
+
+
+SHORT_ALG = {"ring_rsa": "ring", "rhd_rsa": "rhd", "psum": "psum",
+             "ps_gather": "ps"}
+
+
+def _short(alg: str) -> str:
+    return SHORT_ALG.get(alg, alg)
+
+
+# ---------------------------------------------------------------------------
+# IR dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One collective phase of a bucket's decomposition tree."""
+    op: str            # "reduce_scatter" | "allreduce" | "all_gather"
+    algorithm: str     # reducers algorithm executing the op
+    axis: str          # mesh axis name
+    axis_size: int
+    n_bytes: int       # payload entering the stage (wire dtype bytes)
+    wire_bytes: int    # algorithmic wire bytes on the busiest device
+    predicted_s: float # cost-model latency of this stage alone
+
+    def to_json(self) -> dict:
+        return {"op": self.op, "algorithm": self.algorithm,
+                "axis": self.axis, "axis_size": self.axis_size,
+                "bytes": self.n_bytes, "wire_bytes": self.wire_bytes,
+                "predicted_s": self.predicted_s}
+
+    @property
+    def hlo_kind(self) -> str:
+        """The compiled-HLO op family this stage lowers to (the wire
+        check's per-kind ledger): explicit ppermute schedules →
+        collective-permute, the vendor ``psum`` → all-reduce, the PS
+        pattern → all-gather."""
+        if self.algorithm == "psum":
+            return "all-reduce"
+        if self.algorithm == "ps_gather":
+            return "all-gather"
+        return "collective-permute"
+
+    @property
+    def hlo_bytes(self) -> int:
+        """Predicted HLO-charged bytes for this stage, matching the
+        parser's result-size convention: permute schedules charge their
+        algorithmic wire bytes; a ``psum`` all-reduce charges one
+        result-size payload; ``ps_gather`` charges its recv-side wire
+        bytes (inside the p·N gathered result)."""
+        if self.algorithm == "psum":
+            return self.n_bytes
+        return self.wire_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSchedule:
+    """One fusion bucket's fully resolved reduction."""
+    index: int                     # bucket index in plan order
+    leaf_indices: tuple[int, ...]  # () on detached/synthetic schedules
+    size: int                      # element count (unpadded)
+    n_bytes: int                   # fused wire bytes
+    readiness_rank: int            # 0 = first bucket ready in backward
+    strategy: str                  # canonical (possibly composed) name
+    stages: tuple[Stage, ...]
+    predicted_s: float             # bucket latency (selector-predicted
+                                   # for auto; stage sum otherwise)
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(st.wire_bytes for st in self.stages)
+
+    def render(self) -> str:
+        """Human-readable decomposition, e.g. ``ring@data×rhd@pod`` for
+        a composed bucket or ``rhd@data`` for a flat one (RS/AG pairs
+        collapse onto their allreduce line)."""
+        parts = []
+        skip_ag = set()
+        for i, st in enumerate(self.stages):
+            if i in skip_ag:
+                continue
+            if st.op == "reduce_scatter":
+                # find the matching all_gather and collapse the pair
+                for j in range(len(self.stages) - 1, i, -1):
+                    other = self.stages[j]
+                    if other.op == "all_gather" and other.axis == st.axis:
+                        skip_ag.add(j)
+                        break
+                parts.append(f"{_short(st.algorithm)}@{st.axis}")
+            elif st.op == "allreduce":
+                parts.append(f"{_short(st.algorithm)}@{st.axis}")
+        return SEP.join(parts)
+
+    def to_json(self) -> dict:
+        return {"index": self.index,
+                "leaf_indices": list(self.leaf_indices),
+                "size": self.size, "bytes": self.n_bytes,
+                "readiness_rank": self.readiness_rank,
+                "strategy": self.strategy,
+                "decomposition": self.render(),
+                "wire_bytes": self.wire_bytes,
+                "predicted_s": self.predicted_s,
+                "stages": [st.to_json() for st in self.stages]}
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceSchedule:
+    """The resolved schedule: what the aggregator executes, the
+    timeline costs, the wire check verifies, and the launch/experiment
+    records serialize — one object, schema ``repro/schedule/v1``."""
+    axis_names: tuple[str, ...]    # outermost first (matches dp_axes)
+    axis_sizes: tuple[int, ...]
+    wire_dtype: str
+    placement: str                 # PLACEMENTS
+    threshold_bytes: int
+    switch_points: tuple[int, ...]
+    buckets: tuple[BucketSchedule, ...]
+    plan: "fusion.FusionPlan | None" = None   # None = detached
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(b.wire_bytes for b in self.buckets)
+
+    @property
+    def predicted_s(self) -> float:
+        return sum(b.predicted_s for b in self.buckets)
+
+    def strategies(self) -> tuple[str, ...]:
+        """Distinct strategy names, sorted."""
+        return tuple(sorted({b.strategy for b in self.buckets}))
+
+    def algorithms(self) -> dict:
+        """{strategy: bucket count} — the dryrun/report summary."""
+        out: dict = {}
+        for b in self.buckets:
+            out[b.strategy] = out.get(b.strategy, 0) + 1
+        return out
+
+    def readiness_order(self) -> tuple[int, ...]:
+        """Bucket indices in issue order (readiness rank ascending)."""
+        return tuple(sorted(range(len(self.buckets)),
+                            key=lambda i: self.buckets[i].readiness_rank))
+
+    def render(self) -> str:
+        """Distinct per-bucket decompositions with counts, e.g.
+        ``rhd@data×26 + ring@data×rhd@pod×3``."""
+        counts: dict = {}
+        for b in self.buckets:
+            r = b.render()
+            counts[r] = counts.get(r, 0) + 1
+        return " + ".join(f"{r}×{n}" if n > 1 else r
+                          for r, n in sorted(counts.items()))
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self, group: bool = False) -> dict:
+        """Schema ``repro/schedule/v1``.  ``group=True`` collapses runs
+        of buckets with identical (bytes, strategy) into one entry with
+        a ``count`` (the experiment matrix's synthetic schedules have
+        hundreds of identical buckets; full per-bucket fidelity there
+        would bloat the trajectory artifact for no information)."""
+        rec = {
+            "schema": SCHEMA,
+            "axis_names": list(self.axis_names),
+            "axis_sizes": list(self.axis_sizes),
+            "wire_dtype": self.wire_dtype,
+            "placement": self.placement,
+            "threshold_bytes": self.threshold_bytes,
+            "switch_points": list(self.switch_points),
+            "n_buckets": self.n_buckets,
+            "total_wire_bytes": self.total_wire_bytes,
+            "predicted_s": self.predicted_s,
+            "decomposition": self.render(),
+            # grouped records drop the leaf layout, so they embed the
+            # DETACHED fingerprint — the one from_json(rec) reproduces
+            "fingerprint": self.fingerprint(detached=group),
+        }
+        if not group:
+            rec["buckets"] = [b.to_json() for b in self.buckets]
+            return rec
+        rec["grouped"] = True
+        n = len(self.buckets)
+        # Ranks must survive grouping — without them a deserialized
+        # schedule would replay a DIFFERENT overlap timeline than the
+        # one recorded (readiness is reverse plan order, not plan
+        # order).  The canonical reverse order itself is from_json's
+        # default, so ranks are serialized only when they deviate
+        # (keeps the matrix's 900-bucket synthetic rows compact).
+        canonical = all(b.readiness_rank == n - 1 - i
+                        for i, b in enumerate(self.buckets))
+        groups: list[dict] = []
+        for b in self.buckets:
+            g = b.to_json()
+            for drop in ("index", "leaf_indices", "readiness_rank"):
+                g.pop(drop)
+            if groups and groups[-1]["bytes"] == g["bytes"] \
+                    and groups[-1]["strategy"] == g["strategy"]:
+                groups[-1]["count"] += 1
+                if not canonical:
+                    groups[-1]["readiness_ranks"].append(b.readiness_rank)
+            else:
+                g["count"] = 1
+                if not canonical:
+                    g["readiness_ranks"] = [b.readiness_rank]
+                groups.append(g)
+        rec["buckets"] = groups
+        return rec
+
+    def fingerprint(self, detached: bool = False) -> str:
+        """sha256 of the structural content — axes, wire dtype,
+        placement, per-bucket layout/strategy/stages and their wire
+        bytes, but NOT predicted latencies (two schedules that move the
+        same bytes the same way are the same schedule even if the cost
+        model's constants moved between them).  ``detached=True``
+        excludes the leaf layout — the identity a grouped/deserialized
+        record can still reproduce (grouping drops leaf indices)."""
+        struct = {
+            "axis_names": list(self.axis_names),
+            "axis_sizes": list(self.axis_sizes),
+            "wire_dtype": self.wire_dtype,
+            "placement": self.placement,
+            "threshold_bytes": self.threshold_bytes,
+            "switch_points": list(self.switch_points),
+            "buckets": [
+                {"leaf_indices": [] if detached
+                 else list(b.leaf_indices), "size": b.size,
+                 "bytes": b.n_bytes, "readiness_rank": b.readiness_rank,
+                 "strategy": b.strategy,
+                 "stages": [[st.op, st.algorithm, st.axis, st.axis_size,
+                             st.n_bytes, st.wire_bytes]
+                            for st in b.stages]}
+                for b in self.buckets],
+        }
+        blob = json.dumps(struct, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def from_json(rec: dict) -> ReduceSchedule:
+    """Rebuild a DETACHED schedule (``plan=None``) from ``to_json``
+    output — full or grouped form.  Grouped entries expand back into
+    ``count`` buckets with synthetic indices/readiness ranks (their
+    leaf layout was never serialized)."""
+    if rec.get("schema") != SCHEMA:
+        raise ValueError(f"schedule schema must be {SCHEMA!r}, "
+                         f"got {rec.get('schema')!r}")
+    n_total = sum(int(e.get("count", 1)) for e in rec["buckets"])
+    buckets: list[BucketSchedule] = []
+    for entry in rec["buckets"]:
+        stages = tuple(Stage(op=s["op"], algorithm=s["algorithm"],
+                             axis=s["axis"], axis_size=int(s["axis_size"]),
+                             n_bytes=int(s["bytes"]),
+                             wire_bytes=int(s["wire_bytes"]),
+                             predicted_s=float(s["predicted_s"]))
+                       for s in entry["stages"])
+        ranks = entry.get("readiness_ranks")
+        for j in range(int(entry.get("count", 1))):
+            i = len(buckets)
+            if ranks is not None:
+                rank = int(ranks[j])
+            elif "readiness_rank" in entry:
+                rank = int(entry["readiness_rank"])
+            else:
+                # hand-written grouped records without ranks: assume
+                # reverse plan order (what every producer emits — the
+                # LAST bucket's grads complete first in the backward)
+                rank = n_total - 1 - i
+            buckets.append(BucketSchedule(
+                index=int(entry.get("index", i)),
+                leaf_indices=tuple(entry.get("leaf_indices", ())),
+                size=int(entry["size"]), n_bytes=int(entry["bytes"]),
+                readiness_rank=rank,
+                strategy=entry["strategy"], stages=stages,
+                predicted_s=float(entry["predicted_s"])))
+    return ReduceSchedule(
+        axis_names=tuple(rec["axis_names"]),
+        axis_sizes=tuple(int(s) for s in rec["axis_sizes"]),
+        wire_dtype=rec["wire_dtype"], placement=rec["placement"],
+        threshold_bytes=int(rec["threshold_bytes"]),
+        switch_points=tuple(int(s) for s in rec["switch_points"]),
+        buckets=tuple(buckets), plan=None)
+
+
+# ---------------------------------------------------------------------------
+# Decomposition: strategy name -> per-axis stages
+# ---------------------------------------------------------------------------
+
+def _stage_link(i: int, n_axes: int, intra, inter):
+    """Axis 0 of a multi-axis mesh is the outermost (cross-pod) level
+    and rides the inter link; everything else is intra (matches
+    cost_model.flat_multiaxis_latency / composed_latency)."""
+    return inter if (n_axes > 1 and i == 0) else intra
+
+
+def decompose(strategy: str, n_bytes: int,
+              axis_names: Sequence[str], axis_sizes: Sequence[int],
+              intra=cost_model.ICI, inter=cost_model.DCN,
+              gamma: float = cost_model.GAMMA_S_PER_BYTE
+              ) -> tuple[Stage, ...]:
+    """The decomposition tree of one bucket: per-axis stages with
+    algorithmic wire bytes (reducers accounting) and cost-model
+    latencies.  ``axis_names``/``axis_sizes`` are outermost first.
+    Byte/step truth matches the executed reducers exactly:
+    ``sum(st.wire_bytes) == reducers.wire_bytes(strategy, ...)`` for
+    every strategy (pinned in tests/test_schedule.py)."""
+    names = tuple(axis_names)
+    sizes = tuple(int(s) for s in axis_sizes)
+    if len(names) != len(sizes) or not names:
+        raise ValueError(f"axis names {names} / sizes {sizes} mismatch")
+    intra = cost_model.resolve_link(intra)
+    inter = cost_model.resolve_link(inter)
+    strategy = normalize_strategy(strategy, len(names))
+    parts = split_strategy(strategy)
+    n_bytes = int(n_bytes)
+
+    if len(parts) == 1:
+        # Flat fold: a FULL allreduce per axis, innermost first —
+        # exactly what reducers.allreduce executes.
+        (alg,) = parts
+        stages = []
+        for i in range(len(names) - 1, -1, -1):
+            link = _stage_link(i, len(names), intra, inter)
+            stages.append(Stage(
+                op="allreduce", algorithm=alg, axis=names[i],
+                axis_size=sizes[i], n_bytes=n_bytes,
+                wire_bytes=reducers.wire_bytes(alg, n_bytes, sizes[i]),
+                predicted_s=cost_model.allreduce_latency(
+                    alg, n_bytes, sizes[i], link=link, gamma=gamma)))
+        return tuple(stages)
+
+    # Composed two-level: RS@inner -> allreduce@outer -> AG@inner.
+    if len(names) != 2:
+        raise ValueError(f"composed strategy {strategy!r} needs a "
+                         f"2-axis mesh, got axes {names}")
+    inner_alg, outer_alg = parts
+    outer_axis, inner_axis = names
+    pods, d = sizes
+    stages = []
+    frac_d = (d - 1) / d
+    level_bytes = int(n_bytes * frac_d)
+    if d > 1:
+        stages.append(Stage(
+            op="reduce_scatter", algorithm=inner_alg, axis=inner_axis,
+            axis_size=d, n_bytes=n_bytes, wire_bytes=level_bytes,
+            predicted_s=(d - 1) * intra.alpha_s
+            + n_bytes * frac_d * intra.beta
+            + n_bytes * frac_d * gamma))
+    chunk = n_bytes // d
+    stages.append(Stage(
+        op="allreduce", algorithm=outer_alg, axis=outer_axis,
+        axis_size=pods, n_bytes=chunk,
+        wire_bytes=reducers.wire_bytes(outer_alg, chunk, pods),
+        predicted_s=cost_model.allreduce_latency(
+            outer_alg, n_bytes / d, pods, link=inter, gamma=gamma)))
+    if d > 1:
+        stages.append(Stage(
+            op="all_gather", algorithm=inner_alg, axis=inner_axis,
+            axis_size=d, n_bytes=chunk, wire_bytes=level_bytes,
+            predicted_s=(d - 1) * intra.alpha_s
+            + n_bytes * frac_d * intra.beta))
+    return tuple(stages)
+
+
+def strategy_latency(strategy: str, n_bytes: float,
+                     axis_sizes: Sequence[int],
+                     intra=cost_model.ICI, inter=cost_model.DCN) -> float:
+    """Cost-model latency of one allreduce of ``n_bytes`` with
+    ``strategy`` over ``axis_sizes`` (outermost first) — the stage sum
+    of the decomposition tree; the selector's argmin objective."""
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(f"ax{i}" for i in range(len(sizes)))
+    return sum(st.predicted_s
+               for st in decompose(strategy, int(n_bytes), names, sizes,
+                                   intra=intra, inter=inter))
+
+
+# ---------------------------------------------------------------------------
+# The planner — the single resolution path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleRequest:
+    """Everything that determines a resolved schedule — the plan
+    cache's key (``fingerprint()``), derived from the gradient pytree
+    itself so staleness is impossible by construction (same guarantee
+    as the pointer cache's allocation interception)."""
+    treedef: Hashable
+    shapes: tuple
+    dtypes: tuple
+    groups_key: Hashable
+    threshold_bytes: int
+    fuse: bool
+    wire_dtype: str
+    axis_names: tuple[str, ...]
+    axis_sizes: tuple[int, ...]
+    strategy_context: Hashable     # fixed name, or selector fingerprint
+    switch_points: tuple[int, ...]
+    placement: str
+    link_key: tuple                # (intra α, intra bw, inter α, inter bw)
+
+    def fingerprint(self) -> Hashable:
+        # NOT dataclasses.astuple: that deep-copies every field, and a
+        # copied treedef no longer compares equal to the original.
+        return (self.treedef, self.shapes, self.dtypes, self.groups_key,
+                self.threshold_bytes, self.fuse, self.wire_dtype,
+                self.axis_names, self.axis_sizes, self.strategy_context,
+                self.switch_points, self.placement, self.link_key)
+
+
+def _tree_meta(tree, groups):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(x.shape) for x in flat)
+    dtypes = tuple(str(jnp.dtype(x.dtype)) for x in flat)
+    gkey = (None if groups is None
+            else tuple(jax.tree_util.tree_leaves(
+                groups,
+                is_leaf=lambda x: x is None or isinstance(x, tuple))))
+    return treedef, shapes, dtypes, gkey
+
+
+def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
+         strategy: str = "rhd_rsa", selector=None,
+         threshold_bytes: int = 4 << 20, fuse: bool = True,
+         groups=None, wire_dtype: str = "float32",
+         align_buckets: bool = True, placement: str = "post_backward",
+         intra=cost_model.ICI, inter=cost_model.DCN,
+         cache=None) -> ReduceSchedule:
+    """Resolve ``tree`` (arrays or ShapeDtypeStructs) into a
+    :class:`ReduceSchedule` — the ONE path from config to executable
+    schedule, subsuming what used to be spread across
+    ``aggregator._plan_context``/``_strategy_for``/``schedule()`` and
+    the selector's choice objects.
+
+    ``selector`` (a :class:`repro.core.selector.Selector`) makes the
+    per-bucket — and, on multi-axis meshes, per-LEVEL — algorithm
+    choice; ``strategy`` is the fixed name used when ``selector`` is
+    None.  ``cache`` (a :class:`repro.core.plan_cache.PlanCache`)
+    interns resolved schedules by :class:`ScheduleRequest` fingerprint.
+    """
+    names = tuple(axis_names)
+    sizes = tuple(int(s) for s in axis_sizes)
+    if len(names) != len(sizes):
+        raise ValueError(f"axis names {names} / sizes {sizes} mismatch")
+    if placement not in PLACEMENTS:
+        raise ValueError(f"placement {placement!r} not in {PLACEMENTS}")
+    intra = cost_model.resolve_link(intra)
+    inter = cost_model.resolve_link(inter)
+    wire_dtype = str(jnp.dtype(wire_dtype))
+    wire_itemsize = jnp.dtype(wire_dtype).itemsize
+
+    switch: tuple[int, ...] = ()
+    if selector is not None and fuse and align_buckets:
+        switch = tuple(selector.switch_points(
+            sizes, hi=max(int(threshold_bytes), 257)))
+    strategy_context: Hashable = \
+        ("auto", selector.fingerprint()) if selector is not None \
+        else normalize_strategy(strategy, len(names))
+
+    def _resolve() -> ReduceSchedule:
+        fplan = fusion.build_plan(
+            tree, int(threshold_bytes), groups=groups, fuse=fuse,
+            switch_points=switch or None, switch_itemsize=wire_itemsize)
+        order = overlap_mod.readiness_order(fplan)
+        rank = {bi: r for r, bi in enumerate(order)}
+        buckets = []
+        for i, bucket in enumerate(fplan.buckets):
+            n_bytes = int(bucket.size) * wire_itemsize
+            if selector is not None:
+                choice = selector.choose(n_bytes, sizes)
+                strat = normalize_strategy(choice.strategy, len(names))
+                predicted = choice.predicted_s
+            else:
+                strat = normalize_strategy(strategy, len(names))
+                predicted = None
+            stages = decompose(strat, n_bytes, names, sizes,
+                               intra=intra, inter=inter)
+            if predicted is None:
+                predicted = sum(st.predicted_s for st in stages)
+            buckets.append(BucketSchedule(
+                index=i, leaf_indices=bucket.leaf_indices,
+                size=int(bucket.size), n_bytes=n_bytes,
+                readiness_rank=rank[i], strategy=strat, stages=stages,
+                predicted_s=predicted))
+        return ReduceSchedule(
+            axis_names=names, axis_sizes=sizes, wire_dtype=wire_dtype,
+            placement=placement, threshold_bytes=int(threshold_bytes),
+            switch_points=switch, buckets=tuple(buckets), plan=fplan)
+
+    if cache is None:
+        return _resolve()
+    treedef, shapes, dtypes, gkey = _tree_meta(tree, groups)
+    request = ScheduleRequest(
+        treedef=treedef, shapes=shapes, dtypes=dtypes, groups_key=gkey,
+        threshold_bytes=int(threshold_bytes), fuse=fuse,
+        wire_dtype=wire_dtype, axis_names=names, axis_sizes=sizes,
+        strategy_context=strategy_context, switch_points=switch,
+        placement=placement,
+        link_key=(intra.alpha_s, intra.bandwidth,
+                  inter.alpha_s, inter.bandwidth))
+    return cache.resolve(request, _resolve)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic schedules (experiment matrix: no pytree in hand)
+# ---------------------------------------------------------------------------
+
+def synthetic(bucket_bytes: Sequence[float], strategy: str,
+              axis_sizes: Sequence[int],
+              axis_names: Sequence[str] | None = None,
+              intra=cost_model.ICI, inter=cost_model.DCN,
+              latency_fn=None, wire_dtype: str = "float32",
+              placement: str = "post_backward",
+              threshold_bytes: int = 0) -> ReduceSchedule:
+    """A DETACHED schedule for an analytic model's bucket list (the
+    experiment matrix's stand-in for a FusionPlan): bucket i is the
+    i-th variable-group from the START of the network, so readiness is
+    reverse plan order (last bucket's grads complete first), matching
+    ``overlap.model_tasks``.  ``latency_fn`` overrides the per-bucket
+    predicted latency (the matrix's per-design cost functions and the
+    measured backend); stages keep their cost-model estimates either
+    way."""
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(axis_names) if axis_names is not None else \
+        (("pod", "data") if len(sizes) == 2
+         else tuple(f"ax{i}" for i in range(len(sizes))))
+    strat = normalize_strategy(strategy, len(names))
+    itemsize = jnp.dtype(wire_dtype).itemsize
+    n = len(tuple(bucket_bytes))
+    buckets = []
+    for i, b in enumerate(bucket_bytes):
+        n_bytes = int(b)
+        stages = decompose(strat, n_bytes, names, sizes,
+                           intra=intra, inter=inter)
+        predicted = float(latency_fn(n_bytes)) if latency_fn is not None \
+            else sum(st.predicted_s for st in stages)
+        buckets.append(BucketSchedule(
+            index=i, leaf_indices=(), size=max(n_bytes // itemsize, 1),
+            n_bytes=n_bytes, readiness_rank=n - 1 - i, strategy=strat,
+            stages=stages, predicted_s=predicted))
+    return ReduceSchedule(
+        axis_names=names, axis_sizes=sizes,
+        wire_dtype=str(jnp.dtype(wire_dtype)), placement=placement,
+        threshold_bytes=int(threshold_bytes), switch_points=(),
+        buckets=tuple(buckets), plan=None)

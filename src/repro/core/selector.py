@@ -42,7 +42,7 @@ import json
 import math
 from typing import Hashable, Mapping, Sequence
 
-from . import cost_model, reducers
+from . import cost_model, schedule as schedule_mod
 
 # JSON tuning-table schema tag (bump on breaking change).
 TABLE_SCHEMA = "repro/allreduce-tuning/v1"
@@ -51,24 +51,20 @@ TABLE_SCHEMA = "repro/allreduce-tuning/v1"
 # (order is the tie-break: the paper's design wins equal-latency ties).
 DEFAULT_CANDIDATES = ("rhd_rsa", "ring_rsa", "psum")
 
-# Named link profiles accepted wherever a LinkParams is expected.
-LINK_PROFILES = {
-    "ici": cost_model.ICI,
-    "dcn": cost_model.DCN,
-    "paper": cost_model.PAPER_LINK,
-}
+# Extra candidates on a two-axis (pod × data) mesh: the composed
+# two-level schedules of core/schedule.py, one per OUTER (cross-pod)
+# algorithm — the per-level argmin the ReduceSchedule IR unlocks.
+# (The old opaque "hierarchical" candidate was exactly COMPOSED[0].)
+COMPOSED_CANDIDATES = tuple(
+    schedule_mod.composed_name("ring_rsa", outer)
+    for outer in schedule_mod.OUTER_ALGORITHMS)
+
+# Named link profiles accepted wherever a LinkParams is expected
+# (canonical table lives in cost_model; kept as aliases for importers).
+LINK_PROFILES = cost_model.LINK_PROFILES
+resolve_link = cost_model.resolve_link
 
 MODES = ("analytic", "empirical")
-
-
-def resolve_link(link) -> cost_model.LinkParams:
-    if isinstance(link, cost_model.LinkParams):
-        return link
-    try:
-        return LINK_PROFILES[link]
-    except KeyError:
-        raise ValueError(
-            f"unknown link profile {link!r}; one of {sorted(LINK_PROFILES)}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,26 +78,17 @@ def predict_latency(strategy: str, n_bytes: float,
                     link: cost_model.LinkParams = cost_model.ICI,
                     inter_link: cost_model.LinkParams = cost_model.DCN
                     ) -> float:
-    """Cost-model latency of ``strategy`` for one allreduce of
-    ``n_bytes`` over ``axis_sizes`` (outermost/pod axis first, matching
-    the aggregator's ``dp_axes``)."""
+    """Cost-model latency of ``strategy`` (flat, composed, or the
+    ``hierarchical`` alias) for one allreduce of ``n_bytes`` over
+    ``axis_sizes`` (outermost/pod axis first, matching the aggregator's
+    ``dp_axes``) — the stage sum of the schedule IR's decomposition
+    tree (``schedule.strategy_latency``)."""
     sizes = tuple(int(s) for s in axis_sizes)
-    if len(sizes) == 1:
-        if strategy == "hierarchical":
-            # degenerates to ring on a single-level mesh (reducers do
-            # the same)
-            return cost_model.allreduce_latency("ring_rsa", n_bytes,
-                                                sizes[0], link=link)
-        return cost_model.allreduce_latency(strategy, n_bytes, sizes[0],
-                                            link=link)
-    if len(sizes) == 2:
-        pods, d = sizes
-        if strategy == "hierarchical":
-            return cost_model.hierarchical_latency(
-                n_bytes, d=d, pods=pods, intra=link, inter=inter_link)
-        return cost_model.flat_multiaxis_latency(
-            strategy, n_bytes, d=d, pods=pods, intra=link, inter=inter_link)
-    raise ValueError(f"selector supports 1- or 2-axis meshes, got {sizes}")
+    if len(sizes) > 2:
+        raise ValueError(f"selector supports 1- or 2-axis meshes, "
+                         f"got {sizes}")
+    return schedule_mod.strategy_latency(strategy, n_bytes, sizes,
+                                         intra=link, inter=inter_link)
 
 
 # ---------------------------------------------------------------------------
@@ -143,14 +130,17 @@ class AnalyticSelector(Selector):
         self.link = resolve_link(link)
         self.inter_link = resolve_link(inter_link)
         for s in candidates:
-            if s not in reducers.STRATEGIES:
+            if not schedule_mod.is_strategy(s):
                 raise ValueError(f"unknown candidate strategy {s!r}")
         self.candidates = tuple(candidates)
         self._switch_cache: dict = {}
 
     def candidates_for(self, axis_sizes: Sequence[int]) -> tuple[str, ...]:
+        """On a two-axis mesh the pool widens to the composed two-level
+        schedules (one per outer algorithm): the argmin is then a
+        per-bucket AND per-level choice."""
         if len(tuple(axis_sizes)) == 2:
-            return self.candidates + ("hierarchical",)
+            return self.candidates + COMPOSED_CANDIDATES
         return self.candidates
 
     def choose(self, n_bytes: int, axis_sizes: Sequence[int]) -> Choice:
@@ -223,29 +213,49 @@ class EmpiricalSelector(Selector):
     def __init__(self, table: Mapping):
         validate_table(table)
         self.table = table
-        # p -> sorted [(bytes, {strategy: us})]
+        # flat entries: p -> sorted [(bytes, {strategy: us})];
+        # multi-axis entries (an "axes" list, outermost/pod first) are
+        # keyed by the exact axes tuple — the composed-schedule rows of
+        # benchmarks/allreduce_micro.py's multi-axis sweep.
         self._rows: dict[int, list[tuple[int, dict]]] = {}
+        self._axes_rows: dict[tuple[int, ...], list[tuple[int, dict]]] = {}
         for e in table["entries"]:
-            self._rows.setdefault(int(e["p"]), []).append(
-                (int(e["bytes"]), dict(e["latency_us"])))
-        for rows in self._rows.values():
+            row = (int(e["bytes"]), dict(e["latency_us"]))
+            if e.get("axes"):
+                self._axes_rows.setdefault(
+                    tuple(int(a) for a in e["axes"]), []).append(row)
+            else:
+                self._rows.setdefault(int(e["p"]), []).append(row)
+        for rows in (*self._rows.values(), *self._axes_rows.values()):
             rows.sort(key=lambda r: r[0])
         self._fp = hashlib.sha256(
             json.dumps(table, sort_keys=True).encode()).hexdigest()[:16]
 
-    def _rows_for(self, p: int) -> list[tuple[int, dict]]:
+    def _rows_for(self, axis_sizes: Sequence[int]
+                  ) -> list[tuple[int, dict]]:
+        sizes = tuple(int(s) for s in axis_sizes)
+        if len(sizes) > 1 and sizes in self._axes_rows:
+            return self._axes_rows[sizes]
+        p = 1
+        for s in sizes:
+            p *= s
         if p in self._rows:
             return self._rows[p]
+        if not self._rows:
+            # axes-only table queried off-grid: nearest measured mesh
+            # by total device count (log distance, ties -> smaller)
+            nearest = min(self._axes_rows,
+                          key=lambda ax: (abs(math.log(
+                              math.prod(ax) / p)), ax))
+            return self._axes_rows[nearest]
         # nearest measured process count (log distance, ties -> smaller)
         nearest = min(self._rows,
                       key=lambda q: (abs(math.log(q / p)), q))
         return self._rows[nearest]
 
     def choose(self, n_bytes: int, axis_sizes: Sequence[int]) -> Choice:
-        p = 1
-        for s in axis_sizes:
-            p *= int(s)
-        rows = self._rows_for(p)
+        sizes = tuple(int(s) for s in axis_sizes)
+        rows = self._rows_for(sizes)
         entry = rows[0][1]
         for b, lat in rows:
             if b <= n_bytes:
@@ -257,24 +267,23 @@ class EmpiricalSelector(Selector):
         # ps_gather measurements (the trajectory artifact records every
         # reducer), but the baseline is never auto-selected.
         candidates = DEFAULT_CANDIDATES
-        if len(tuple(axis_sizes)) == 2:
-            candidates = candidates + ("hierarchical",)
+        if len(sizes) == 2:
+            candidates = candidates + COMPOSED_CANDIDATES \
+                + ("hierarchical",)
         for s in candidates:
             t = entry.get(s)
             if t is not None and t < best_t:
                 best, best_t = s, t
         if best is None:
             raise ValueError(
-                f"tuning table has no selectable strategy for p={p}, "
-                f"bytes<={n_bytes} (candidates {candidates})")
+                f"tuning table has no selectable strategy for "
+                f"axes={sizes}, bytes<={n_bytes} "
+                f"(candidates {candidates})")
         return Choice(best, best_t * 1e-6)
 
     def switch_points(self, axis_sizes: Sequence[int],
                       lo: int = 256, hi: int = 1 << 30) -> tuple[int, ...]:
-        p = 1
-        for s in axis_sizes:
-            p *= int(s)
-        rows = self._rows_for(p)
+        rows = self._rows_for(tuple(int(s) for s in axis_sizes))
         pts = []
         prev = None
         for b, _ in rows:
@@ -312,14 +321,27 @@ def validate_table(table: Mapping) -> None:
         if not isinstance(b, int) or b < 0:
             raise ValueError(f"entry 'bytes' must be a non-negative int: "
                              f"{e!r}")
-        if (p, b) in seen:
-            raise ValueError(f"duplicate (p={p}, bytes={b}) entry")
-        seen.add((p, b))
+        axes = e.get("axes")
+        if axes is not None:
+            if (not isinstance(axes, list) or len(axes) < 2
+                    or any(not isinstance(a, int) or a < 1 for a in axes)):
+                raise ValueError(f"entry 'axes' must be a list of >= 2 "
+                                 f"positive ints: {e!r}")
+            if math.prod(axes) != p:
+                raise ValueError(f"entry 'axes' {axes} product != p={p}")
+        key = (p, tuple(axes) if axes else None, b)
+        if key in seen:
+            raise ValueError(f"duplicate (p={p}, axes={axes}, bytes={b}) "
+                             f"entry")
+        seen.add(key)
         if not isinstance(lat, Mapping) or not lat:
             raise ValueError(f"entry 'latency_us' must be a non-empty "
                              f"object: {e!r}")
         for s, us in lat.items():
-            if s not in reducers.STRATEGIES:
+            # flat reducer names, the hierarchical alias, and the
+            # composed two-level names of core/schedule.py are all
+            # legal measurement keys
+            if not schedule_mod.is_strategy(s):
                 raise ValueError(f"unknown strategy {s!r} in entry "
                                  f"(p={p}, bytes={b})")
             if not isinstance(us, (int, float)) or not math.isfinite(us) \

@@ -41,6 +41,7 @@ from typing import Callable, Iterable, Mapping, Sequence
 from repro.core import cost_model as cm
 from repro.core import hw
 from repro.core import overlap as ov
+from repro.core import schedule as schedule_mod
 from repro.models.cnn import PAPER_MODELS
 
 # -- axes -------------------------------------------------------------------
@@ -169,27 +170,45 @@ def compute_seconds(model: str, prof: HwProfile,
         / (prof.flops * prof.mfu)
 
 
+def point_schedule(model: str, p: int, design: str, prof: HwProfile,
+                   latency_fn: Callable[[float], float] | None = None
+                   ) -> schedule_mod.ReduceSchedule:
+    """The design's resolved schedule for one grid cell, as a DETACHED
+    ReduceSchedule IR (core/schedule.py): the same object the dryrun
+    records for real configs, built here from the analytic model's
+    variable list — one bucket per fused message, decomposed into
+    stages of the design's executed strategy (DESIGN_STRATEGY).
+    ``latency_fn`` overrides the per-bucket latency (the per-design
+    cost functions, or the measured backend's wall-clock table); p=1
+    yields an empty schedule (no communication)."""
+    strategy = DESIGN_STRATEGY[design]
+    if p == 1:
+        return schedule_mod.synthetic([], strategy, (1,), ("data",),
+                                      intra=prof.link)
+    info = PAPER_MODELS[model]
+    sizes = ov.fused_bucket_bytes(info["params"] * 4,
+                                  MODEL_VARIABLES[model],
+                                  fusion_threshold(design))
+    if latency_fn is None:
+        latency_fn = design_latency_fn(design, p, prof)
+    return schedule_mod.synthetic(sizes, strategy, (p,), ("data",),
+                                  intra=prof.link, latency_fn=latency_fn,
+                                  threshold_bytes=fusion_threshold(design))
+
+
 def step_timeline(model: str, p: int, design: str, prof: HwProfile,
                   batch_per_dev: int = BATCH_PER_DEV,
                   latency_fn: Callable[[float], float] | None = None
                   ) -> ov.Timeline:
     """Timeline-simulated step: every design overlaps communication
     with backward compute to the extent bucket readiness allows (the
-    wait-free-backprop schedule of core/overlap.py).  ``latency_fn``
-    overrides the cost model — the measured backend passes measured
-    per-bucket latencies through the SAME composition."""
-    info = PAPER_MODELS[model]
+    wait-free-backprop schedule of core/overlap.py), played from the
+    cell's ReduceSchedule IR.  ``latency_fn`` overrides the cost model
+    — the measured backend passes measured per-bucket latencies through
+    the SAME composition."""
     compute_s = compute_seconds(model, prof, batch_per_dev)
-    grad_bytes = info["params"] * 4
-    n_vars = MODEL_VARIABLES[model]
-    if p == 1:
-        return ov.model_timeline(0.0, 0, FUSION_BYTES, compute_s,
-                                 latency_fn=lambda b: 0.0)
-    if latency_fn is None:
-        latency_fn = design_latency_fn(design, p, prof)
-    return ov.model_timeline(grad_bytes, n_vars, fusion_threshold(design),
-                             compute_s, latency_fn=latency_fn,
-                             strategy=design)
+    sched = point_schedule(model, p, design, prof, latency_fn=latency_fn)
+    return ov.simulate_schedule(sched, compute_s)
 
 
 def sync_seconds(p: int, prof: HwProfile) -> float:
@@ -212,12 +231,13 @@ def throughput(model: str, p: int, design: str, prof: HwProfile,
 # -- matrix execution -------------------------------------------------------
 
 def _row(point: ExperimentPoint, prof: HwProfile, backend: str,
-         tl: ov.Timeline) -> dict:
+         tl: ov.Timeline,
+         sched: "schedule_mod.ReduceSchedule | None" = None) -> dict:
     st = tl.step_s + sync_seconds(point.p, prof) + prof.overhead_s
     ips = point.p * point.batch_per_dev / st
     base = throughput(point.model, 1, "Horovod_MPI_Opt", prof,
                       point.batch_per_dev)
-    return {
+    row = {
         "design": point.design, "model": point.model, "p": point.p,
         "batch_per_dev": point.batch_per_dev,
         "profile": prof.name, "backend": backend,
@@ -227,6 +247,12 @@ def _row(point: ExperimentPoint, prof: HwProfile, backend: str,
         "hidden_frac": tl.overlap_fraction,
         "n_buckets": len(tl.events),
     }
+    if sched is not None and sched.buckets:
+        # the same repro/schedule/v1 record the dryrun writes, grouped
+        # (synthetic buckets are mostly identical; per-bucket fidelity
+        # would bloat the trajectory artifact for no information)
+        row["schedule"] = sched.to_json(group=True)
+    return row
 
 
 def run_point(point: ExperimentPoint, profile: str = "paper",
@@ -234,23 +260,26 @@ def run_point(point: ExperimentPoint, profile: str = "paper",
               measured_latencies: Mapping[int, float] | None = None) -> dict:
     """Evaluate one grid cell.  ``backend="measured"`` needs the
     per-bucket-size measured latency table from
-    :func:`measure_design_latencies` (seconds, keyed by message bytes)."""
+    :func:`measure_design_latencies` (seconds, keyed by message bytes).
+    Both backends resolve the cell's ReduceSchedule IR and play it
+    through the same timeline composition."""
     point.validate()
     prof = PROFILES[profile]
     if backend == "model":
-        tl = step_timeline(point.model, point.p, point.design, prof,
-                           point.batch_per_dev)
+        lat = None
     elif backend == "measured":
         if point.p > 1 and measured_latencies is None:
             raise ValueError("backend='measured' needs measured_latencies "
                              "(measure_design_latencies)")
         lat = None if point.p == 1 else \
             (lambda b: measured_latencies[int(b)])
-        tl = step_timeline(point.model, point.p, point.design, prof,
-                           point.batch_per_dev, latency_fn=lat)
     else:
         raise ValueError(f"unknown backend {backend!r}; model|measured")
-    return _row(point, prof, backend, tl)
+    sched = point_schedule(point.model, point.p, point.design, prof,
+                           latency_fn=lat)
+    compute_s = compute_seconds(point.model, prof, point.batch_per_dev)
+    tl = ov.simulate_schedule(sched, compute_s)
+    return _row(point, prof, backend, tl, sched)
 
 
 def run_matrix(points: Iterable[ExperimentPoint] | None = None,

@@ -88,40 +88,36 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
 
 def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
                      collective_bytes=None) -> dict:
-    """Resolve and summarize the per-bucket reduction schedule: which
-    algorithm each fusion bucket got (one strategy everywhere unless
-    strategy='auto'), the cost-model latency the selector predicted, the
-    collective latency the roofline actually charges from the compiled
-    HLO bytes, the measured-vs-modeled wire-byte cross-check, and the
-    overlap timeline — bucket ready-times played against per-bucket
-    latencies to predict how much of the comm the backward hides
-    (core/overlap.py)."""
+    """Resolve and record the ReduceSchedule IR (DESIGN.md §3.8): the
+    same object the compiled step executes — per-bucket decomposition
+    trees with per-stage wire bytes and latencies — serialized under
+    schema repro/schedule/v1, plus the roofline-charged comm latency,
+    the IR-vs-HLO wire-byte cross-check, and the overlap timeline
+    (bucket ready-times played against per-bucket latencies to predict
+    how much of the comm the backward hides, core/overlap.py)."""
     from repro.core import overlap as overlap_mod
     from repro.launch import roofline as rl
     from repro.models import param_groups
 
     axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
-    rows = agg.schedule(params_struct, axis_sizes,
+    sched = agg.resolve(params_struct, axis_sizes,
                         groups=param_groups(params_struct))
-    algorithms: dict = {}
-    for r in rows:
-        algorithms[r["strategy"]] = algorithms.get(r["strategy"], 0) + 1
-    predicted = sum(r["predicted_s"] for r in rows)
-    timeline = overlap_mod.simulate_plan(agg.last_plan, rows,
-                                         compute_s=roof.compute_s)
+    timeline = overlap_mod.simulate_schedule(sched,
+                                             compute_s=roof.compute_s)
     return {
         "axis_sizes": list(axis_sizes),
-        "n_buckets": len(rows),
-        "algorithms": algorithms,
-        "predicted_comm_s": predicted,
+        "n_buckets": sched.n_buckets,
+        "algorithms": sched.algorithms(),
+        "decomposition": sched.render(),
+        "predicted_comm_s": sched.predicted_s,
         "charged_comm_s": roof.collective_s,
-        "wire_check": rl.wire_check(rows, axis_sizes,
-                                    collective_bytes or {}),
+        "wire_check": rl.wire_check(sched, collective_bytes or {}),
         "overlap": rl.overlap_report(roof, timeline),
-        # cap the per-bucket listing so --all sweeps stay readable
-        "buckets": [{"bytes": r["bytes"], "strategy": r["strategy"],
-                     "predicted_us": round(r["predicted_s"] * 1e6, 2)}
-                    for r in rows[:64]],
+        # the serialized IR itself — launch/report.py renders its
+        # decomposition column straight from this record.  Grouped so
+        # --all sweeps over many-bucket configs stay readable (runs of
+        # identical buckets collapse; readiness ranks are preserved)
+        "ir": sched.to_json(group=True),
     }
 
 
@@ -224,8 +220,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                       f"dominant={roof.dominant}")
                 sched = rec.get("schedule")
                 if sched:
-                    algs = " + ".join(f"{s}×{n}" for s, n in
-                                      sorted(sched["algorithms"].items()))
+                    algs = sched["decomposition"]
                     print(f"  schedule: {sched['n_buckets']} buckets "
                           f"[{algs}] predicted="
                           f"{sched['predicted_comm_s']*1e3:.2f}ms "

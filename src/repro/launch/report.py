@@ -94,22 +94,27 @@ def roofline_table(recs, mesh="16x16"):
 
 def schedule_table(recs):
     """Per-bucket reduction schedules (strategy='auto' mixes algorithms
-    per step): chosen algorithms, selector-predicted comm latency vs the
-    HLO-charged collective term."""
+    per step): the per-level decomposition of the serialized
+    ReduceSchedule IR (schema repro/schedule/v1), selector-predicted
+    comm latency vs the HLO-charged collective term."""
     rows = [r for r in recs
             if r.get("status") == "OK" and r.get("schedule")]
     if not rows:
         return ""
     out = ["### Reduction schedules (per-bucket algorithm selection "
            "+ predicted overlap)\n",
-           "| arch | shape | strategy | buckets | algorithms | "
+           "| arch | shape | buckets | decomposition | "
            "predicted comm | charged comm | wire bytes (pred→charged) | "
            "comm hidden | step serial→overlapped |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+           "|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
         s = r["schedule"]
-        algs = " + ".join(f"{k}×{v}" for k, v in
-                          sorted(s["algorithms"].items()))
+        # fed straight from the serialized IR; older records without an
+        # "ir" block fall back to the algorithms summary
+        ir = s.get("ir") or {}
+        algs = ir.get("decomposition") or s.get("decomposition") or \
+            " + ".join(f"{k}×{v}" for k, v in
+                       sorted(s.get("algorithms", {}).items()))
         ov = s.get("overlap")
         if ov:
             hidden = f"{ov['overlap_fraction'] * 100:.0f}%"
@@ -125,7 +130,7 @@ def schedule_table(recs):
         else:
             wire = "—"
         out.append(
-            f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
+            f"| {r['arch']} | {r['shape']} | "
             f"{s['n_buckets']} | {algs} | "
             f"{fmt_s(s['predicted_comm_s'])} | "
             f"{fmt_s(s['charged_comm_s'])} | {wire} | {hidden} | {step} |")

@@ -138,41 +138,30 @@ def step_estimate_s(roof: "Roofline",
     return max(roof.compute_s, roof.memory_s) + coll
 
 
-def wire_check(schedule_rows, axis_sizes, collective_bytes,
-               rel_tol: float = 0.02) -> dict:
+def wire_check(sched, collective_bytes, rel_tol: float = 0.02) -> dict:
     """Measured-vs-modeled comm-byte consistency (DESIGN.md §3.7/§4):
     compare the HLO-charged collective bytes of a compiled step against
-    the wire bytes the experiment matrix's accounting predicts for the
-    resolved per-bucket schedule.
+    the per-STAGE wire bytes carried by the resolved
+    :class:`repro.core.schedule.ReduceSchedule` — no independent
+    re-derivation: the IR the aggregator executed is the same object
+    being verified.
 
-    ``schedule_rows``: GradientAggregator.schedule rows ({bytes,
-    strategy, ...}); ``axis_sizes``: data-axis sizes, outermost first
-    (multi-axis meshes route through the hierarchical/flat multi-axis
-    accounting in ``reducers.wire_bytes``); ``collective_bytes``: the
-    per-kind byte dict from the HLO parse.  Each strategy predicts the
-    HLO kind it compiles to: ppermute-schedule strategies →
-    collective-permute, ``psum`` → all-reduce payload (one result-size
-    charge, the vendor op), ``ps_gather`` → all-gather (its recv-side
-    N(p-1) wire bytes sit inside the p·N gathered result).  The charged
-    side may legitimately exceed the prediction (model-axis GSPMD
-    collectives, padding on non-divisible chunks, old-jax degraded-mode
-    emulation), so the verdict is per kind: ``consistent`` = every
-    predicted kind is within ``rel_tol`` below the charge it explains
-    or lower.
+    ``sched``: a ReduceSchedule (attached or detached/deserialized).
+    ``collective_bytes``: the per-kind byte dict from the HLO parse.
+    Each stage predicts the HLO kind it compiles to (``Stage.hlo_kind``:
+    ppermute schedules → collective-permute, ``psum`` → all-reduce
+    payload, ``ps_gather`` → all-gather) and the bytes it charges
+    (``Stage.hlo_bytes``).  The charged side may legitimately exceed
+    the prediction (model-axis GSPMD collectives, padding on
+    non-divisible chunks, old-jax degraded-mode emulation), so the
+    verdict is per kind: ``consistent`` = every predicted kind is
+    within ``rel_tol`` below the charge it explains or lower.
     """
-    from repro.core.reducers import wire_bytes as _wire
-    sizes = tuple(int(s) for s in axis_sizes)
     predicted: dict = {}
-    for r in schedule_rows:
-        strat, b = r["strategy"], int(r["bytes"])
-        if strat == "psum":
-            kind = "all-reduce"
-            n = b
-        else:
-            kind = "all-gather" if strat == "ps_gather" \
-                else "collective-permute"
-            n = _wire(strat, b, sizes if len(sizes) > 1 else sizes[0])
-        predicted[kind] = predicted.get(kind, 0) + n
+    for bucket in sched.buckets:
+        for st in bucket.stages:
+            predicted[st.hlo_kind] = predicted.get(st.hlo_kind, 0) \
+                + st.hlo_bytes
     charged = {k: int(v) for k, v in collective_bytes.items()}
     kinds = {}
     for kind, want in sorted(predicted.items()):
@@ -185,7 +174,7 @@ def wire_check(schedule_rows, axis_sizes, collective_bytes,
             "ok": got >= want * (1.0 - rel_tol),
         }
     return {
-        "axis_sizes": list(sizes),
+        "axis_sizes": list(sched.axis_sizes),
         "predicted_total": int(sum(predicted.values())),
         "charged_total": int(sum(charged.values())),
         "kinds": kinds,

@@ -85,9 +85,12 @@ def main():
             sched = rec.get("schedule")
             algs = ov = wire = ""
             if sched:
-                algs = " algs=" + "+".join(
-                    f"{s}x{n}" for s, n in
-                    sorted(sched.get("algorithms", {}).items()))
+                # per-level decomposition straight from the IR record
+                algs = " sched=" + (
+                    sched.get("decomposition")
+                    or "+".join(f"{s}x{n}" for s, n in
+                                sorted(sched.get("algorithms", {})
+                                       .items())))
                 if sched.get("overlap"):
                     ov = (" overlap="
                           f"{sched['overlap']['overlap_fraction']*100:.0f}%")

@@ -156,15 +156,18 @@ def check_wire_check_layer():
                             out_specs=P("data"))) \
         .lower(grads).compile().as_text()
     charged = H.analyze(txt).collective_bytes
-    rows = agg.schedule(
-        {k: jax.ShapeDtypeStruct((v.shape[0] // p,), v.dtype)
-         for k, v in grads.items()}, (p,))
-    rep = rl.wire_check(rows, (p,), charged)
+    structs = {k: jax.ShapeDtypeStruct((v.shape[0] // p,), v.dtype)
+               for k, v in grads.items()}
+    sched = agg.resolve(structs, (p,))
+    rep = rl.wire_check(sched, charged)
     assert rep["consistent"], rep
     kind = rep["kinds"]["collective-permute"]
     assert kind["predicted"] == kind["charged"], rep
-    # a wrong mesh hypothesis must be flagged, not silently absorbed
-    bad = rl.wire_check(rows, (p * 2,), charged)
+    # a wrong mesh hypothesis must be flagged, not silently absorbed:
+    # resolving the same grads for a larger axis predicts more wire
+    # bytes than the compiled step charges
+    bad_sched = agg.resolve(structs, (p * 2,))
+    bad = rl.wire_check(bad_sched, charged)
     assert not bad["consistent"], bad
     print("wire_check layer ok (consistent on truth, flags mismatch)")
 

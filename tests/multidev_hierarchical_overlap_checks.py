@@ -1,0 +1,205 @@
+"""Composed per-level schedules × overlap checks (the ReduceSchedule
+IR's new capability, DESIGN.md §3.8), run as a SUBPROCESS by
+test_reducers_multidev.py with 8 host devices.
+
+A configuration that was impossible before the IR: a two-level
+(data × pod) schedule whose per-LEVEL algorithms are chosen per bucket,
+executing with ``overlap=True`` (reductions inside the backward).
+Pins, on (d, pods) ∈ {(2, 2), (2, 3), (4, 2)} meshes:
+
+  * overlap=True with a fixed composed ``ring_rsa×rhd_rsa`` schedule is
+    BIT-EXACTLY equal to the post-backward path and to an all-``psum``
+    aggregator on integer-valued float32 — composing levels and
+    overlapping changes when/how collectives run, never what they
+    compute;
+  * an empirical tuning table with per-mesh ``axes`` entries forces a
+    PER-BUCKET mix of a flat fold (small bucket) and a composed
+    two-level schedule (large bucket) under overlap=True — still
+    bit-exact, with BOTH levels visible in the compiled HLO (the exact
+    permute count of ring-RS/AG over d plus the RHD steps over pods,
+    plus the flat fold's permutes);
+  * the compiled collective-permute bytes equal the IR's summed
+    per-stage wire bytes, and ``roofline.wire_check`` PASSES against
+    the same ReduceSchedule object the aggregator executed.
+
+Exit code 0 = all checks passed."""
+from devflags import force_host_devices
+
+force_host_devices(8)
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+from repro.core import selector as sel
+from repro.core.compat import shard_map
+from repro.core.reducers import allreduce_steps
+
+MESHES = ((2, 2), (2, 3), (4, 2))        # (d, pods): 4, 6, 8 devices
+
+
+def make_mesh2(pods, d):
+    devs = jax.devices()
+    return Mesh(np.array(devs[:pods * d]).reshape(pods, d),
+                ("pod", "data"))
+
+
+def int_loss(params, x):
+    """Loss whose per-rank gradients are integer-valued float32: every
+    summation order is exact, so bit-equality is the bar."""
+    s = jnp.sum(x)
+    total = 0.0
+    for k in sorted(params):
+        v = params[k]
+        coeff = s + jnp.arange(v.size, dtype=jnp.float32).reshape(v.shape)
+        total = total + jnp.sum(v * coeff)
+    return total
+
+
+def int_params(p):
+    """Small fused leaves + one large bucket; element counts are
+    multiples of 32 so neither the d-way ring chunking nor the pow2 RHD
+    core pads anything on these meshes."""
+    return {
+        "a": jnp.ones((p * 32, 3), jnp.float32),
+        "b": jnp.ones((p * 32,), jnp.float32),
+        "w": jnp.ones((p * 12288,), jnp.float32),
+    }
+
+
+def grads_fn(cfg, mesh, overlap):
+    agg = GradientAggregator(cfg, ("pod", "data"), cache=PlanCache())
+    axes = ("pod", "data")
+
+    def local(params, x):
+        if overlap:
+            return jax.grad(
+                lambda q: int_loss(agg.overlap_params(q), x))(params)
+        g = jax.grad(int_loss)(params, x)
+        return agg(g)
+
+    fn = jax.jit(shard_map(local, mesh, in_specs=(P(), P(axes)),
+                           out_specs=P(), axis_names=set(axes),
+                           check_vma=False))
+    return fn, agg
+
+
+def check_composed_overlap_bitexact():
+    for d, pods in MESHES:
+        p = pods * d
+        mesh = make_mesh2(pods, d)
+        params = int_params(p)
+        x = jnp.arange(p * 4, dtype=jnp.float32)
+        comp = AggregatorConfig(strategy="ring_rsa×rhd_rsa",
+                                fusion_threshold_mb=0.02, overlap=True)
+        comp_post = AggregatorConfig(strategy="ring_rsa×rhd_rsa",
+                                     fusion_threshold_mb=0.02)
+        ref = AggregatorConfig(strategy="psum", fusion_threshold_mb=0.02)
+        fn_ov, agg_ov = grads_fn(comp, mesh, overlap=True)
+        fn_post, _ = grads_fn(comp_post, mesh, overlap=False)
+        fn_ref, _ = grads_fn(ref, mesh, overlap=False)
+        g_ov, g_post, g_ref = fn_ov(params, x), fn_post(params, x), \
+            fn_ref(params, x)
+        sched = agg_ov.last_schedule
+        assert sched.placement == "in_backward"
+        assert sched.strategies() == ("ring_rsa×rhd_rsa",)
+        assert all(b.render() == "ring@data×rhd@pod"
+                   for b in sched.buckets), sched.to_json()
+        for k in params:
+            a = np.asarray(g_ov[k])
+            assert (a == np.asarray(g_post[k])).all(), \
+                f"(d={d},pods={pods}): overlap != post-backward at {k!r}"
+            assert (a == np.asarray(g_ref[k])).all(), \
+                f"(d={d},pods={pods}): composed overlap != psum at {k!r}"
+    print(f"composed overlap bit-exact ok (d,pods) in {MESHES}")
+
+
+def forced_axes_table(pods, d, split):
+    """Per-mesh table: below ``split`` wire bytes the flat RHD fold
+    wins, above it the composed two-level schedule — a per-bucket,
+    per-LEVEL selection."""
+    return {"schema": sel.TABLE_SCHEMA, "entries": [
+        {"p": pods * d, "axes": [pods, d], "bytes": 0,
+         "latency_us": {"rhd_rsa": 1.0, "ring_rsa×rhd_rsa": 5.0,
+                        "psum": 9.0}},
+        {"p": pods * d, "axes": [pods, d], "bytes": split,
+         "latency_us": {"ring_rsa×rhd_rsa": 1.0, "rhd_rsa": 5.0,
+                        "psum": 9.0}},
+    ]}
+
+
+def check_per_bucket_composed_selection_under_overlap():
+    """The acceptance configuration: on a (pod × data) mesh, the
+    empirical selector picks a flat fold for the small fused bucket and
+    a composed two-level schedule for the large bucket, running under
+    overlap=True — bit-exact with psum, both levels in the HLO, permute
+    bytes == the IR's per-stage wire bytes, wire_check PASS."""
+    from repro.launch import hlo_analysis as H
+    from repro.launch import roofline as rl
+
+    d, pods = 4, 2
+    p = pods * d
+    mesh = make_mesh2(pods, d)
+    params = int_params(p)
+    x = jnp.arange(p * 4, dtype=jnp.float32)
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "table.json")
+        with open(path, "w") as f:
+            json.dump(forced_axes_table(pods, d, 32 * 1024), f)
+        auto = AggregatorConfig(strategy="auto",
+                                selector_mode="empirical",
+                                selector_table=path,
+                                fusion_threshold_mb=0.02, overlap=True)
+        ref = AggregatorConfig(strategy="psum", fusion_threshold_mb=0.02)
+        fn_ov, agg = grads_fn(auto, mesh, overlap=True)
+        fn_ref, _ = grads_fn(ref, mesh, overlap=False)
+        g_ov, g_ref = fn_ov(params, x), fn_ref(params, x)
+
+        sched = agg.last_schedule
+        assert set(sched.strategies()) == \
+            {"rhd_rsa", "ring_rsa×rhd_rsa"}, sched.to_json()
+        for k in params:
+            assert (np.asarray(g_ov[k]) == np.asarray(g_ref[k])).all(), \
+                f"per-bucket composed overlap != psum bit-exactly at {k!r}"
+
+        txt = fn_ov.lower(params, x).compile().as_text()
+        assert "all-reduce" not in txt, \
+            "explicit schedules only — no vendor collective"
+        n_perm = txt.count("collective-permute(")
+        want_perm = 0
+        for b in sched.buckets:
+            if b.strategy == "rhd_rsa":
+                # flat fold: a full RHD per axis, innermost first
+                want_perm += allreduce_steps("rhd_rsa", d) \
+                    + allreduce_steps("rhd_rsa", pods)
+            else:
+                # both levels: ring RS + AG over d, RHD over pods
+                want_perm += 2 * (d - 1) + allreduce_steps("rhd_rsa",
+                                                           pods)
+        assert n_perm == want_perm, (n_perm, want_perm, sched.render())
+
+        charged = H.analyze(txt).collective_bytes
+        got = charged.get("collective-permute", 0)
+        want = sum(st.wire_bytes for b in sched.buckets
+                   for st in b.stages)
+        assert got == want, (got, want, sched.to_json())
+
+        rep = rl.wire_check(sched, charged)
+        assert rep["consistent"], rep
+        kind = rep["kinds"]["collective-permute"]
+        assert kind["predicted"] == kind["charged"], rep
+    print("per-bucket composed selection under overlap ok "
+          f"({sched.render()}; {n_perm} permutes, {want} wire bytes)")
+
+
+if __name__ == "__main__":
+    check_composed_overlap_bitexact()
+    check_per_bucket_composed_selection_under_overlap()
+    print("ALL HIERARCHICAL OVERLAP CHECKS PASSED")

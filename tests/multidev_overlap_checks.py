@@ -90,7 +90,8 @@ def check_overlap_bitexact():
         fn_ref, _ = grads_fn(ref, mesh, overlap=False)
         g_ov, g_post, g_ref = fn_ov(params, x), fn_post(params, x), \
             fn_ref(params, x)
-        assert len(agg_ov.last_schedule) >= 2, agg_ov.last_schedule
+        assert agg_ov.last_schedule.n_buckets >= 2, \
+            agg_ov.last_schedule.to_json()
         for k in params:
             a = np.asarray(g_ov[k])
             assert (a == np.asarray(g_post[k])).all(), \
@@ -125,8 +126,8 @@ def check_overlap_mixed_strategies():
         fn_ov, agg = grads_fn(auto, mesh, overlap=True)
         fn_ref, _ = grads_fn(ref, mesh, overlap=False)
         g_ov, g_ref = fn_ov(params, x), fn_ref(params, x)
-        chosen = {s for _, s in agg.last_schedule}
-        assert chosen == {"rhd_rsa", "psum"}, agg.last_schedule
+        chosen = set(agg.last_schedule.strategies())
+        assert chosen == {"rhd_rsa", "psum"}, agg.last_schedule.to_json()
         for k in params:
             assert (np.asarray(g_ov[k]) == np.asarray(g_ref[k])).all(), \
                 f"overlapped mixed schedule != psum bit-exactly at {k!r}"
@@ -164,7 +165,7 @@ def check_overlap_train_step():
             losses.append(float(m["loss"]))
         assert all(np.isfinite(losses)), losses
         assert losses[-1] < losses[0], losses
-        assert len(sh["aggregator"].last_schedule) >= 2
+        assert sh["aggregator"].last_schedule.n_buckets >= 2
         finals[overlap] = params
     for (ka, a), (_, b) in zip(
             jax.tree_util.tree_leaves_with_path(finals[False]),

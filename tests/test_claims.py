@@ -222,31 +222,43 @@ def test_measured_backend_p1_needs_no_latencies():
 
 
 def test_wire_check_maps_strategies_to_their_hlo_kinds():
-    """The measured-vs-modeled layer must compare each strategy against
-    the HLO op kind it actually compiles to: ppermute schedules →
-    collective-permute, psum → all-reduce, ps_gather → all-gather (a
-    correct ps_gather step must NOT be flagged as a mismatch)."""
+    """The measured-vs-modeled layer must compare each stage of the
+    ReduceSchedule IR against the HLO op kind it actually compiles to:
+    ppermute schedules → collective-permute, psum → all-reduce,
+    ps_gather → all-gather (a correct ps_gather step must NOT be
+    flagged as a mismatch)."""
+    from repro.core import schedule as schedule_mod
     from repro.core.reducers import wire_bytes
     from repro.launch import roofline as rl
 
     p, b = 4, 16384
-    rows = [{"bytes": b, "strategy": "ps_gather"}]
+
+    def sched(strategy):
+        return schedule_mod.synthetic([b], strategy, (p,), ("data",))
+
     # ps_gather compiles to an all-gather whose result is p·N per op;
     # the predicted recv-side wire bytes N(p-1) sit inside that charge
-    rep = rl.wire_check(rows, (p,), {"all-gather": p * b})
+    rep = rl.wire_check(sched("ps_gather"), {"all-gather": p * b})
     assert rep["consistent"], rep
     assert rep["kinds"]["all-gather"]["predicted"] == \
         wire_bytes("ps_gather", b, p)
     assert "collective-permute" not in rep["kinds"]
     # psum predicts all-reduce payload; permute strategies predict
     # collective-permute; absence of the charged kind flags mismatch
-    rep = rl.wire_check([{"bytes": b, "strategy": "psum"}], (p,),
-                        {"all-reduce": b})
+    rep = rl.wire_check(sched("psum"), {"all-reduce": b})
     assert rep["consistent"] and \
         rep["kinds"]["all-reduce"]["predicted"] == b
-    rep = rl.wire_check([{"bytes": b, "strategy": "rhd_rsa"}], (p,),
-                        {"all-gather": p * b})
+    rep = rl.wire_check(sched("rhd_rsa"), {"all-gather": p * b})
     assert not rep["consistent"], rep
+    # a composed two-level schedule splits its prediction per stage:
+    # ring RS/AG + an rhd mid-level are all permutes; a psum mid-level
+    # moves that stage's charge to the all-reduce ledger
+    two = schedule_mod.synthetic([b], "ring_rsa×psum", (2, 2),
+                                 ("pod", "data"))
+    rep = rl.wire_check(two, {"collective-permute": b,
+                              "all-reduce": b // 2})
+    assert rep["consistent"], rep
+    assert rep["kinds"]["all-reduce"]["predicted"] == b // 2
 
 
 def test_ps_design_reduces_per_variable():

@@ -135,10 +135,13 @@ fn = jax.jit(shard_map(lambda g: agg(g), mesh, in_specs=P("data"),
                        out_specs=P("data"), axis_names={"data"},
                        check_vma=False))
 txt = fn.lower(grads).compile().as_text()
-assert len({s for _, s in agg.last_schedule}) == 2, agg.last_schedule
-want = sum(wire_bytes(s, b, p) for b, s in agg.last_schedule)
+sched = agg.last_schedule
+assert len(sched.strategies()) == 2, sched.to_json()
+want = sum(b.wire_bytes for b in sched.buckets)
+assert want == sum(wire_bytes(b.strategy, b.n_bytes, p)
+                   for b in sched.buckets)
 got = H.analyze(txt).collective_bytes.get("collective-permute", 0)
-assert got == want, (got, want, agg.last_schedule)
+assert got == want, (got, want, sched.to_json())
 print("OK", got, want)
 """
     src = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -95,13 +95,18 @@ before_b, total_b = perm_vs_dots(texts["barrier"])
 assert before_b == 0, (before_b, total_b)
 assert total_b == total, (total_b, total)
 
-# 3. permute bytes unchanged and equal to the algorithmic wire bytes
+# 3. permute bytes unchanged and equal to the IR's per-stage wire
+#    bytes (which must agree with the reducers' algorithmic accounting)
 for mode in ("overlap", "post"):
-    want = sum(wire_bytes(s, b, p) for b, s in scheds[mode])
+    want = sum(b.wire_bytes for b in scheds[mode].buckets)
+    assert want == sum(wire_bytes(b.strategy, b.n_bytes, p)
+                       for b in scheds[mode].buckets)
     got = H.analyze(texts[mode]).collective_bytes.get(
         "collective-permute", 0)
     assert got == want, (mode, got, want)
-assert len(scheds["overlap"]) == len(scheds["post"]) == 4
+assert scheds["overlap"].n_buckets == scheds["post"].n_buckets == 4
+assert scheds["overlap"].placement == "in_backward"
+assert scheds["post"].placement == "post_backward"
 
 # 4. overlapping changes scheduling only: gradients are bit-exact
 for k in params:

@@ -58,6 +58,18 @@ def test_multidev_experiments_checks():
 
 
 @pytest.mark.timeout(900)
+def test_multidev_hierarchical_overlap_checks():
+    """Composed per-level schedules × overlap (ReduceSchedule IR,
+    DESIGN.md §3.8) on (d, pods) ∈ {(2,2), (2,3), (4,2)}: fixed
+    ring_rsa×rhd_rsa under overlap=True bit-exact vs post-backward and
+    psum; per-bucket flat+composed mix from an axes-aware tuning table
+    with both levels in the HLO, permute bytes == the IR's per-stage
+    wire bytes, and roofline.wire_check PASS."""
+    _run_checks("multidev_hierarchical_overlap_checks.py", 8,
+                "ALL HIERARCHICAL OVERLAP CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
 def test_multidev_overlap_checks():
     """overlap=True (in-backward per-bucket reductions) on
     p ∈ {3, 4, 6, 8}: bit-exact with the post-backward path and with

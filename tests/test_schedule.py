@@ -1,0 +1,344 @@
+"""ReduceSchedule IR unit wall (DESIGN.md §3.8): JSON round-trip,
+fingerprint stability, decomposition-tree byte/latency truth against
+the reducers/cost-model accounting, planner equivalence with the old
+resolution semantics on fixed/auto/overlap configs, plan-cache
+interning, and the last_plan staleness regression the IR subsumes."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import fusion, overlap, reducers
+from repro.core import schedule as S
+from repro.core import selector as sel
+from repro.core.aggregator import AggregatorConfig, GradientAggregator
+from repro.core.plan_cache import PlanCache
+
+
+def _grads(n=6, base=4096):
+    return {f"w{i}": jax.ShapeDtypeStruct((base * (i + 1),), jnp.float32)
+            for i in range(n)}
+
+
+def _agg(cache=None, **kw):
+    kw.setdefault("strategy", "rhd_rsa")
+    kw.setdefault("fusion_threshold_mb", 0.05)
+    # NB: `cache or PlanCache()` would be wrong — an EMPTY PlanCache is
+    # falsy (len == 0) and would be silently replaced by a fresh one
+    return GradientAggregator(
+        AggregatorConfig(**kw), ("data",),
+        cache=cache if cache is not None else PlanCache())
+
+
+# ---------------------------------------------------------------------------
+# Strategy naming
+# ---------------------------------------------------------------------------
+
+def test_strategy_names_flat_composed_alias():
+    assert S.split_strategy("rhd_rsa") == ("rhd_rsa",)
+    assert S.split_strategy("ring_rsa×rhd_rsa") == ("ring_rsa", "rhd_rsa")
+    # ASCII separator accepted on input
+    assert S.split_strategy("ring_rsaxpsum") == ("ring_rsa", "psum")
+    assert S.is_strategy("hierarchical")
+    assert not S.is_strategy("warp_drive")
+    assert not S.is_strategy("rhd_rsa×ring_rsa")      # inner must be ring
+    assert S.normalize_strategy("hierarchical", 1) == "ring_rsa"
+    assert S.normalize_strategy("hierarchical", 2) == "ring_rsa×rhd_rsa"
+    with pytest.raises(ValueError, match="2-axis"):
+        S.normalize_strategy("ring_rsa×rhd_rsa", 1)
+
+
+# ---------------------------------------------------------------------------
+# Decomposition trees: byte/latency truth
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1024, 1 << 20, 64 << 20])
+@pytest.mark.parametrize("pods,d", [(2, 2), (2, 3), (3, 4), (2, 16)])
+def test_decompose_matches_reducer_accounting(n, pods, d):
+    """Σ per-stage wire bytes == reducers.wire_bytes and Σ per-stage
+    latency == the closed-form cost model, for flat folds AND the
+    composed two-level family — the IR cannot drift from what runs."""
+    names = ("pod", "data")
+    for alg in ("rhd_rsa", "ring_rsa", "psum", "ps_gather"):
+        st = S.decompose(alg, n, names, (pods, d))
+        assert sum(s.wire_bytes for s in st) == \
+            reducers.wire_bytes(alg, n, (pods, d))
+        if alg != "ps_gather":
+            want = cm.flat_multiaxis_latency(alg, n, d=d, pods=pods)
+            assert sum(s.predicted_s for s in st) == pytest.approx(want)
+    hier = S.decompose("hierarchical", n, names, (pods, d))
+    assert sum(s.wire_bytes for s in hier) == \
+        reducers.wire_bytes("hierarchical", n, (pods, d))
+    assert sum(s.predicted_s for s in hier) == \
+        pytest.approx(cm.hierarchical_latency(n, d=d, pods=pods))
+    for outer in S.OUTER_ALGORITHMS:
+        comp = S.decompose(S.composed_name("ring_rsa", outer), n,
+                           names, (pods, d))
+        assert sum(s.predicted_s for s in comp) == \
+            pytest.approx(cm.composed_latency(outer, n, d=d, pods=pods))
+        # RS + AG carry the ring level bytes, the mid stage the outer's
+        ops = [s.op for s in comp]
+        assert ops == ["reduce_scatter", "allreduce", "all_gather"]
+        assert comp[1].axis == "pod" and comp[1].axis_size == pods
+        assert comp[1].n_bytes == n // d
+
+
+def test_decompose_single_axis_and_errors():
+    (st,) = S.decompose("rhd_rsa", 4096, ("data",), (8,))
+    assert st.op == "allreduce" and st.axis == "data"
+    assert st.wire_bytes == reducers.wire_bytes("rhd_rsa", 4096, 8)
+    # hierarchical degenerates to ring on one axis, like the reducer
+    (ring,) = S.decompose("hierarchical", 4096, ("data",), (8,))
+    assert ring.algorithm == "ring_rsa"
+    with pytest.raises(ValueError):
+        S.decompose("ring_rsa×rhd_rsa", 4096, ("data",), (8,))
+    with pytest.raises(ValueError):
+        S.decompose("rhd_rsa", 4096, ("a", "b"), (2,))
+
+
+def test_stage_hlo_kinds_and_bytes():
+    (rhd,) = S.decompose("rhd_rsa", 4096, ("data",), (4,))
+    assert rhd.hlo_kind == "collective-permute"
+    assert rhd.hlo_bytes == rhd.wire_bytes
+    (ps,) = S.decompose("psum", 4096, ("data",), (4,))
+    assert ps.hlo_kind == "all-reduce" and ps.hlo_bytes == 4096
+    (gather,) = S.decompose("ps_gather", 4096, ("data",), (4,))
+    assert gather.hlo_kind == "all-gather"
+    assert gather.hlo_bytes == reducers.wire_bytes("ps_gather", 4096, 4)
+
+
+def test_execute_stages_rejects_malformed_trees():
+    x = jnp.ones((8,), jnp.float32)
+    ag = S.Stage("all_gather", "ring_rsa", "data", 2, 8, 8, 0.0)
+    with pytest.raises(ValueError, match="matching"):
+        reducers.execute_stages(x, [ag])
+    bad = S.Stage("warp", "ring_rsa", "data", 2, 8, 8, 0.0)
+    with pytest.raises(ValueError, match="stage op"):
+        reducers.execute_stages(x, [bad])
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip + fingerprint stability
+# ---------------------------------------------------------------------------
+
+def test_ir_json_roundtrip_full():
+    sched = _agg(strategy="auto").resolve(_grads(), (8,))
+    rec = sched.to_json()
+    assert rec["schema"] == S.SCHEMA
+    json.dumps(rec)                       # JSON-clean
+    back = S.from_json(json.loads(json.dumps(rec)))
+    assert back.plan is None              # detached
+    assert back.to_json() == rec          # lossless (modulo the plan)
+    assert back.fingerprint() == sched.fingerprint()
+    assert back.algorithms() == sched.algorithms()
+    assert back.readiness_order() == sched.readiness_order()
+
+
+def test_ir_json_roundtrip_grouped():
+    sched = S.synthetic([1024] * 5 + [4096], "rhd_rsa", (8,), ("data",))
+    rec = sched.to_json(group=True)
+    assert rec["grouped"] and len(rec["buckets"]) == 2
+    assert rec["buckets"][0]["count"] == 5
+    back = S.from_json(rec)
+    assert back.n_buckets == 6
+    assert back.total_wire_bytes == sched.total_wire_bytes
+    # readiness ranks survive grouping: a deserialized schedule must
+    # replay the SAME overlap timeline as the recorded one (reverse
+    # plan order — not plan order)
+    assert back.readiness_order() == sched.readiness_order()
+    tl_a = overlap.simulate_schedule(sched, compute_s=0.01)
+    tl_b = overlap.simulate_schedule(back, compute_s=0.01)
+    assert tl_b.step_s == pytest.approx(tl_a.step_s)
+    assert [e.task.index for e in tl_b.events] == \
+        [e.task.index for e in tl_a.events]
+    # a grouped record embeds the DETACHED fingerprint (leaf layout is
+    # dropped by grouping), which the deserialized schedule reproduces
+    assert back.fingerprint() == rec["fingerprint"]
+
+
+def test_grouped_fingerprint_reproducible_for_attached_schedules():
+    """An ATTACHED schedule serialized grouped (what dryrun records)
+    must embed a fingerprint the record's consumer can re-derive."""
+    sched = _agg().resolve(_grads(), (8,))
+    rec = sched.to_json(group=True)
+    assert S.from_json(rec).fingerprint() == rec["fingerprint"]
+
+
+def test_fingerprint_stability_and_sensitivity():
+    grads = _grads()
+    a = _agg().resolve(grads, (8,))
+    b = _agg().resolve(grads, (8,))
+    assert a.fingerprint() == b.fingerprint()
+    # structural changes move the fingerprint ...
+    assert a.fingerprint() != _agg().resolve(grads, (4,)).fingerprint()
+    assert a.fingerprint() != \
+        _agg(strategy="ring_rsa").resolve(grads, (8,)).fingerprint()
+    assert a.fingerprint() != \
+        _agg(wire_dtype="bfloat16").resolve(grads, (8,)).fingerprint()
+    assert a.fingerprint() != \
+        _agg(overlap=True).resolve(grads, (8,)).fingerprint()
+    # ... predicted latencies do NOT (same schedule, new constants)
+    c = _agg(selector_link="dcn").resolve(grads, (8,))
+    assert c.predicted_s != pytest.approx(a.predicted_s)
+    assert c.fingerprint() == a.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# Planner equivalence with the pre-IR resolution
+# ---------------------------------------------------------------------------
+
+def test_planner_matches_fusion_layout_fixed():
+    """Fixed-strategy planning: bucket layout identical to a direct
+    fusion.build_plan, one uniform strategy, stage accounting equal to
+    the reducers' wire bytes."""
+    grads = _grads()
+    agg = _agg(strategy="rhd_rsa")
+    sched = agg.resolve(grads, (8,))
+    ref = fusion.build_plan(grads, agg.config.threshold_bytes)
+    assert tuple(b.leaf_indices for b in sched.buckets) == \
+        tuple(b.leaf_indices for b in ref.buckets)
+    assert sched.strategies() == ("rhd_rsa",)
+    for b in sched.buckets:
+        assert b.wire_bytes == reducers.wire_bytes("rhd_rsa",
+                                                   b.n_bytes, 8)
+        assert b.predicted_s == pytest.approx(
+            cm.allreduce_latency("rhd_rsa", b.n_bytes, 8))
+
+
+def test_planner_matches_selector_auto():
+    """Auto planning: per-bucket strategy == the selector's argmin at
+    the bucket's wire bytes; switch points align the fusion layout the
+    same way the old _plan_context did."""
+    grads = _grads(8, 16384)
+    agg = _agg(strategy="auto", fusion_threshold_mb=0.5)
+    sched = agg.resolve(grads, (6,))
+    selector = agg.selector
+    assert sched.switch_points == selector.switch_points(
+        (6,), hi=max(agg.config.threshold_bytes, 257))
+    ref = fusion.build_plan(grads, agg.config.threshold_bytes,
+                            switch_points=sched.switch_points,
+                            switch_itemsize=4)
+    assert tuple(b.leaf_indices for b in sched.buckets) == \
+        tuple(b.leaf_indices for b in ref.buckets)
+    for b in sched.buckets:
+        choice = selector.choose(b.n_bytes, (6,))
+        assert b.strategy == choice.strategy
+        assert b.predicted_s == pytest.approx(choice.predicted_s)
+
+
+def test_planner_overlap_readiness_ranks():
+    grads = _grads()
+    sched = _agg(overlap=True).resolve(grads, (8,))
+    assert sched.placement == "in_backward"
+    order = overlap.readiness_order(sched.plan)
+    assert sched.readiness_order() == order
+    # rank 0 is the bucket holding the HIGHEST leaf indices (backward
+    # produces the last layer's grads first)
+    first = sched.buckets[sched.readiness_order()[0]]
+    assert max(first.leaf_indices) == len(sched.plan.leaves) - 1
+
+
+def test_composed_fixed_strategy_resolves_per_level_stages():
+    agg = GradientAggregator(
+        AggregatorConfig(strategy="ring_rsa×psum",
+                         fusion_threshold_mb=0.05),
+        ("pod", "data"), cache=PlanCache())
+    sched = agg.resolve(_grads(), (2, 3))
+    assert sched.strategies() == ("ring_rsa×psum",)
+    for b in sched.buckets:
+        assert [s.op for s in b.stages] == \
+            ["reduce_scatter", "allreduce", "all_gather"]
+        assert b.render() == "ring@data×psum@pod"
+    # the report-facing render names both levels with their axes
+    assert "ring@data×psum@pod" in sched.render()
+
+
+# ---------------------------------------------------------------------------
+# Plan cache interning on the request fingerprint
+# ---------------------------------------------------------------------------
+
+def test_cache_interns_resolved_schedules():
+    cache = PlanCache()
+    grads = _grads()
+    agg = _agg(cache=cache)
+    s1 = agg.resolve(grads, (8,))
+    s2 = agg.resolve(grads, (8,))
+    assert s1 is s2                        # interned, not just equal
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    # a different placement/wire dtype/strategy must re-resolve
+    _agg(cache=cache, overlap=True).resolve(grads, (8,))
+    _agg(cache=cache, wire_dtype="bfloat16").resolve(grads, (8,))
+    _agg(cache=cache, strategy="ring_rsa").resolve(grads, (8,))
+    assert cache.stats.misses == 4
+    assert len(cache) == 4
+
+
+def test_cache_shared_across_equivalent_aggregators():
+    cache = PlanCache()
+    grads = _grads()
+    assert _agg(cache=cache).resolve(grads, (8,)) is \
+        _agg(cache=cache).resolve(grads, (8,))
+
+
+# ---------------------------------------------------------------------------
+# The last_plan staleness bug (satellite regression pin)
+# ---------------------------------------------------------------------------
+
+def test_preview_then_real_call_never_leaves_stale_plan():
+    """At HEAD~ the real __call__ path never updated
+    ``GradientAggregator.last_plan``, so a ``schedule()`` preview on
+    one tree followed by a real call on a DIFFERENT tree fed the
+    overlap timeline a mismatched plan (rows from the real call, plan
+    from the preview — simulate_plan then either raised or silently
+    mispredicted).  With the IR there is one record: whatever path ran
+    last, ``last_schedule`` carries ITS plan and ITS buckets."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core.compat import shard_map
+
+    agg = _agg(fusion_threshold_mb=4e-7)   # threshold 0: 1 leaf/bucket
+    preview_tree = {"tiny": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    agg.resolve(preview_tree, (1,))
+    assert agg.last_schedule.n_buckets == 1
+
+    real_tree = {f"w{i}": jnp.ones((16,), jnp.float32) for i in range(3)}
+    mesh = Mesh(jax.devices()[:1], ("data",))
+    fn = jax.jit(shard_map(lambda g: agg(g), mesh, in_specs=P("data"),
+                           out_specs=P("data"), axis_names={"data"},
+                           check_vma=False))
+    fn(real_tree)
+
+    sched = agg.last_schedule
+    assert sched.n_buckets == 3, "last_schedule stale after a real call"
+    assert sched.plan is not None and len(sched.plan.leaves) == 3
+    # and the timeline consumes the SAME object — no mismatched pair
+    tl = overlap.simulate_schedule(sched, compute_s=0.01)
+    assert len(tl.events) == 3
+
+
+# ---------------------------------------------------------------------------
+# Synthetic schedules (experiment matrix path)
+# ---------------------------------------------------------------------------
+
+def test_synthetic_schedule_matches_model_tasks_readiness():
+    sizes = [1 << 20] * 4
+    sched = S.synthetic(sizes, "ring_rsa", (8,), ("data",))
+    assert sched.plan is None and sched.n_buckets == 4
+    # reverse plan order: the LAST bucket is ready first
+    assert sched.readiness_order() == (3, 2, 1, 0)
+    tasks = overlap.schedule_tasks(sched, backward_s=1.0)
+    ref = overlap.model_tasks(float(sum(sizes)), 4, 0, 1.0,
+                              latency_fn=lambda b: 0.001)
+    assert sorted(t.ready_s for t in tasks) == \
+        pytest.approx(sorted(t.ready_s for t in ref))
+
+
+def test_synthetic_latency_fn_overrides_bucket_not_stages():
+    sched = S.synthetic([4096], "rhd_rsa", (4,), ("data",),
+                        latency_fn=lambda b: 42.0)
+    (b,) = sched.buckets
+    assert b.predicted_s == 42.0
+    assert b.stages[0].predicted_s == pytest.approx(
+        cm.allreduce_latency("rhd_rsa", 4096, 4))

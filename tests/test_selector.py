@@ -82,13 +82,27 @@ def test_switch_points_bracket_the_crossover():
     assert sel.switch_points((6,), hi=16 << 20) is pts
 
 
-def test_two_axis_selection_small_flat_large_hierarchical():
+def test_two_axis_selection_small_flat_large_composed():
     """On the 2-axis (pod, data) mesh: tiny messages avoid the
-    hierarchical schedule's extra alpha terms, huge messages take it to
-    keep N/d (not N) off the cross-pod links."""
+    two-level schedule's extra alpha terms, huge messages take a
+    composed schedule to keep N/d (not N) off the cross-pod links.
+    The composed candidates are PER-LEVEL choices (schedule IR), so
+    the winner names both levels."""
+    from repro.core import schedule as schedule_mod
+
     sel = S.AnalyticSelector()
-    assert sel.select(8, (2, 16)) != "hierarchical"
-    assert sel.select(64 << 20, (2, 16)) == "hierarchical"
+    small = sel.select(8, (2, 16))
+    assert len(schedule_mod.split_strategy(small)) == 1, small
+    big = sel.select(64 << 20, (2, 16))
+    assert len(schedule_mod.split_strategy(big)) == 2, big
+    # the classic hierarchical composition is the rhd-outer point of
+    # the composed family and must cost exactly the same
+    assert S.predict_latency("hierarchical", 64 << 20, (2, 16)) == \
+        pytest.approx(S.predict_latency("ring_rsa×rhd_rsa", 64 << 20,
+                                        (2, 16)))
+    # every composed candidate is in the pool
+    pool = sel.candidates_for((2, 16))
+    assert set(S.COMPOSED_CANDIDATES) <= set(pool)
 
 
 def test_fusion_aligns_bucket_boundaries_to_switch_points():

@@ -96,13 +96,16 @@ agg32, b32, n32, comp32, out32 = run("")
 aggbf, bbf, nbf, compbf, outbf = run("bfloat16")
 
 assert b32 == 2 * bbf, (b32, bbf)
-assert b32 == sum(wire_bytes(s, b, p) for b, s in agg32.last_schedule), \
-    (b32, agg32.last_schedule)
-assert bbf == sum(wire_bytes(s, b, p) for b, s in aggbf.last_schedule), \
-    (bbf, aggbf.last_schedule)
-# the schedules' wire bytes themselves halve (2-byte vs 4-byte wire)
-assert [b for b, _ in aggbf.last_schedule] == \
-    [b // 2 for b, _ in agg32.last_schedule]
+assert b32 == sum(b.wire_bytes for b in agg32.last_schedule.buckets), \
+    (b32, agg32.last_schedule.to_json())
+assert bbf == sum(b.wire_bytes for b in aggbf.last_schedule.buckets), \
+    (bbf, aggbf.last_schedule.to_json())
+# the schedules' wire bytes themselves halve (2-byte vs 4-byte wire),
+# and the IR records the wire dtype it was resolved under
+assert [b.n_bytes for b in aggbf.last_schedule.buckets] == \
+    [b.n_bytes // 2 for b in agg32.last_schedule.buckets]
+assert aggbf.last_schedule.wire_dtype == "bfloat16"
+assert agg32.last_schedule.wire_dtype == "float32"
 # compiled schedule shape is identical (same permute count, no
 # all-reduce fallback) even where XLA:CPU re-widens the buffers
 assert compbf.collective_counts.get("collective-permute") == \
