@@ -1,0 +1,174 @@
+"""AST lint: direct jax version-portability APIs stay in core/compat.
+
+PR 1 exists because ``jax.experimental.shard_map`` / ``maps`` / ``pjit``
+and the manual-axis collectives moved or changed semantics across jax
+releases; ``core/compat.py`` is the single shim everything else routes
+through.  This lint bans re-introducing direct uses anywhere else in
+the source tree — the exact class of portability bug the compat layer
+was built to end:
+
+``CL001``  import of a banned module (``jax.experimental.shard_map``,
+           ``jax.experimental.maps``, ``jax.experimental.pjit``).
+``CL002``  use (attribute access or from-import) of a banned name
+           (``jax.shard_map``, manual-axis ``jax.lax`` collectives:
+           ``ppermute`` / ``psum`` / ``pmean`` / ``all_gather`` /
+           ``all_to_all`` / ``axis_index`` / ``axis_size``).
+
+Scope: ``src/repro`` (minus ``core/compat.py`` itself), ``benchmarks``,
+``examples``.  Tests are exempt — they intentionally poke jax internals
+(e.g. a raw ``lax.psum`` as the vendor reference the reducers are
+checked against).  ``jax.experimental.pallas`` (kernels/) is NOT
+banned: it is an accelerator API, not a sharding-portability surface.
+
+Suppression: append ``# compat-lint: allow`` to the offending line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from . import ERROR, Diagnostic
+
+RULES = {
+    "CL001": "no direct import of jax.experimental.shard_map/maps/pjit",
+    "CL002": "no direct use of jax.shard_map / manual-axis jax.lax "
+             "collectives outside core/compat.py",
+}
+
+BANNED_MODULES = ("jax.experimental.shard_map", "jax.experimental.maps",
+                  "jax.experimental.pjit")
+BANNED_NAMES = frozenset({
+    "jax.shard_map",
+    "jax.lax.ppermute", "jax.lax.psum", "jax.lax.pmean",
+    "jax.lax.all_gather", "jax.lax.all_to_all",
+    "jax.lax.axis_index", "jax.lax.axis_size",
+})
+ALLOW_MARK = "compat-lint: allow"
+
+SCOPE_DIRS = (os.path.join("src", "repro"), "benchmarks", "examples")
+EXEMPT_SUFFIXES = (os.path.join("core", "compat.py"),)
+
+
+def _banned_module(dotted: str) -> bool:
+    return any(dotted == m or dotted.startswith(m + ".")
+               for m in BANNED_MODULES)
+
+
+def _dotted(node) -> str | None:
+    """`a.b.c` attribute/name chain as a dotted string, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, src_lines: list[str]):
+        self.path = path
+        self.lines = src_lines
+        self.aliases: dict[str, str] = {}   # local name -> dotted origin
+        self.diags: list[Diagnostic] = []
+
+    def _allowed(self, lineno: int) -> bool:
+        line = self.lines[lineno - 1] if lineno <= len(self.lines) else ""
+        return ALLOW_MARK in line
+
+    def _flag(self, rule: str, lineno: int, msg: str):
+        if not self._allowed(lineno):
+            self.diags.append(Diagnostic(
+                rule, ERROR, f"{self.path}:{lineno}", msg))
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            if _banned_module(alias.name):
+                self._flag("CL001", node.lineno,
+                           f"import {alias.name} — route through "
+                           f"repro.core.compat")
+            # `import jax.lax` binds `jax` (or the asname to the full
+            # dotted path); record it so attribute uses resolve
+            bound = alias.asname or alias.name.split(".")[0]
+            self.aliases[bound] = alias.name if alias.asname \
+                else alias.name.split(".")[0]
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        if node.level == 0:          # absolute imports only
+            if _banned_module(mod):
+                self._flag("CL001", node.lineno,
+                           f"from {mod} import ... — route through "
+                           f"repro.core.compat")
+            for alias in node.names:
+                full = f"{mod}.{alias.name}" if mod else alias.name
+                if _banned_module(full):
+                    self._flag("CL001", node.lineno,
+                               f"from {mod} import {alias.name} — route "
+                               f"through repro.core.compat")
+                elif full in BANNED_NAMES:
+                    self._flag("CL002", node.lineno,
+                               f"from {mod} import {alias.name} — use "
+                               f"repro.core.compat.{alias.name}")
+                self.aliases[alias.asname or alias.name] = full
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        dotted = _dotted(node)
+        if dotted:
+            head, _, rest = dotted.partition(".")
+            origin = self.aliases.get(head, head)
+            full = f"{origin}.{rest}" if rest else origin
+            if full in BANNED_NAMES:
+                self._flag("CL002", node.lineno,
+                           f"{dotted} resolves to {full} — use "
+                           f"repro.core.compat."
+                           f"{full.rsplit('.', 1)[1]}")
+            elif _banned_module(full):
+                self._flag("CL001", node.lineno,
+                           f"{dotted} resolves to {full} — route "
+                           f"through repro.core.compat")
+        self.generic_visit(node)
+
+
+def lint_file(path: str, rel: str | None = None) -> list[Diagnostic]:
+    """Lint one Python file; ``rel`` overrides the location prefix."""
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Diagnostic("CL000", ERROR, f"{rel or path}:{e.lineno}",
+                           f"syntax error: {e.msg}")]
+    v = _Visitor(rel or path, src.splitlines())
+    v.visit(tree)
+    return v.diags
+
+
+def iter_source_files(root: str):
+    """Yield (abs_path, rel_path) of every in-scope .py file."""
+    for scope in SCOPE_DIRS:
+        base = os.path.join(root, scope)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d != "__pycache__" and not d.startswith(".")]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                abs_path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(abs_path, root)
+                if any(rel.endswith(sfx) for sfx in EXEMPT_SUFFIXES):
+                    continue
+                yield abs_path, rel
+
+
+def lint_tree(root: str = ".") -> list[Diagnostic]:
+    """Lint every in-scope source file under ``root``."""
+    out: list[Diagnostic] = []
+    for abs_path, rel in iter_source_files(root):
+        out.extend(lint_file(abs_path, rel=rel))
+    return out

@@ -1,0 +1,405 @@
+"""Rule engine over the ReduceSchedule IR — static soundness proofs.
+
+Every rule re-derives an invariant the rest of the stack *relies on*
+but only ever checked by executing on small meshes:
+
+``SV000``  well-formedness: unique positive axes, known placement,
+           parseable wire dtype, parseable strategy names, unique
+           bucket indices.
+``SV001``  byte conservation: each bucket's stage list must match a
+           fresh :func:`repro.core.schedule.decompose` of its strategy
+           structurally (op/algorithm/axis/sizes/bytes), and the bucket
+           total must equal the ``reducers.wire_bytes`` /
+           ``hierarchical_wire_bytes`` closed forms.
+``SV002``  stage legality: reduce_scatter/all_gather pair like
+           parentheses per axis (exactly the stack discipline
+           ``reducers.execute_stages`` enforces at run time) and the
+           mesh axes are each covered exactly once per level.
+``SV003``  leaf partition: bucket leaf indices tile the gradient tree
+           with no overlap and no gap.
+``SV004``  readiness: ranks are a permutation, and monotone in
+           reverse-layer order (descending min leaf index — the
+           wait-free-backprop issue order of ``overlap
+           .readiness_order``).
+``SV005``  no fused bucket straddles a selector crossover point
+           (replays ``fusion.build_plan``'s ``_crosses`` predicate
+           post hoc on the committed layout).
+``SV006``  wire-dtype tolerance: a reduced-precision wire dtype must
+           carry a derivable summation-error bound
+           (:func:`wire_tolerance` — the ``(log2 p + 1)·eps`` model
+           tests/test_wire_dtype.py validates empirically).
+``SV007``  fingerprint latency-insensitivity: perturbing every
+           predicted latency must not move ``fingerprint()`` (re-plan
+           determinism — cost-model constant changes may never fault
+           the plan cache or the trajectory diff).
+
+All rules run on detached schedules (``plan=None``); the rules that
+need the leaf layout (SV003 leaf-gap, SV004 monotonicity, SV005)
+degrade to the checks the available metadata supports.  This is what
+lets a 512-device three-axis schedule — which the legacy-jax executor
+refuses outright — be verified without running it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.core import reducers
+from repro.core import schedule as schedule_mod
+
+from . import ERROR, Diagnostic
+
+# rule_id -> one-line contract (the registry DESIGN.md §3.9 documents)
+RULES = {
+    "SV000": "schedule is well-formed (axes, placement, dtype, names)",
+    "SV001": "stage wire bytes equal the reducers closed forms",
+    "SV002": "RS/AG stages pair per axis; axes covered once per level",
+    "SV003": "bucket leaf indices partition the gradient tree",
+    "SV004": "readiness ranks are monotone in reverse-layer order",
+    "SV005": "no fused bucket straddles a selector crossover point",
+    "SV006": "reduced-precision wire dtype has a derivable tolerance",
+    "SV007": "fingerprint is insensitive to predicted latencies",
+}
+
+# Unit roundoff of the dtypes we allow on the wire: the summation-error
+# model |err| <= (log2 p + 1)·eps·|x| (sequential-halving depth of a
+# p-way tree reduction) is validated by tests/test_wire_dtype.py for
+# bf16; dtypes outside this table have no derivable bound and SV006
+# refuses them.
+WIRE_EPS = {
+    "bfloat16": 2.0 ** -8,
+    "float16": 2.0 ** -11,
+    "float32": 2.0 ** -24,
+    "float64": 2.0 ** -53,
+}
+
+
+def wire_tolerance(sched) -> float | None:
+    """Relative summation-error bound of one reduction over the
+    schedule's full device product, or None when the wire dtype has no
+    entry in :data:`WIRE_EPS` (no derivable bound)."""
+    eps = WIRE_EPS.get(str(sched.wire_dtype))
+    if eps is None:
+        return None
+    p = 1
+    for s in sched.axis_sizes:
+        p *= int(s)
+    return (math.log2(max(p, 1)) + 1.0) * eps
+
+
+# ---------------------------------------------------------------------------
+# closed forms (SV001)
+# ---------------------------------------------------------------------------
+
+def closed_form_wire_bytes(strategy: str, n_bytes: int,
+                           axis_sizes: tuple[int, ...]) -> int:
+    """Total per-device wire bytes the reducers charge for one
+    allreduce of ``n_bytes`` — the independent arithmetic SV001 holds
+    every bucket's stage sum against."""
+    parts = schedule_mod.split_strategy(strategy)
+    if len(parts) == 1:
+        return reducers.wire_bytes(parts[0], n_bytes, axis_sizes)
+    inner, outer = parts
+    pods, d = axis_sizes
+    if (inner, outer) == ("ring_rsa", "rhd_rsa"):
+        levels = reducers.hierarchical_wire_bytes(n_bytes, d=d, pods=pods)
+        return levels["intra"] + levels["inter"]
+    intra = 0 if d == 1 else 2 * int(n_bytes * (d - 1) / d)
+    return intra + reducers.wire_bytes(outer, n_bytes // d, pods)
+
+
+# ---------------------------------------------------------------------------
+# per-rule checkers
+# ---------------------------------------------------------------------------
+
+def _rule_sv000(sched, out):
+    ok = True
+
+    def err(loc, msg):
+        nonlocal ok
+        ok = False
+        out.append(Diagnostic("SV000", ERROR, loc, msg))
+
+    names, sizes = sched.axis_names, sched.axis_sizes
+    if len(names) != len(sizes) or not names:
+        err("", f"axis names {names} / sizes {sizes} mismatch")
+    if len(set(names)) != len(names):
+        err("", f"duplicate mesh axis names {names}")
+    for ax, s in zip(names, sizes):
+        if int(s) < 1:
+            err("", f"axis {ax!r} has non-positive size {s}")
+    if sched.placement not in schedule_mod.PLACEMENTS:
+        err("", f"placement {sched.placement!r} not in "
+                f"{schedule_mod.PLACEMENTS}")
+    try:
+        jnp.dtype(sched.wire_dtype)
+    except TypeError:
+        err("", f"unparseable wire dtype {sched.wire_dtype!r}")
+    seen_idx = set()
+    for b in sched.buckets:
+        if b.index in seen_idx:
+            err(b.path, f"duplicate bucket index {b.index}")
+        seen_idx.add(b.index)
+        try:
+            parts = schedule_mod.split_strategy(b.strategy)
+            if len(parts) == 2 and len(names) != 2:
+                err(b.path, f"composed strategy {b.strategy!r} on a "
+                            f"{len(names)}-axis mesh")
+        except ValueError as e:
+            err(b.path, str(e))
+        if b.n_bytes < 0 or b.size < 0:
+            err(b.path, f"negative size/bytes ({b.size}/{b.n_bytes})")
+    return ok
+
+
+def _decomposable(sched, bucket) -> bool:
+    """Can decompose() resolve this bucket on this mesh?  (SV000 has
+    already reported the failure; byte rules skip such buckets.)"""
+    try:
+        parts = schedule_mod.split_strategy(bucket.strategy)
+    except ValueError:
+        return False
+    return not (len(parts) == 2 and len(sched.axis_names) != 2)
+
+
+_STAGE_FIELDS = ("op", "algorithm", "axis", "axis_size", "n_bytes",
+                 "wire_bytes")
+
+
+def _rule_sv001(sched, out):
+    for b in sched.buckets:
+        if not _decomposable(sched, b):
+            continue
+        fresh = schedule_mod.decompose(b.strategy, b.n_bytes,
+                                       sched.axis_names, sched.axis_sizes)
+        if len(fresh) != len(b.stages):
+            out.append(Diagnostic(
+                "SV001", ERROR, b.path,
+                f"strategy {b.strategy!r} decomposes into {len(fresh)} "
+                f"stage(s) on mesh {sched.axis_sizes}, schedule carries "
+                f"{len(b.stages)}"))
+            continue
+        for j, (st, want) in enumerate(zip(b.stages, fresh)):
+            for f in _STAGE_FIELDS:
+                got_v, want_v = getattr(st, f), getattr(want, f)
+                if got_v != want_v:
+                    out.append(Diagnostic(
+                        "SV001", ERROR, b.stage_path(j),
+                        f"stage {f}={got_v!r} but "
+                        f"{b.strategy!r}@{b.n_bytes}B over "
+                        f"{sched.axis_sizes} requires {want_v!r}"))
+        total = sum(st.wire_bytes for st in b.stages)
+        want_total = closed_form_wire_bytes(b.strategy, b.n_bytes,
+                                            sched.axis_sizes)
+        if total != want_total:
+            out.append(Diagnostic(
+                "SV001", ERROR, b.path,
+                f"bucket wire bytes {total} != closed form "
+                f"{want_total} ({b.strategy!r}, {b.n_bytes}B, "
+                f"mesh {sched.axis_sizes})"))
+
+
+def _rule_sv002(sched, out):
+    mesh = dict(zip(sched.axis_names, sched.axis_sizes))
+    for b in sched.buckets:
+        stack: list[str] = []
+        covered: dict[str, int] = {ax: 0 for ax in sched.axis_names}
+        broken = False
+        for j, st in enumerate(b.stages):
+            loc = b.stage_path(j)
+            if st.axis not in mesh:
+                out.append(Diagnostic(
+                    "SV002", ERROR, loc,
+                    f"stage axis {st.axis!r} is not a mesh axis "
+                    f"{sched.axis_names}"))
+                broken = True
+                continue
+            if st.axis_size != mesh[st.axis]:
+                out.append(Diagnostic(
+                    "SV002", ERROR, loc,
+                    f"stage axis_size {st.axis_size} != mesh size "
+                    f"{mesh[st.axis]} of axis {st.axis!r}"))
+            if st.op == "reduce_scatter":
+                stack.append(st.axis)
+                covered[st.axis] += 1
+            elif st.op == "all_gather":
+                if not stack or stack[-1] != st.axis:
+                    out.append(Diagnostic(
+                        "SV002", ERROR, loc,
+                        f"all_gather@{st.axis} without a matching open "
+                        f"reduce_scatter (pending {stack})"))
+                    broken = True
+                else:
+                    stack.pop()
+            elif st.op == "allreduce":
+                covered[st.axis] += 1
+            else:
+                out.append(Diagnostic(
+                    "SV002", ERROR, loc, f"unknown stage op {st.op!r}"))
+                broken = True
+        if stack:
+            out.append(Diagnostic(
+                "SV002", ERROR, b.path,
+                f"unterminated reduce_scatter stage(s) on axes {stack}"))
+            broken = True
+        if broken or not b.stages:
+            continue
+        for ax, n in covered.items():
+            if n != 1 and not (mesh[ax] == 1 and n == 0):
+                out.append(Diagnostic(
+                    "SV002", ERROR, b.path,
+                    f"mesh axis {ax!r} (size {mesh[ax]}) reduced "
+                    f"{n} time(s); must be exactly once"))
+
+
+def _rule_sv003(sched, out):
+    indexed = [b for b in sched.buckets if b.leaf_indices]
+    if not indexed:
+        return                       # fully detached: no layout to tile
+    seen: dict[int, str] = {}
+    for b in indexed:
+        for i in b.leaf_indices:
+            if i in seen:
+                out.append(Diagnostic(
+                    "SV003", ERROR, b.path,
+                    f"leaf {i} already owned by {seen[i]} (overlap)"))
+            seen[i] = b.path
+    n_leaves = len(sched.plan.leaves) if sched.plan is not None \
+        else max(seen) + 1
+    missing = sorted(set(range(n_leaves)) - set(seen))
+    if missing:
+        head = ", ".join(str(i) for i in missing[:8])
+        out.append(Diagnostic(
+            "SV003", ERROR, "",
+            f"{len(missing)} of {n_leaves} gradient leaves are in no "
+            f"bucket (gap at {head}{'…' if len(missing) > 8 else ''})"))
+    extra = sorted(i for i in seen if i >= n_leaves)
+    if extra:
+        out.append(Diagnostic(
+            "SV003", ERROR, "",
+            f"leaf indices {extra[:8]} exceed the gradient tree "
+            f"({n_leaves} leaves)"))
+
+
+def _rule_sv004(sched, out):
+    n = len(sched.buckets)
+    ranks = sorted(b.readiness_rank for b in sched.buckets)
+    if ranks != list(range(n)):
+        out.append(Diagnostic(
+            "SV004", ERROR, "",
+            f"readiness ranks {ranks} are not a permutation of "
+            f"0..{n - 1}"))
+        return
+    if not all(b.leaf_indices for b in sched.buckets):
+        return                       # detached: no layout to order by
+    by_rank = sorted(sched.buckets, key=lambda b: b.readiness_rank)
+    prev = None
+    for b in by_rank:
+        lo = min(b.leaf_indices)
+        if prev is not None and lo >= prev[0]:
+            out.append(Diagnostic(
+                "SV004", ERROR, b.path,
+                f"rank {b.readiness_rank} has min leaf {lo} >= "
+                f"{prev[0]} of rank-{prev[1].readiness_rank} "
+                f"{prev[1].path}: issue order is not reverse-layer "
+                f"(backward produces high-index leaves' grads first)"))
+        prev = (lo, b)
+
+
+def _rule_sv005(sched, out):
+    if sched.plan is None or not sched.switch_points:
+        return
+    itemsize = jnp.dtype(sched.wire_dtype).itemsize
+    leaves = sched.plan.leaves
+    for b in sched.buckets:
+        if len(b.leaf_indices) < 2:
+            continue                 # single leaves may span freely
+        acc = 0
+        for i in b.leaf_indices:
+            nb = leaves[i].size * itemsize
+            if acc:                  # first leaf opens the bucket
+                for s in sched.switch_points:
+                    if acc < s < acc + nb:
+                        out.append(Diagnostic(
+                            "SV005", ERROR, b.path,
+                            f"fused bucket grows past the selector "
+                            f"crossover at {s}B while appending leaf "
+                            f"{i} ({acc}B -> {acc + nb}B): the bucket "
+                            f"spans two algorithm regimes"))
+            acc += nb
+
+
+def _rule_sv006(sched, out):
+    if not sched.buckets:
+        return
+    if wire_tolerance(sched) is None:
+        out.append(Diagnostic(
+            "SV006", ERROR, "",
+            f"wire dtype {sched.wire_dtype!r} has no derivable "
+            f"summation-tolerance bound (WIRE_EPS covers "
+            f"{sorted(WIRE_EPS)})"))
+
+
+def _perturb_latencies(sched):
+    """The same schedule with every predicted latency shifted — what
+    a cost-model constant bump does to a re-plan."""
+    buckets = tuple(
+        dataclasses.replace(
+            b, predicted_s=b.predicted_s + 1.0,
+            stages=tuple(dataclasses.replace(st,
+                                             predicted_s=st.predicted_s
+                                             + 1.0)
+                         for st in b.stages))
+        for b in sched.buckets)
+    return dataclasses.replace(sched, buckets=buckets)
+
+
+def _rule_sv007(sched, out):
+    shifted = _perturb_latencies(sched)
+    for detached in (False, True):
+        if sched.fingerprint(detached=detached) \
+                != shifted.fingerprint(detached=detached):
+            out.append(Diagnostic(
+                "SV007", ERROR, "",
+                f"fingerprint(detached={detached}) moves when predicted "
+                f"latencies change: re-planning under updated cost-model "
+                f"constants would fault the plan cache / trajectory "
+                f"diff"))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def verify_schedule(sched, context: str = "") -> list[Diagnostic]:
+    """Run every SV rule over ``sched``; returns all findings (empty =
+    the schedule is statically sound)."""
+    out: list[Diagnostic] = []
+    _rule_sv000(sched, out)
+    # byte/stage rules assume parseable strategies; SV000 already
+    # reported unparseable ones and _decomposable skips those buckets
+    _rule_sv001(sched, out)
+    _rule_sv002(sched, out)
+    _rule_sv003(sched, out)
+    _rule_sv004(sched, out)
+    _rule_sv005(sched, out)
+    _rule_sv006(sched, out)
+    _rule_sv007(sched, out)
+    if context:
+        out = [dataclasses.replace(d, context=context) for d in out]
+    return out
+
+
+def verify_summary(sched, context: str = "") -> dict:
+    """verify + the record shape dryrun embeds (repro/analysis/v1)."""
+    from . import summarize
+    diags = verify_schedule(sched, context=context)
+    return summarize(diags, extra={
+        "fingerprint": sched.fingerprint(),
+        "n_buckets": sched.n_buckets,
+        "decomposition": sched.render(),
+        "axis_sizes": list(sched.axis_sizes),
+        "wire_tolerance": wire_tolerance(sched),
+    })

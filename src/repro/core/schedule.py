@@ -203,6 +203,16 @@ class BucketSchedule:
     def wire_bytes(self) -> int:
         return sum(st.wire_bytes for st in self.stages)
 
+    @property
+    def path(self) -> str:
+        """Diagnostic location of this bucket inside its schedule
+        (repro.analysis uses these paths to anchor rule findings)."""
+        return f"bucket[{self.index}]"
+
+    def stage_path(self, j: int) -> str:
+        """Diagnostic location of stage ``j`` of this bucket."""
+        return f"{self.path}.stage[{j}]"
+
     def render(self) -> str:
         """Human-readable decomposition, e.g. ``ring@data×rhd@pod`` for
         a composed bucket or ``rhd@data`` for a flat one (RS/AG pairs
@@ -279,6 +289,14 @@ class ReduceSchedule:
         """Bucket indices in issue order (readiness rank ascending)."""
         return tuple(sorted(range(len(self.buckets)),
                             key=lambda i: self.buckets[i].readiness_rank))
+
+    def iter_stages(self):
+        """Yield ``(path, bucket, stage)`` over every stage of every
+        bucket — the location-annotated walk the static verifier
+        (repro.analysis.verify) anchors its diagnostics on."""
+        for b in self.buckets:
+            for j, st in enumerate(b.stages):
+                yield b.stage_path(j), b, st
 
     def render(self) -> str:
         """Distinct per-bucket decompositions with counts, e.g.

@@ -228,6 +228,54 @@ def throughput(model: str, p: int, design: str, prof: HwProfile,
                                          batch_per_dev)
 
 
+# -- static-verification surface (repro.analysis) ---------------------------
+
+# Beyond-grid meshes the static verifier covers: worker counts past the
+# executable ceiling, composed two-level (pods × data) meshes including
+# the 512-device production shape, and the three-axis multi-pod fold.
+ANALYSIS_WORKERS = WORKERS + (512,)
+ANALYSIS_COMPOSED_MESHES = ((2, 16), (4, 8), (2, 256), (3, 8))
+ANALYSIS_FLAT3_MESH = (2, 16, 16)
+
+
+def analysis_cells(designs: Sequence[str] = DESIGNS,
+                   models: Sequence[str] = MODELS,
+                   workers: Sequence[int] = ANALYSIS_WORKERS,
+                   profile: str = "paper"):
+    """Yield ``(label, ReduceSchedule)`` for every schedule the repo
+    registers — the verification surface of ``python -m repro.analysis
+    --schedules``.  Covers the full characterization grid (every design
+    × model × p, one resolved IR per cell via :func:`point_schedule`),
+    plus the meshes only the *static* path can reach: 512 workers,
+    composed two-level ``ring_rsa×<outer>`` schedules on multi-pod
+    meshes (including 2×256 = the 512-chip production mesh), and a
+    three-axis flat fold.  Every cell must verify clean
+    (tests/test_analysis.py pins this)."""
+    prof = PROFILES[profile]
+    for d in designs:
+        for m in models:
+            for p in workers:
+                yield (f"{d}/{m}/p{p}",
+                       point_schedule(m, p, d, prof))
+    info = PAPER_MODELS["resnet50"]
+    sizes = ov.fused_bucket_bytes(info["params"] * 4,
+                                  MODEL_VARIABLES["resnet50"],
+                                  FUSION_BYTES)
+    for pods, d in ANALYSIS_COMPOSED_MESHES:
+        for outer in schedule_mod.OUTER_ALGORITHMS:
+            strat = schedule_mod.composed_name("ring_rsa", outer)
+            yield (f"composed/{strat}/{pods}x{d}",
+                   schedule_mod.synthetic(sizes, strat, (pods, d),
+                                          ("pod", "data"),
+                                          intra=prof.link))
+    for strat in ("rhd_rsa", "ring_rsa", "psum"):
+        mesh = "x".join(str(s) for s in ANALYSIS_FLAT3_MESH)
+        yield (f"flat3/{strat}/{mesh}",
+               schedule_mod.synthetic(sizes, strat, ANALYSIS_FLAT3_MESH,
+                                      ("pod", "data", "model"),
+                                      intra=prof.link))
+
+
 # -- matrix execution -------------------------------------------------------
 
 def _row(point: ExperimentPoint, prof: HwProfile, backend: str,

@@ -95,6 +95,7 @@ def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
     the IR-vs-HLO wire-byte cross-check, and the overlap timeline
     (bucket ready-times played against per-bucket latencies to predict
     how much of the comm the backward hides, core/overlap.py)."""
+    from repro.analysis import verify as analysis_verify
     from repro.core import overlap as overlap_mod
     from repro.launch import roofline as rl
     from repro.models import param_groups
@@ -104,8 +105,15 @@ def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
                         groups=param_groups(params_struct))
     timeline = overlap_mod.simulate_schedule(sched,
                                              compute_s=roof.compute_s)
+    verify_diags = analysis_verify.verify_schedule(sched)
     return {
         "axis_sizes": list(axis_sizes),
+        "verify": {
+            "n_errors": sum(d.severity == "error" for d in verify_diags),
+            "n_warnings": sum(d.severity == "warn"
+                              for d in verify_diags),
+            "diagnostics": [d.to_json() for d in verify_diags],
+        },
         "n_buckets": sched.n_buckets,
         "algorithms": sched.algorithms(),
         "decomposition": sched.render(),
@@ -119,6 +127,47 @@ def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
         # identical buckets collapse; readiness ranks are preserved)
         "ir": sched.to_json(group=True),
     }
+
+
+def _static_verify(arch: str, shape_name: str, mesh, strategy: str,
+                   fusion_mb: float, sharding_aware: bool,
+                   remat: bool = False, wire_dtype: str = "",
+                   spec_overrides=None, selector_mode: str = "analytic",
+                   selector_table: str = "", overlap: bool = False) -> dict:
+    """Resolve the config's ReduceSchedule WITHOUT lowering or
+    compiling and run the static verifier (repro.analysis) over it —
+    the path that proves a >32-device schedule sound even though
+    legacy jax refuses to execute it (PARTIAL_AUTO_MAX_DEVICES)."""
+    import dataclasses
+
+    import jax
+    from repro.analysis import verify as analysis_verify
+    from repro.configs import get_spec, spec_for_shape
+    from repro.core import AggregatorConfig, GradientAggregator
+    from repro.launch.mesh import dp_axes_of
+    from repro.models import build_model, param_groups
+
+    spec = spec_for_shape(get_spec(arch), shape_name)
+    if remat:
+        spec = dataclasses.replace(spec, remat=True)
+    if spec_overrides:
+        spec = dataclasses.replace(spec, **spec_overrides)
+    model = build_model(spec)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    dp_axes = dp_axes_of(mesh)
+    agg = GradientAggregator(
+        AggregatorConfig(strategy=strategy,
+                         fusion_threshold_mb=fusion_mb,
+                         sharding_aware=sharding_aware,
+                         wire_dtype=wire_dtype,
+                         selector_mode=selector_mode,
+                         selector_table=selector_table,
+                         overlap=overlap), dp_axes)
+    axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
+    sched = agg.resolve(params, axis_sizes,
+                        groups=param_groups(params))
+    return analysis_verify.verify_summary(
+        sched, context=f"{arch}/{shape_name}")
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
@@ -248,9 +297,28 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             # abort (IsManualSubgroup) into a clean, recorded skip —
             # pinned by tests/test_partial_auto_guard.py.
             rec.update(status="SKIP", reason=str(e))
+            # The schedule is still fully resolvable without lowering:
+            # run the static verifier over the IR so the record proves
+            # soundness at a scale the executor cannot reach.
+            try:
+                analysis = _static_verify(
+                    arch, shape_name, mesh, strategy, fusion_mb,
+                    sharding_aware, remat=remat, wire_dtype=wire_dtype,
+                    spec_overrides=spec_overrides,
+                    selector_mode=selector_mode,
+                    selector_table=selector_table, overlap=overlap)
+                rec["analysis"] = analysis
+                rec["verified_static"] = analysis["n_errors"] == 0
+            except Exception as ve:  # noqa: BLE001 — recorded, not raised
+                rec["verified_static"] = False
+                rec["analysis"] = {"error":
+                                   f"{type(ve).__name__}: {ve}"}
             if verbose:
+                mark = "statically verified" \
+                    if rec.get("verified_static") else "unverified"
                 print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
-                      f"SKIP (partial-auto unsupported on this jax)")
+                      f"SKIP (partial-auto unsupported on this jax; "
+                      f"schedule {mark})")
             return rec
         rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])

@@ -58,7 +58,10 @@ def dryrun_matrix(recs, mesh):
             if r is None:
                 cells.append("—")
             elif r["status"] == "SKIP":
-                cells.append("SKIP†")
+                # ✓ = the unexecutable schedule was still statically
+                # verified (repro.analysis, zero error diagnostics)
+                cells.append("SKIP†✓" if r.get("verified_static")
+                             else "SKIP†")
             elif r["status"] != "OK":
                 cells.append(f"**{r['status']}**")
             else:
@@ -103,10 +106,10 @@ def schedule_table(recs):
         return ""
     out = ["### Reduction schedules (per-bucket algorithm selection "
            "+ predicted overlap)\n",
-           "| arch | shape | buckets | decomposition | "
+           "| arch | shape | buckets | decomposition | verify | "
            "predicted comm | charged comm | wire bytes (pred→charged) | "
            "comm hidden | step serial→overlapped |",
-           "|---|---|---|---|---|---|---|---|---|"]
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
         s = r["schedule"]
         # fed straight from the serialized IR; older records without an
@@ -129,9 +132,17 @@ def schedule_table(recs):
                     f"{fmt_bytes(wc['charged_total'])} {mark}")
         else:
             wire = "—"
+        # static-verifier verdict over the resolved IR (repro.analysis)
+        vr = s.get("verify")
+        if vr is None:
+            verified = "—"
+        elif vr.get("n_errors", 0) == 0:
+            verified = "✓"
+        else:
+            verified = f"**✗ {vr['n_errors']}**"
         out.append(
             f"| {r['arch']} | {r['shape']} | "
-            f"{s['n_buckets']} | {algs} | "
+            f"{s['n_buckets']} | {algs} | {verified} | "
             f"{fmt_s(s['predicted_comm_s'])} | "
             f"{fmt_s(s['charged_comm_s'])} | {wire} | {hidden} | {step} |")
     return "\n".join(out) + "\n"

@@ -139,47 +139,14 @@ def step_estimate_s(roof: "Roofline",
 
 
 def wire_check(sched, collective_bytes, rel_tol: float = 0.02) -> dict:
-    """Measured-vs-modeled comm-byte consistency (DESIGN.md §3.7/§4):
-    compare the HLO-charged collective bytes of a compiled step against
-    the per-STAGE wire bytes carried by the resolved
-    :class:`repro.core.schedule.ReduceSchedule` — no independent
-    re-derivation: the IR the aggregator executed is the same object
-    being verified.
-
-    ``sched``: a ReduceSchedule (attached or detached/deserialized).
-    ``collective_bytes``: the per-kind byte dict from the HLO parse.
-    Each stage predicts the HLO kind it compiles to (``Stage.hlo_kind``:
-    ppermute schedules → collective-permute, ``psum`` → all-reduce
-    payload, ``ps_gather`` → all-gather) and the bytes it charges
-    (``Stage.hlo_bytes``).  The charged side may legitimately exceed
-    the prediction (model-axis GSPMD collectives, padding on
-    non-divisible chunks, old-jax degraded-mode emulation), so the
-    verdict is per kind: ``consistent`` = every predicted kind is
-    within ``rel_tol`` below the charge it explains or lower.
-    """
-    predicted: dict = {}
-    for bucket in sched.buckets:
-        for st in bucket.stages:
-            predicted[st.hlo_kind] = predicted.get(st.hlo_kind, 0) \
-                + st.hlo_bytes
-    charged = {k: int(v) for k, v in collective_bytes.items()}
-    kinds = {}
-    for kind, want in sorted(predicted.items()):
-        got = charged.get(kind, 0)
-        kinds[kind] = {
-            "predicted": int(want), "charged": got,
-            "ratio": (got / want) if want else None,
-            # charged >= predicted*(1-tol): the schedule's bytes are in
-            # the HLO (extra charge from other collectives is allowed)
-            "ok": got >= want * (1.0 - rel_tol),
-        }
-    return {
-        "axis_sizes": list(sched.axis_sizes),
-        "predicted_total": int(sum(predicted.values())),
-        "charged_total": int(sum(charged.values())),
-        "kinds": kinds,
-        "consistent": all(k["ok"] for k in kinds.values()),
-    }
+    """Measured-vs-modeled comm-byte consistency (DESIGN.md §3.7/§4) —
+    now rule HL001 of the collective linter.  The implementation lives
+    in :mod:`repro.analysis.hlo_lint` (same dict, moved verbatim; this
+    wrapper keeps every dryrun/report/sweep record byte-identical) so
+    the byte comparison composes with the linter's other HLO rules,
+    rule IDs, and warning baseline instead of staying a one-off."""
+    from repro.analysis import hlo_lint
+    return hlo_lint.wire_check(sched, collective_bytes, rel_tol=rel_tol)
 
 
 def overlap_report(roof: "Roofline", timeline) -> dict:
