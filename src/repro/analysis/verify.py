@@ -32,6 +32,14 @@ but only ever checked by executing on small meshes:
            predicted latency must not move ``fingerprint()`` (re-plan
            determinism — cost-model constant changes may never fault
            the plan cache or the trajectory diff).
+``SV008``  wire-codec soundness: a codec'd stage must carry a codec
+           with a derivable per-hop error bound (:data:`CODEC_WIRE`),
+           ride an algorithm whose hops are explicit ppermutes
+           (ring_rsa/rhd_rsa — psum's hops are vendor-internal and
+           cannot re-quantize), and charge exactly the ENCODED wire
+           bytes plus one 4-byte f32 scale scalar per hop for scaled
+           codecs.  The byte arithmetic is restated here from first
+           principles, independent of ``core/codec.py``.
 
 All rules run on detached schedules (``plan=None``); the rules that
 need the leaf layout (SV003 leaf-gap, SV004 monotonicity, SV005)
@@ -61,6 +69,7 @@ RULES = {
     "SV005": "no fused bucket straddles a selector crossover point",
     "SV006": "reduced-precision wire dtype has a derivable tolerance",
     "SV007": "fingerprint is insensitive to predicted latencies",
+    "SV008": "codec'd stages have derivable bounds and encoded bytes",
 }
 
 # Unit roundoff of the dtypes we allow on the wire: the summation-error
@@ -87,6 +96,60 @@ def wire_tolerance(sched) -> float | None:
     for s in sched.axis_sizes:
         p *= int(s)
     return (math.log2(max(p, 1)) + 1.0) * eps
+
+
+# Wire-codec identity table for SV008: codec name -> (payload itemsize
+# in bytes/element, carries a per-bucket absmax scale scalar).  This
+# RESTATES core/codec.py rather than importing its registry — the
+# verifier's byte arithmetic must stay independent of the module it
+# audits, so a codec-module regression cannot silently re-derive its
+# own bug.  Codecs outside this table have no derivable per-hop error
+# bound (core/codec.py tolerance() model) and SV008 refuses them.
+CODEC_WIRE = {
+    "bf16": (2, False),
+    "int8": (1, True),
+    "fp8_e4m3": (1, True),
+}
+
+# Only algorithms whose hops are explicit ppermutes may carry a codec:
+# every hop is a dequantize-reduce-requantize boundary, and psum /
+# ps_gather hide their hop structure inside the vendor collective.
+CODEC_ALGORITHMS = ("ring_rsa", "rhd_rsa")
+
+# One float32 scale scalar rides each hop of a scaled codec.
+CODEC_SCALE_BYTES = 4
+
+
+def codec_tolerance(sched) -> float | None:
+    """Worst-bucket relative error bound of the schedule's wire codecs:
+    per codec'd stage, the per-hop model ``hops·eps`` (``·p`` for int8
+    absmax growth) of :func:`repro.core.codec.tolerance`, summed over a
+    bucket's stages, maxed over buckets.  Hops are ``allreduce_steps``
+    for allreduce stages and ``d−1`` for each RS/AG stage.  Returns 0.0
+    when nothing is codec'd and ``None`` when any stage carries a codec
+    with no derivable bound (the condition SV008 reports)."""
+    from repro.core import codec as codec_mod
+    worst = 0.0
+    for b in sched.buckets:
+        acc = 0.0
+        for st in b.stages:
+            cname = getattr(st, "codec", "none")
+            if cname == "none":
+                continue
+            if st.op == "allreduce":
+                try:
+                    hops = reducers.allreduce_steps(st.algorithm,
+                                                    st.axis_size)
+                except ValueError:
+                    return None
+            else:
+                hops = st.axis_size - 1
+            bound = codec_mod.tolerance(cname, st.axis_size, hops=hops)
+            if bound is None:
+                return None
+            acc += bound
+        worst = max(worst, acc)
+    return worst
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +245,10 @@ def _rule_sv001(sched, out):
                 f"{len(b.stages)}"))
             continue
         for j, (st, want) in enumerate(zip(b.stages, fresh)):
+            coded = getattr(st, "codec", "none") != "none"
             for f in _STAGE_FIELDS:
+                if coded and f == "wire_bytes":
+                    continue         # encoded accounting: SV008 owns it
                 got_v, want_v = getattr(st, f), getattr(want, f)
                 if got_v != want_v:
                     out.append(Diagnostic(
@@ -190,6 +256,9 @@ def _rule_sv001(sched, out):
                         f"stage {f}={got_v!r} but "
                         f"{b.strategy!r}@{b.n_bytes}B over "
                         f"{sched.axis_sizes} requires {want_v!r}"))
+        if any(getattr(st, "codec", "none") != "none"
+               for st in b.stages):
+            continue                 # coded buckets: SV008 re-derives
         total = sum(st.wire_bytes for st in b.stages)
         want_total = closed_form_wire_bytes(b.strategy, b.n_bytes,
                                             sched.axis_sizes)
@@ -369,6 +438,83 @@ def _rule_sv007(sched, out):
                 f"diff"))
 
 
+def _coded_stage_wire_bytes(st, bucket_bytes: int, wire_itemsize: int,
+                            itemsize: int, scaled: bool) -> int:
+    """Independent re-derivation of one codec'd stage's wire bytes.
+
+    Quantization happens in decoded elements: a stage moving N decoded
+    bytes of a ``wire_itemsize``-byte dtype holds ``N // wire_itemsize``
+    elements, each ``itemsize`` bytes on the wire once encoded.  The
+    algorithmic fraction of those encoded bytes then follows the same
+    closed forms SV001 holds uncoded stages to, plus one f32 scale
+    scalar per hop for scaled codecs (the per-bucket absmax rides every
+    ppermute alongside its payload).
+
+    RS/AG stages are charged from the BUCKET's total bytes (an inner
+    ring level moves ``enc·(d−1)/d`` whether scattering or gathering —
+    the AG stage's own ``n_bytes`` is the already-divided chunk and
+    cannot reproduce decompose's flooring exactly).
+    """
+    if st.op == "allreduce":
+        enc = (st.n_bytes // wire_itemsize) * itemsize
+        p = st.axis_size
+        if st.algorithm == "ring_rsa":
+            wire = int(2 * enc * (p - 1) / p)
+            hops = 2 * (p - 1)
+        else:                        # rhd_rsa (legality checked first)
+            core = 1 << (p.bit_length() - 1)
+            wire = int(2 * enc * (core - 1) / core)
+            hops = 2 * core.bit_length() - 2
+            if core != p:            # MVAPICH2 pre/post fold
+                wire += 2 * enc
+                hops += 2
+        return wire + (hops * CODEC_SCALE_BYTES if scaled else 0)
+    # reduce_scatter / all_gather: one ring level of d−1 hops
+    d = st.axis_size
+    enc = (bucket_bytes // wire_itemsize) * itemsize
+    wire = int(enc * (d - 1) / d)
+    return wire + ((d - 1) * CODEC_SCALE_BYTES if scaled else 0)
+
+
+def _rule_sv008(sched, out):
+    try:
+        wire_itemsize = int(jnp.dtype(sched.wire_dtype).itemsize)
+    except TypeError:
+        return                       # SV000 already reported the dtype
+    for b in sched.buckets:
+        for j, st in enumerate(b.stages):
+            cname = getattr(st, "codec", "none")
+            if cname == "none":
+                continue
+            loc = b.stage_path(j)
+            spec = CODEC_WIRE.get(cname)
+            if spec is None:
+                out.append(Diagnostic(
+                    "SV008", ERROR, loc,
+                    f"wire codec {cname!r} has no derivable per-hop "
+                    f"error bound (CODEC_WIRE covers "
+                    f"{sorted(CODEC_WIRE)})"))
+                continue
+            if st.algorithm not in CODEC_ALGORITHMS:
+                out.append(Diagnostic(
+                    "SV008", ERROR, loc,
+                    f"codec {cname!r} on algorithm {st.algorithm!r}: "
+                    f"only {CODEC_ALGORITHMS} expose per-hop ppermutes "
+                    f"to re-quantize at"))
+                continue
+            itemsize, scaled = spec
+            want = _coded_stage_wire_bytes(st, b.n_bytes, wire_itemsize,
+                                           itemsize, scaled)
+            if st.wire_bytes != want:
+                out.append(Diagnostic(
+                    "SV008", ERROR, loc,
+                    f"codec'd stage wire bytes {st.wire_bytes} != "
+                    f"{want} (codec {cname!r}: "
+                    f"{st.n_bytes}B decoded / {wire_itemsize}B elems "
+                    f"→ {itemsize}B on the wire"
+                    f"{' + 4B scale per hop' if scaled else ''})"))
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -387,6 +533,7 @@ def verify_schedule(sched, context: str = "") -> list[Diagnostic]:
     _rule_sv005(sched, out)
     _rule_sv006(sched, out)
     _rule_sv007(sched, out)
+    _rule_sv008(sched, out)
     if context:
         out = [dataclasses.replace(d, context=context) for d in out]
     return out
@@ -402,4 +549,5 @@ def verify_summary(sched, context: str = "") -> dict:
         "decomposition": sched.render(),
         "axis_sizes": list(sched.axis_sizes),
         "wire_tolerance": wire_tolerance(sched),
+        "codec_tolerance": codec_tolerance(sched),
     })

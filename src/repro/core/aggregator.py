@@ -33,6 +33,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from . import codec as codec_mod
 from . import compat, reducers, schedule as schedule_mod, \
     selector as selector_mod
 from .compat import axis_size
@@ -81,6 +82,15 @@ class AggregatorConfig:
                                        # core/overlap.py / DESIGN.md §3.6)
                                        # via overlap_params; __call__ is
                                        # the post-backward path
+    # -- wire codecs (core/codec.py, DESIGN.md §3.10) -----------------------
+    codec: str = "none"                # per-hop wire codec spec: a codec
+                                       # name (none|bf16|int8|fp8_e4m3) or
+                                       # "<inner>×<outer>" per schedule level
+    error_feedback: bool = False       # keep a per-bucket residual of the
+                                       # quantization error and fold it into
+                                       # the next step (init_residuals /
+                                       # __call__(..., residuals=...));
+                                       # post-backward path only
 
     @property
     def threshold_bytes(self) -> int:
@@ -109,13 +119,26 @@ class AggregatorConfig:
             raise ValueError(
                 f"selector_link {self.selector_link!r} not in "
                 f"{sorted(selector_mod.LINK_PROFILES)}")
+        codec_mod.validate_spec(self.codec or "none")
+        if self.error_feedback:
+            if (self.codec or "none") == "none":
+                raise ValueError("error_feedback=True requires a wire "
+                                 "codec (codec != 'none')")
+            if self.overlap:
+                # EF residual state is carried by the caller across
+                # steps; the in-backward custom_vjp path has nowhere to
+                # return the new residuals from.
+                raise ValueError("error_feedback is incompatible with "
+                                 "overlap=True (post-backward path only)")
 
     def make_selector(self) -> "selector_mod.Selector | None":
         if self.strategy != "auto":
             return None
+        wire = jnp.dtype(self.wire_dtype or self.accum_dtype)
         return selector_mod.make_selector(
             self.selector_mode, table=self.selector_table or None,
-            link=self.selector_link)
+            link=self.selector_link, codec=self.codec or "none",
+            wire_itemsize=wire.itemsize)
 
 
 class GradientAggregator:
@@ -172,7 +195,9 @@ class GradientAggregator:
             threshold_bytes=cfg.threshold_bytes, fuse=cfg.fuse,
             groups=groups, wire_dtype=self._wire_dtype(),
             align_buckets=cfg.align_buckets, placement=cfg.placement,
-            intra=cfg.selector_link, inter="dcn", cache=self.cache)
+            intra=cfg.selector_link, inter="dcn",
+            codec=cfg.codec or "none",
+            error_feedback=cfg.error_feedback, cache=self.cache)
         self.last_schedule = sched
         return sched
 
@@ -192,13 +217,32 @@ class GradientAggregator:
     # -- execution ----------------------------------------------------------
 
     def _reduce_buffer(self, bucket: "schedule_mod.BucketSchedule",
-                       group, buf, scale):
+                       group, buf, scale, residual=None):
         """Reduce ONE bucket's fused buffer: cast to the wire/accum
         dtype, run the bucket's decomposition tree stage-by-stage,
-        apply the mean scale, cast back."""
+        apply the mean scale, cast back.
+
+        ``residual`` enables error feedback: the bucket sends
+        ``q(g + r)`` instead of ``g`` through the codec'd stages and the
+        new residual ``(g + r) - q(g + r)`` is returned alongside the
+        reduced buffer (the caller threads it to the next step).  EF
+        quantizes ONCE on the whole fused buffer before the stage walk —
+        the per-hop codec then transports an already-on-grid payload."""
         cfg = self.config
         accum = jnp.dtype(cfg.wire_dtype or cfg.accum_dtype)
         orig = buf.dtype
+        new_residual = None
+        if residual is not None:
+            cname = next((st.codec for st in bucket.stages
+                          if st.codec != "none"), "none")
+            if cname != "none":
+                buf, new_residual = codec_mod.ef_quantize(
+                    cname, buf, residual)
+                buf = buf.astype(orig)
+            else:
+                # Bucket ended up uncoded (e.g. psum won the argmin):
+                # nothing was quantized, so nothing feeds back.
+                new_residual = residual
         if orig != accum:
             buf = buf.astype(accum)
         # chunked reducers slice along dim 0; if the bucket's leaf is
@@ -210,9 +254,24 @@ class GradientAggregator:
         buf = reducers.execute_stages(buf, bucket.stages)
         if axis != 0:
             buf = jnp.moveaxis(buf, 0, axis)
-        return (buf * scale).astype(orig)
+        out = (buf * scale).astype(orig)
+        if residual is not None:
+            return out, new_residual
+        return out
 
-    def __call__(self, grads, groups=None):
+    def init_residuals(self, grads, groups=None):
+        """Zero error-feedback state: one float32 buffer per fusion
+        bucket, shaped like the fused gradient buffers ``__call__``
+        reduces.  Thread the tuple through training steps:
+        ``grads, res = agg(grads, residuals=res)``.  Call inside the
+        same shard_map context as :meth:`__call__` (the fused layout
+        depends on the mesh axis sizes)."""
+        sched, _ = self._trace_context(grads, groups)
+        plan = sched.plan
+        return tuple(jnp.zeros(buf.shape, jnp.float32)
+                     for buf in plan.flatten(grads))
+
+    def __call__(self, grads, groups=None, residuals=None):
         """Mean-allreduce ``grads`` over the data axes (post-backward
         path: one aggregation block after ``value_and_grad``).
 
@@ -220,13 +279,32 @@ class GradientAggregator:
         ``grads`` (from the model's parameter sharding rules); only used
         when ``config.sharding_aware`` to keep fused buffers from crossing
         auto-axis sharding classes.
+
+        ``residuals``: error-feedback state from :meth:`init_residuals`
+        (or a previous call); when given, returns
+        ``(reduced_grads, new_residuals)``.
         """
         sched, scale = self._trace_context(grads, groups)
         plan = sched.plan
         reduced = []
-        for bucket, buf in zip(sched.buckets, plan.flatten(grads)):
-            reduced.append(self._reduce_buffer(
-                bucket, plan.buckets[bucket.index].group, buf, scale))
+        new_residuals = []
+        bufs = plan.flatten(grads)
+        if residuals is not None and len(residuals) != len(bufs):
+            raise ValueError(
+                f"{len(residuals)} residual buffers for "
+                f"{len(bufs)} fusion buckets — pass init_residuals() "
+                f"output for these grads")
+        for i, (bucket, buf) in enumerate(zip(sched.buckets, bufs)):
+            group = plan.buckets[bucket.index].group
+            if residuals is not None:
+                out, r = self._reduce_buffer(bucket, group, buf, scale,
+                                             residual=residuals[i])
+                new_residuals.append(r)
+            else:
+                out = self._reduce_buffer(bucket, group, buf, scale)
+            reduced.append(out)
+        if residuals is not None:
+            return plan.unflatten(reduced), tuple(new_residuals)
         return plan.unflatten(reduced)
 
     # -- overlapped (in-backward) path --------------------------------------

@@ -1,0 +1,355 @@
+"""Per-stage wire codecs for the ReduceSchedule IR (DESIGN.md §3.10).
+
+The paper's optimization insight is *reduce bytes on the wire*: its
+CUDA-aware designs win 5-17x on small/medium messages by moving the
+reduction next to the data.  The wire_dtype work (PR 4) pushed this one
+step — whole-bucket bf16 halving — but stopped at what a dtype cast can
+express.  This module pushes past it: each :class:`~repro.core.schedule
+.Stage` may carry a **wire codec** that encodes the payload immediately
+before every ``ppermute`` hop and decodes it immediately after, so the
+accumulation stays in float32 while the wire carries 1-2 bytes per
+element:
+
+``none``       pass-through (the PR-4 wire_dtype path is unchanged)
+``bf16``       truncate to bfloat16 for the hop (2 bytes/elem, no scale)
+``int8``       symmetric absmax quantization: ``q = round(x/s)`` with
+               ``s = absmax/127`` (1 byte/elem + one f32 scale scalar
+               per hop)
+``fp8_e4m3``   absmax-scaled cast to ``float8_e4m3fn`` (1 byte/elem +
+               one f32 scale scalar per hop; needs a jax with fp8
+               dtypes — gated, not assumed)
+
+Why dequantize-reduce-requantize at hop boundaries (not end-to-end
+quantized accumulation): summing int8/fp8 payloads directly would
+overflow/saturate after a handful of ranks, and a ring forwarding hop
+re-quantizes with an *unchanged* absmax (the max element quantizes to
+exactly ±127, so the rescale is the identity on the integer grid) — so
+the gather phase adds no error while the reduce phase accumulates in
+full float32, the TPU analogue of the paper's "reduce on the
+accelerator with full fidelity".
+
+Scales: one f32 scalar per hop per buffer ("per-bucket absmax" — the
+encoder sees the bucket's fused buffer, or its current chunk), shipped
+as a second scalar ``ppermute`` alongside the payload.  The IR charges
+these 4 bytes per hop explicitly (:func:`stage_wire_bytes`), so the
+HLO wire check stays exact rather than "close".
+
+Error feedback: :func:`ef_quantize` implements the standard residual
+scheme — send ``q(g + r)``, keep ``r' = (g + r) - q(g + r)`` — which
+telescopes: the sum of compressed updates over k steps differs from the
+uncompressed sum by exactly the last residual, so the compressed-SGD
+mean converges to the uncompressed mean (the contraction property
+tests/test_codec_properties.py pins).
+
+Derived tolerance bounds (:func:`tolerance`, the SV008 wall), with
+``hops`` = encoded hops on an element's critical path (each hop
+re-rounds the running partial sum; defaults to ring's ``2(p-1)``,
+which dominates RHD's ``2·log2(core)+2``):
+
+``bf16``       ``hops · 2^-8`` — the PR-4 wire-dtype roundoff, but
+               charged per hop: a ring re-truncates each partial sum
+               on every forwarding step, so the log-depth summation
+               model of SV006 is NOT safe here (measured: ring p=8
+               exceeds it; the hop-count bound holds with >2x margin).
+``fp8_e4m3``   ``hops · 2^-3`` — e4m3 keeps 3 mantissa bits, so its
+               unit roundoff replaces bf16's in the same per-hop model.
+``int8``       ``hops · P · (1/254)`` (half a quantization step
+               relative to absmax per hop) — uniform quantization
+               error is *absolute* w.r.t. the current buffer's absmax,
+               and a P-way accumulation can grow that absmax by up to
+               P, hence the extra P factor ("scale × p-accumulation").
+
+All bounds are relative to the bucket's input absmax and are validated
+empirically — by the hypothesis property wall on round trips and by the
+p ∈ {3,4,6,8} multidev wall on whole allreduces against ``psum``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import compat
+
+# Algorithms whose hops are explicit ppermutes we can encode around.
+# Vendor collectives (psum -> XLA all-reduce, ps_gather -> all-gather)
+# expose no hop boundary, so codec'd stages never carry them: the
+# planner assigns codec "none" (and SV008 rejects hand-built schedules
+# that claim otherwise).
+CODED_ALGORITHMS = ("ring_rsa", "rhd_rsa")
+
+# f32 scale scalar shipped per hop for absmax-scaled codecs.
+SCALE_BYTES = 4
+
+# Per-quantize error relative to the buffer absmax (unit roundoff of
+# the encoded format): the `eps` the derived tolerance bounds compose.
+CODEC_EPS = {
+    "bf16": 2.0 ** -8,
+    "fp8_e4m3": 2.0 ** -3,
+    "int8": 1.0 / 254.0,
+}
+
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One wire codec: identity + closed-form byte accounting."""
+    name: str
+    itemsize: int          # encoded bytes per element on the wire
+    scaled: bool           # ships a per-hop f32 absmax scale scalar
+    short: str             # render() suffix (e.g. "int8" in ring@data:int8)
+
+    @property
+    def eps(self) -> float | None:
+        return CODEC_EPS.get(self.name)
+
+    @property
+    def hop_overhead_bytes(self) -> int:
+        return SCALE_BYTES if self.scaled else 0
+
+
+_REGISTRY = {
+    "none": Codec("none", itemsize=0, scaled=False, short=""),
+    "bf16": Codec("bf16", itemsize=2, scaled=False, short="bf16"),
+    "int8": Codec("int8", itemsize=1, scaled=True, short="int8"),
+    "fp8_e4m3": Codec("fp8_e4m3", itemsize=1, scaled=True, short="fp8"),
+}
+
+CODECS = tuple(_REGISTRY)
+
+
+def get(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown wire codec {name!r}; one of {CODECS}")
+
+
+def is_codec(name: str) -> bool:
+    return name in _REGISTRY
+
+
+def available(name: str) -> bool:
+    """Can this jax actually *execute* the codec?  (The IR, cost model
+    and verifier describe fp8 schedules regardless; only the executor
+    needs the dtype.)"""
+    if name == "fp8_e4m3":
+        return _FP8_DTYPE is not None
+    return is_codec(name)
+
+
+# ---------------------------------------------------------------------------
+# Codec specs: "<codec>" for every level, "<inner>×<outer>" per level
+# ---------------------------------------------------------------------------
+
+SPEC_SEP = "×"
+
+
+def split_spec(spec: str, n_levels: int) -> tuple[str, ...]:
+    """Per-level codec names from a spec string.  A bare codec name
+    applies to every level; ``"<inner>×<outer>"`` (ASCII ``x``
+    accepted) gives the two levels of a composed schedule — inner
+    (intra-pod RS/AG) first, mirroring the ``"<inner>×<outer>"``
+    strategy naming."""
+    spec = spec or "none"
+    if spec in _REGISTRY:
+        return (spec,) * n_levels
+    parts = tuple(spec.replace("x", SPEC_SEP).split(SPEC_SEP))
+    for p in parts:
+        if p not in _REGISTRY:
+            raise ValueError(f"unknown wire codec {p!r} in spec "
+                             f"{spec!r}; names from {CODECS}")
+    if len(parts) != n_levels:
+        raise ValueError(f"codec spec {spec!r} has {len(parts)} level(s) "
+                         f"but the schedule has {n_levels}")
+    return parts
+
+
+def validate_spec(spec: str) -> None:
+    """Raise ValueError unless ``spec`` is a bare codec name or a
+    two-level ``"<inner>×<outer>"`` composition of codec names."""
+    spec = spec or "none"
+    if spec in _REGISTRY:
+        return
+    parts = tuple(spec.replace("x", SPEC_SEP).split(SPEC_SEP))
+    if len(parts) != 2:
+        raise ValueError(f"codec spec {spec!r} must be a codec name "
+                         f"{CODECS} or '<inner>{SPEC_SEP}<outer>'")
+    for p in parts:
+        if p not in _REGISTRY:
+            raise ValueError(f"unknown wire codec {p!r} in spec "
+                             f"{spec!r}; names from {CODECS}")
+
+
+def stage_codec(name: str, algorithm: str) -> str:
+    """The codec a stage running ``algorithm`` actually carries:
+    vendor collectives expose no ppermute hop to encode around, so
+    they degrade to ``none`` (the bucket simply isn't compressed on
+    that level)."""
+    if name == "none" or algorithm in CODED_ALGORITHMS:
+        return name
+    return "none"
+
+
+# ---------------------------------------------------------------------------
+# Closed-form byte accounting (shared by decompose and the benchmarks;
+# analysis/verify.py SV008 re-derives it independently)
+# ---------------------------------------------------------------------------
+
+def encoded_bytes(name: str, n_bytes: int, wire_itemsize: int) -> int:
+    """Encoded payload bytes for a stage whose decoded payload is
+    ``n_bytes`` of ``wire_itemsize``-byte elements."""
+    c = get(name)
+    if c.name == "none":
+        return int(n_bytes)
+    return (int(n_bytes) // int(wire_itemsize)) * c.itemsize
+
+
+def hop_bytes(name: str, n_hops: int) -> int:
+    """Scale-scalar overhead for ``n_hops`` encoded hops."""
+    return get(name).hop_overhead_bytes * int(n_hops)
+
+
+# ---------------------------------------------------------------------------
+# Derived tolerance bounds (the SV008 / numerics-wall contract)
+# ---------------------------------------------------------------------------
+
+def tolerance(name: str, p: int, hops: int | None = None) -> float | None:
+    """Error bound, relative to the bucket's input absmax, of one
+    codec'd sum-allreduce over ``p`` devices — or None when no bound is
+    derivable (unknown codec).  ``none`` returns 0.0: an uncoded stage
+    adds no codec error (the wire-dtype bound of SV006 still applies).
+
+    The depth factor is the number of encoded hops an element's partial
+    sum can pass through: every hop re-quantizes the running sum, so —
+    unlike the PR-4 wire-dtype bound, where the depth was the log-depth
+    of the summation tree — a ring's p-1 reduce-scatter forwarding hops
+    each contribute a rounding.  ``hops`` defaults to ``2(p-1)``, the
+    worst explicit-hop algorithm (ring RS+AG; RHD's ``2·log2(core)+2``
+    is always below it), and the static verifier passes the schedule's
+    actual per-stage hop count instead.  ``int8`` additionally
+    multiplies by P: uniform quantization error is *absolute* w.r.t.
+    the current buffer absmax, which P-way accumulation can grow by up
+    to P ("scale × p-accumulation").
+    """
+    if name == "none":
+        return 0.0
+    eps = CODEC_EPS.get(name)
+    if eps is None:
+        return None
+    p = max(int(p), 1)
+    depth = float(2 * (p - 1) if hops is None else hops)
+    if name == "int8":
+        return depth * p * eps
+    return depth * eps
+
+
+# ---------------------------------------------------------------------------
+# Execution: encode / decode / coded ppermute
+# ---------------------------------------------------------------------------
+
+def encode(name: str, x: jax.Array):
+    """``(payload, scale)`` for the wire; ``scale`` is None for
+    unscaled codecs.  Zero buffers encode to zero payloads with a unit
+    scale (no NaNs), and a ppermute non-target's all-zero receive
+    decodes back to exact zeros — which is what the RHD pre/post fold
+    relies on."""
+    c = get(name)
+    if c.name == "none":
+        return x, None
+    if c.name == "bf16":
+        return x.astype(jnp.bfloat16), None
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf))
+    safe = jnp.where(absmax > 0, absmax, 1.0).astype(jnp.float32)
+    # The scale must stay a NORMAL f32: for subnormal absmax the
+    # absmax/denominator quotient can flush to zero on FTZ backends,
+    # making x/scale inf — which fp8_e4m3fn (no inf encoding)
+    # saturates to NaN and poisons the whole bucket.  Clamping is free
+    # in the normal regime and degrades the subnormal regime to an
+    # ABSOLUTE error <= absmax (values below the clamped grid round to
+    # zero), the bound the property wall's subnormal branch pins.
+    tiny = jnp.float32(jnp.finfo(jnp.float32).tiny)
+    if c.name == "int8":
+        scale = jnp.maximum(safe / 127.0, tiny)
+        q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0)
+        return q.astype(jnp.int8), scale
+    if c.name == "fp8_e4m3":
+        if _FP8_DTYPE is None:
+            raise NotImplementedError(
+                "this jax has no float8_e4m3fn dtype; the fp8_e4m3 "
+                "codec can be planned/verified but not executed here")
+        scale = jnp.maximum(safe / 448.0, tiny)
+        return (xf / scale).astype(_FP8_DTYPE), scale
+    raise ValueError(f"codec {c.name!r} has no encoder")
+
+
+def decode(name: str, payload: jax.Array, scale) -> jax.Array:
+    """Back to float32 (the accumulation dtype)."""
+    c = get(name)
+    if c.name == "none":
+        return payload
+    out = payload.astype(jnp.float32)
+    if scale is not None:
+        out = out * scale
+    return out
+
+
+def roundtrip(name: str, x: jax.Array) -> jax.Array:
+    payload, scale = encode(name, x)
+    return decode(name, payload, scale)
+
+
+def permuter(name: str):
+    """A drop-in replacement for ``compat.ppermute`` that encodes the
+    payload for the hop and decodes on receipt — the
+    dequantize-reduce-requantize boundary ``reducers.execute_stages``
+    installs around every hop of a codec'd stage."""
+    c = get(name)
+    if c.name == "none":
+        return compat.ppermute
+
+    def coded_ppermute(x, axis, perm):
+        payload, scale = encode(c.name, x)
+        # Float-coded payloads (bf16/fp8) ride the wire as OPAQUE
+        # integer bits: XLA's convert mover hoists float->float decode
+        # converts across a collective-permute (observed on the CPU
+        # backend: a bf16 hop compiled to an f32[...] permute even
+        # through an optimization_barrier), silently shipping decoded
+        # bytes while the IR charges encoded ones — the HLO byte wall
+        # (tests/multidev_codec_checks.py) catches the 2x.  A
+        # bitcast-convert has no value semantics to move, so the wire
+        # dtype is pinned; int8 needs no pinning (int<->float converts
+        # are not moved).
+        fdt = payload.dtype
+        bits = {2: jnp.uint16, 1: jnp.uint8}[fdt.itemsize] \
+            if jnp.issubdtype(fdt, jnp.floating) else None
+        if bits is not None:
+            payload = jax.lax.bitcast_convert_type(payload, bits)
+        payload = compat.ppermute(payload, axis, perm)
+        if bits is not None:
+            payload = jax.lax.bitcast_convert_type(payload, fdt)
+        if scale is not None:
+            scale = compat.ppermute(scale, axis, perm)
+        return decode(c.name, payload, scale)
+
+    return coded_ppermute
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+def ef_quantize(name: str, x: jax.Array, residual: jax.Array):
+    """One error-feedback compression step: returns
+    ``(q(x + r), (x + r) - q(x + r))``.  Because each step's residual
+    carries exactly the quantization error forward, the sums telescope:
+    after k steps the compressed total differs from the uncompressed
+    total by the final residual alone — bounded by one quantization
+    step, independent of k."""
+    z = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    dq = roundtrip(name, z)
+    return dq, z - dq

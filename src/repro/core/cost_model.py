@@ -61,6 +61,21 @@ PAPER_P100_MFU = 0.55
 # HBM, so gamma is HBM-bound, not FLOP-bound.
 GAMMA_S_PER_BYTE = 3.0 / hw.V5E.hbm_bandwidth
 
+# Quantize/encode throughput for wire codecs (core/codec.py): each
+# encoded hop reads the f32 buffer, writes the narrow payload, and the
+# decode reads it back — ~2.5 bytes of HBM traffic per *decoded* byte,
+# charged per hop on the decoded wire volume.  This is the γ-style term
+# that moves the selector's crossover_bytes: compression shrinks β
+# four-fold (int8) but pays this compute toll, so tiny messages stay
+# uncoded while bandwidth-bound ones win.
+QUANT_GAMMA_S_PER_BYTE = 2.5 / hw.V5E.hbm_bandwidth
+
+# A zero-cost link: alpha = 0, beta = 0.  Lets callers split
+# allreduce_latency into its wire part (real link, gamma=0) and its
+# reduce part (FREE_LINK, real gamma) — the decomposition the codec-
+# aware stage latency in core/schedule.py is built from.
+FREE_LINK = LinkParams(0.0, math.inf)
+
 
 def allreduce_latency(strategy: str, n_bytes: float, p: int,
                       link: LinkParams = ICI,

@@ -146,6 +146,13 @@ def build_plan(tree, threshold_bytes: int,
     crossovers would be off by the itemsize ratio; crossing is
     therefore evaluated on element counts × ``switch_itemsize``.
     0 means "switch points are in leaf bytes" (dtype-agnostic callers).
+
+    Wire codecs (core/codec.py) never reach this layer: bucket sizes,
+    thresholds, and switch points all stay in DECODED bytes.  A codec
+    rescales every candidate message identically, so it shifts the
+    selector's crossovers (which the aggregator already resolves
+    codec-aware before handing switch points here) but not the relative
+    layout decisions this packer makes.
     """
     switch = tuple(sorted(int(s) for s in switch_points)) \
         if switch_points else ()

@@ -56,7 +56,8 @@ class PlanCache:
     def key_for(tree, threshold_bytes: int, groups, fuse: bool,
                 switch_points=None, switch_itemsize: int = 0,
                 strategy: Hashable = None,
-                overlap: bool = False) -> Hashable:
+                overlap: bool = False,
+                codec: Hashable = ("none", False)) -> Hashable:
         flat, treedef = jax.tree_util.tree_flatten(tree)
         shapes = tuple(tuple(x.shape) for x in flat)
         dtypes = tuple(str(jnp.dtype(x.dtype)) for x in flat)
@@ -81,8 +82,14 @@ class PlanCache:
         # trees — the layouts are identical today, but the modes must
         # never alias if an overlap-specific layout (e.g. readiness-
         # ordered fusion) is introduced.
+        #
+        # `codec` is the FULL wire-codec identity (spec string +
+        # error-feedback flag), not an itemsize: int8 and fp8_e4m3 both
+        # put 1 byte/element on the wire, so an itemsize key would alias
+        # two schedules that execute different arithmetic
+        # (tests/test_wire_dtype.py pins the distinction).
         return (treedef, shapes, dtypes, gkey, threshold_bytes, fuse,
-                skey, strategy, overlap)
+                skey, strategy, overlap, codec)
 
     def _get_or_build(self, key: Hashable, builder):
         """Intern ``builder()`` under ``key`` with the per-key build

@@ -73,12 +73,17 @@ def psum(x: jax.Array, axis: Axis) -> jax.Array:
 # ring reduce-scatter / allgather — composable pieces
 # ---------------------------------------------------------------------------
 
-def ring_reduce_scatter(x: jax.Array, axis: Axis):
+def ring_reduce_scatter(x: jax.Array, axis: Axis, permute=ppermute):
     """Ring reduce-scatter along the leading dim.
 
     Returns ``(chunk, orig_len)`` where ``chunk`` is this device's fully
     reduced 1/p-th of the (padded) input: device ``i`` owns chunk
     ``(i + 1) % p``.  p-1 steps, each moving N/p bytes.
+
+    ``permute`` is the hop primitive — ``compat.ppermute`` by default, or
+    a ``codec.permuter(...)`` wrapper that encodes the payload for the
+    wire and decodes on receipt (the adds below stay in the buffer
+    dtype, so accumulation precision is untouched by the codec).
     """
     p = axis_size(axis)
     x, n = _pad_leading(x, p)
@@ -91,12 +96,13 @@ def ring_reduce_scatter(x: jax.Array, axis: Axis):
     # of chunk (idx - s) over devices {idx-s, ..., idx}.
     buf = jnp.take(chunks, idx, axis=0, mode="wrap")
     for s in range(1, p):
-        buf = ppermute(buf, axis, perm)
+        buf = permute(buf, axis, perm)
         buf = buf + jnp.take(chunks, (idx - s) % p, axis=0, mode="wrap")
     return buf, n
 
 
-def ring_all_gather(chunk: jax.Array, axis: Axis, orig_len: int):
+def ring_all_gather(chunk: jax.Array, axis: Axis, orig_len: int,
+                    permute=ppermute):
     """Inverse of ``ring_reduce_scatter``: ring allgather of per-device
     chunks (device ``i`` holding chunk ``(i+1) % p``) back to the full
     leading dim, truncated to ``orig_len``."""
@@ -113,23 +119,23 @@ def ring_all_gather(chunk: jax.Array, axis: Axis, orig_len: int):
         out = lax.dynamic_update_slice_in_dim(
             out, cur[None], (idx - s + 1) % p, axis=0)
         if s != p - 1:
-            cur = ppermute(cur, axis, perm)
+            cur = permute(cur, axis, perm)
     out = out.reshape(p * chunk.shape[0], *chunk.shape[1:])
     return out[:orig_len]
 
 
-def ring_rsa(x: jax.Array, axis: Axis) -> jax.Array:
+def ring_rsa(x: jax.Array, axis: Axis, permute=ppermute) -> jax.Array:
     """Bandwidth-optimal ring allreduce (Baidu/NCCL): 2(p-1) steps,
     2N(p-1)/p bytes on the wire per device."""
-    chunk, n = ring_reduce_scatter(x, axis)
-    return ring_all_gather(chunk, axis, n)
+    chunk, n = ring_reduce_scatter(x, axis, permute=permute)
+    return ring_all_gather(chunk, axis, n, permute=permute)
 
 
 # ---------------------------------------------------------------------------
 # recursive vector halving/doubling RSA — the paper's proposed design
 # ---------------------------------------------------------------------------
 
-def rhd_rsa(x: jax.Array, axis: Axis) -> jax.Array:
+def rhd_rsa(x: jax.Array, axis: Axis, permute=ppermute) -> jax.Array:
     """Recursive vector halving & doubling reduce-scatter/allgather
     (Thakur et al. [41]; the algorithm behind the paper's MVAPICH2-GDR
     MPI_Allreduce). 2·log2(p) steps, 2N(p-1)/p bytes — latency-optimal
@@ -158,7 +164,7 @@ def rhd_rsa(x: jax.Array, axis: Axis) -> jax.Array:
         # to core rank j.  Non-targets of a ppermute receive zeros, so a
         # single add applies the fold only where it landed.
         pre = [(core + j, j) for j in range(r)]
-        x = x + ppermute(x, axis, pre)
+        x = x + permute(x, axis, pre)
 
     # Reduce-scatter by recursive halving over the core: exchange with
     # partner idx^mask, mask = core/2, ..., 1. Bit clear -> keep lower
@@ -174,7 +180,7 @@ def rhd_rsa(x: jax.Array, axis: Axis) -> jax.Array:
         bit = (idx & mask) != 0
         send = jnp.where(bit, lower, upper)
         keep = jnp.where(bit, upper, lower)
-        recv = ppermute(send, axis, perm)
+        recv = permute(send, axis, perm)
         buf = keep + recv
         mask //= 2
     # Core device idx now owns the fully reduced chunk at offset
@@ -184,7 +190,7 @@ def rhd_rsa(x: jax.Array, axis: Axis) -> jax.Array:
     mask = 1
     while mask < core:
         perm = [(i, i ^ mask) for i in range(core)]
-        recv = ppermute(buf, axis, perm)
+        recv = permute(buf, axis, perm)
         bit = (idx & mask) != 0
         # If our bit is set we hold the upper adjacent block.
         buf = jnp.where(bit,
@@ -196,7 +202,7 @@ def rhd_rsa(x: jax.Array, axis: Axis) -> jax.Array:
         # Post-processing broadcast: core rank j returns the full result
         # to excess rank core+j, which replaces its (garbage) buffer.
         post = [(j, core + j) for j in range(r)]
-        recv = ppermute(buf, axis, post)
+        recv = permute(buf, axis, post)
         buf = jnp.where(idx >= core, recv, buf)
     return buf[:n]
 
@@ -235,6 +241,24 @@ def hierarchical(x: jax.Array, data_axis: Axis, pod_axis: Axis) -> jax.Array:
 # stage executor (ReduceSchedule decomposition trees, core/schedule.py)
 # ---------------------------------------------------------------------------
 
+def _stage_permute(st):
+    """The hop primitive for one stage: plain ``ppermute`` for uncoded
+    stages, a ``codec.permuter`` encode/decode wrapper when the stage
+    carries a wire codec (core/codec.py).  Codecs are only legal on
+    algorithms whose hops are explicit ppermutes (the static verifier's
+    SV008 rejects the rest before execution; this is the runtime
+    backstop)."""
+    cname = getattr(st, "codec", "none") or "none"
+    if cname == "none":
+        return ppermute
+    from . import codec as codec_mod
+    if st.algorithm not in codec_mod.CODED_ALGORITHMS:
+        raise ValueError(
+            f"codec {cname!r} on {st.op}@{st.axis} ({st.algorithm}): only "
+            f"{codec_mod.CODED_ALGORITHMS} expose ppermute hop boundaries")
+    return codec_mod.permuter(cname)
+
+
 def execute_stages(x: jax.Array, stages) -> jax.Array:
     """Run a bucket's decomposition tree (a sequence of
     ``schedule.Stage``-like objects with ``op``/``algorithm``/``axis``)
@@ -244,14 +268,26 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
     point of the aggregator — ``hierarchical`` is not a special-cased
     monolith but the stage list ``[reduce_scatter@data, allreduce@pod,
     all_gather@data]``, which is exactly what :func:`hierarchical`
-    composes by hand."""
+    composes by hand.
+
+    Stages carrying a wire codec (``st.codec != "none"``) encode the
+    payload around every ppermute hop; the bucket buffer is upcast to
+    float32 for the whole stage list (dequantize-reduce-requantize with
+    fp32 accumulation, DESIGN.md §3.10) and cast back to its original
+    dtype at the end."""
+    coded = any((getattr(st, "codec", "none") or "none") != "none"
+                for st in stages)
+    orig_dtype = x.dtype
+    if coded and x.dtype != jnp.float32:
+        x = x.astype(jnp.float32)
     pending: list = []                      # (axis, orig_len) stack
     for st in stages:
+        permute = _stage_permute(st)
         if st.op == "reduce_scatter":
             if st.algorithm != "ring_rsa":
                 raise ValueError(f"unknown reduce-scatter algorithm "
                                  f"{st.algorithm!r}")
-            x, n = ring_reduce_scatter(x, st.axis)
+            x, n = ring_reduce_scatter(x, st.axis, permute=permute)
             pending.append((st.axis, n))
         elif st.op == "all_gather":
             if not pending or pending[-1][0] != st.axis:
@@ -259,17 +295,22 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
                     f"all_gather@{st.axis} without a matching "
                     f"reduce_scatter (pending {pending})")
             _, n = pending.pop()
-            x = ring_all_gather(x, st.axis, n)
+            x = ring_all_gather(x, st.axis, n, permute=permute)
         elif st.op == "allreduce":
             fn = _FLAT_FNS.get(st.algorithm)
             if fn is None:
                 raise ValueError(f"unknown allreduce algorithm "
                                  f"{st.algorithm!r}")
-            x = fn(x, st.axis)
+            if permute is not ppermute:
+                x = fn(x, st.axis, permute=permute)
+            else:
+                x = fn(x, st.axis)
         else:
             raise ValueError(f"unknown stage op {st.op!r}")
     if pending:
         raise ValueError(f"unterminated reduce_scatter stages: {pending}")
+    if coded and x.dtype != orig_dtype:
+        x = x.astype(orig_dtype)
     return x
 
 

@@ -59,6 +59,7 @@ from typing import Hashable, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import codec as codec_mod
 from . import cost_model, fusion, overlap as overlap_mod, reducers
 
 SCHEMA = "repro/schedule/v1"
@@ -153,14 +154,22 @@ class Stage:
     axis: str          # mesh axis name
     axis_size: int
     n_bytes: int       # payload entering the stage (wire dtype bytes)
-    wire_bytes: int    # algorithmic wire bytes on the busiest device
+    wire_bytes: int    # algorithmic wire bytes on the busiest device —
+                       # ENCODED bytes (+ per-hop scale scalars) when the
+                       # stage carries a wire codec (core/codec.py)
     predicted_s: float # cost-model latency of this stage alone
+    codec: str = "none"  # wire codec around each ppermute hop
 
     def to_json(self) -> dict:
-        return {"op": self.op, "algorithm": self.algorithm,
-                "axis": self.axis, "axis_size": self.axis_size,
-                "bytes": self.n_bytes, "wire_bytes": self.wire_bytes,
-                "predicted_s": self.predicted_s}
+        rec = {"op": self.op, "algorithm": self.algorithm,
+               "axis": self.axis, "axis_size": self.axis_size,
+               "bytes": self.n_bytes, "wire_bytes": self.wire_bytes,
+               "predicted_s": self.predicted_s}
+        # Emitted only when set, so uncoded records (and their schema)
+        # stay byte-identical to every pre-codec artifact.
+        if self.codec != "none":
+            rec["codec"] = self.codec
+        return rec
 
     @property
     def hlo_kind(self) -> str:
@@ -216,7 +225,8 @@ class BucketSchedule:
     def render(self) -> str:
         """Human-readable decomposition, e.g. ``ring@data×rhd@pod`` for
         a composed bucket or ``rhd@data`` for a flat one (RS/AG pairs
-        collapse onto their allreduce line)."""
+        collapse onto their allreduce line).  Coded stages carry a
+        ``:codec`` suffix: ``ring@data:int8×rhd@pod:bf16``."""
         parts = []
         skip_ag = set()
         for i, st in enumerate(self.stages):
@@ -229,9 +239,12 @@ class BucketSchedule:
                     if other.op == "all_gather" and other.axis == st.axis:
                         skip_ag.add(j)
                         break
-                parts.append(f"{_short(st.algorithm)}@{st.axis}")
-            elif st.op == "allreduce":
-                parts.append(f"{_short(st.algorithm)}@{st.axis}")
+            elif st.op != "allreduce":
+                continue
+            part = f"{_short(st.algorithm)}@{st.axis}"
+            if st.codec != "none":
+                part += f":{codec_mod.get(st.codec).short}"
+            parts.append(part)
         return SEP.join(parts)
 
     def to_json(self) -> dict:
@@ -258,6 +271,8 @@ class ReduceSchedule:
     threshold_bytes: int
     switch_points: tuple[int, ...]
     buckets: tuple[BucketSchedule, ...]
+    codec: str = "none"            # requested wire-codec spec (codec.py)
+    error_feedback: bool = False   # EF residual state kept by the caller
     plan: "fusion.FusionPlan | None" = None   # None = detached
 
     # -- views --------------------------------------------------------------
@@ -332,6 +347,12 @@ class ReduceSchedule:
             # DETACHED fingerprint — the one from_json(rec) reproduces
             "fingerprint": self.fingerprint(detached=group),
         }
+        # Codec identity is emitted only when set — uncoded records stay
+        # byte-identical to every pre-codec artifact.
+        if self.codec != "none":
+            rec["codec"] = self.codec
+        if self.error_feedback:
+            rec["error_feedback"] = True
         if not group:
             rec["buckets"] = [b.to_json() for b in self.buckets]
             return rec
@@ -383,11 +404,19 @@ class ReduceSchedule:
                  else list(b.leaf_indices), "size": b.size,
                  "bytes": b.n_bytes, "readiness_rank": b.readiness_rank,
                  "strategy": b.strategy,
+                 # Codec identity joins the stage tuple only when set,
+                 # so every pre-codec fingerprint (committed in matrix
+                 # rows and BENCH artifacts) is reproduced bit-for-bit.
                  "stages": [[st.op, st.algorithm, st.axis, st.axis_size,
                              st.n_bytes, st.wire_bytes]
+                            + ([st.codec] if st.codec != "none" else [])
                             for st in b.stages]}
                 for b in self.buckets],
         }
+        if self.codec != "none":
+            struct["codec"] = self.codec
+        if self.error_feedback:
+            struct["error_feedback"] = True
         blob = json.dumps(struct, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:16]
 
@@ -407,7 +436,8 @@ def from_json(rec: dict) -> ReduceSchedule:
                              axis=s["axis"], axis_size=int(s["axis_size"]),
                              n_bytes=int(s["bytes"]),
                              wire_bytes=int(s["wire_bytes"]),
-                             predicted_s=float(s["predicted_s"]))
+                             predicted_s=float(s["predicted_s"]),
+                             codec=s.get("codec", "none"))
                        for s in entry["stages"])
         ranks = entry.get("readiness_ranks")
         for j in range(int(entry.get("count", 1))):
@@ -434,7 +464,8 @@ def from_json(rec: dict) -> ReduceSchedule:
         wire_dtype=rec["wire_dtype"], placement=rec["placement"],
         threshold_bytes=int(rec["threshold_bytes"]),
         switch_points=tuple(int(s) for s in rec["switch_points"]),
-        buckets=tuple(buckets), plan=None)
+        buckets=tuple(buckets), codec=rec.get("codec", "none"),
+        error_feedback=bool(rec.get("error_feedback", False)), plan=None)
 
 
 # ---------------------------------------------------------------------------
@@ -448,17 +479,62 @@ def _stage_link(i: int, n_axes: int, intra, inter):
     return inter if (n_axes > 1 and i == 0) else intra
 
 
+def _flat_allreduce_stage(alg: str, cname: str, axis: str, p: int,
+                          n_bytes: int, link, gamma: float,
+                          wire_itemsize: int) -> Stage:
+    """One flat allreduce stage, coded or not.  Uncoded stages keep the
+    pre-codec arithmetic bit-for-bit (fingerprints of committed
+    artifacts depend on it).  Coded stages charge:
+
+      wire_bytes  = reducers.wire_bytes(alg, ENCODED bytes) +
+                    4 bytes of f32 scale scalar per hop (scaled codecs)
+      predicted_s = α·steps + β·(encoded wire bytes)      [real link]
+                  + γ·(decoded reduce bytes)              [FREE_LINK]
+                  + γ_quant·(decoded wire volume)         [codec toll]
+    """
+    eff = codec_mod.stage_codec(cname, alg)
+    if eff == "none":
+        return Stage(
+            op="allreduce", algorithm=alg, axis=axis, axis_size=p,
+            n_bytes=n_bytes,
+            wire_bytes=reducers.wire_bytes(alg, n_bytes, p),
+            predicted_s=cost_model.allreduce_latency(
+                alg, n_bytes, p, link=link, gamma=gamma))
+    enc = codec_mod.encoded_bytes(eff, n_bytes, wire_itemsize)
+    hops = reducers.allreduce_steps(alg, p)
+    wire = reducers.wire_bytes(alg, enc, p) + codec_mod.hop_bytes(eff, hops)
+    predicted = (
+        cost_model.allreduce_latency(alg, enc, p, link=link, gamma=0.0)
+        + cost_model.allreduce_latency(alg, n_bytes, p,
+                                       link=cost_model.FREE_LINK,
+                                       gamma=gamma)
+        + cost_model.QUANT_GAMMA_S_PER_BYTE
+        * reducers.wire_bytes(alg, n_bytes, p))
+    return Stage(op="allreduce", algorithm=alg, axis=axis, axis_size=p,
+                 n_bytes=n_bytes, wire_bytes=wire, predicted_s=predicted,
+                 codec=eff)
+
+
 def decompose(strategy: str, n_bytes: int,
               axis_names: Sequence[str], axis_sizes: Sequence[int],
               intra=cost_model.ICI, inter=cost_model.DCN,
-              gamma: float = cost_model.GAMMA_S_PER_BYTE
+              gamma: float = cost_model.GAMMA_S_PER_BYTE,
+              codec: str = "none", wire_itemsize: int = 4
               ) -> tuple[Stage, ...]:
     """The decomposition tree of one bucket: per-axis stages with
     algorithmic wire bytes (reducers accounting) and cost-model
     latencies.  ``axis_names``/``axis_sizes`` are outermost first.
     Byte/step truth matches the executed reducers exactly:
     ``sum(st.wire_bytes) == reducers.wire_bytes(strategy, ...)`` for
-    every strategy (pinned in tests/test_schedule.py)."""
+    every strategy (pinned in tests/test_schedule.py).
+
+    ``codec`` is a wire-codec spec (core/codec.py): a single name for
+    every level, or ``"<inner>×<outer>"`` matching the composed
+    strategy levels.  Stages whose algorithm exposes no ppermute hops
+    (psum, ps_gather) degrade to ``"none"``; coded stages charge
+    ENCODED wire bytes (in ``wire_itemsize``-byte decoded elements)
+    plus per-hop scale scalars, and a γ-style quantize toll in
+    ``predicted_s``."""
     names = tuple(axis_names)
     sizes = tuple(int(s) for s in axis_sizes)
     if len(names) != len(sizes) or not names:
@@ -468,20 +544,20 @@ def decompose(strategy: str, n_bytes: int,
     strategy = normalize_strategy(strategy, len(names))
     parts = split_strategy(strategy)
     n_bytes = int(n_bytes)
+    wire_itemsize = int(wire_itemsize)
 
     if len(parts) == 1:
         # Flat fold: a FULL allreduce per axis, innermost first —
-        # exactly what reducers.allreduce executes.
+        # exactly what reducers.allreduce executes.  Codec spec levels
+        # are innermost-first too (level 0 = innermost axis).
         (alg,) = parts
+        cparts = codec_mod.split_spec(codec, len(names))
         stages = []
         for i in range(len(names) - 1, -1, -1):
             link = _stage_link(i, len(names), intra, inter)
-            stages.append(Stage(
-                op="allreduce", algorithm=alg, axis=names[i],
-                axis_size=sizes[i], n_bytes=n_bytes,
-                wire_bytes=reducers.wire_bytes(alg, n_bytes, sizes[i]),
-                predicted_s=cost_model.allreduce_latency(
-                    alg, n_bytes, sizes[i], link=link, gamma=gamma)))
+            stages.append(_flat_allreduce_stage(
+                alg, cparts[len(names) - 1 - i], names[i], sizes[i],
+                n_bytes, link, gamma, wire_itemsize))
         return tuple(stages)
 
     # Composed two-level: RS@inner -> allreduce@outer -> AG@inner.
@@ -489,37 +565,61 @@ def decompose(strategy: str, n_bytes: int,
         raise ValueError(f"composed strategy {strategy!r} needs a "
                          f"2-axis mesh, got axes {names}")
     inner_alg, outer_alg = parts
+    inner_codec, outer_codec = codec_mod.split_spec(codec, 2)
+    inner_eff = codec_mod.stage_codec(inner_codec, inner_alg)
     outer_axis, inner_axis = names
     pods, d = sizes
     stages = []
     frac_d = (d - 1) / d
     level_bytes = int(n_bytes * frac_d)
+    if inner_eff != "none":
+        enc = codec_mod.encoded_bytes(inner_eff, n_bytes, wire_itemsize)
+        enc_level = int(enc * frac_d)
+        level_wire = enc_level + codec_mod.hop_bytes(inner_eff, d - 1)
+        level_beta_bytes = enc * frac_d
+        quant_toll = cost_model.QUANT_GAMMA_S_PER_BYTE * n_bytes * frac_d
+    else:
+        level_wire = level_bytes
+        level_beta_bytes = n_bytes * frac_d
+        quant_toll = 0.0
     if d > 1:
         stages.append(Stage(
             op="reduce_scatter", algorithm=inner_alg, axis=inner_axis,
-            axis_size=d, n_bytes=n_bytes, wire_bytes=level_bytes,
+            axis_size=d, n_bytes=n_bytes, wire_bytes=level_wire,
             predicted_s=(d - 1) * intra.alpha_s
-            + n_bytes * frac_d * intra.beta
-            + n_bytes * frac_d * gamma))
+            + level_beta_bytes * intra.beta
+            + n_bytes * frac_d * gamma + quant_toll,
+            codec=inner_eff))
     chunk = n_bytes // d
-    stages.append(Stage(
-        op="allreduce", algorithm=outer_alg, axis=outer_axis,
-        axis_size=pods, n_bytes=chunk,
-        wire_bytes=reducers.wire_bytes(outer_alg, chunk, pods),
-        predicted_s=cost_model.allreduce_latency(
-            outer_alg, n_bytes / d, pods, link=inter, gamma=gamma)))
+    if codec_mod.stage_codec(outer_codec, outer_alg) == "none":
+        # Pre-codec arithmetic, bit-for-bit (note the FLOAT n_bytes/d in
+        # the latency vs the int chunk in wire accounting — committed
+        # artifact latencies depend on it).
+        stages.append(Stage(
+            op="allreduce", algorithm=outer_alg, axis=outer_axis,
+            axis_size=pods, n_bytes=chunk,
+            wire_bytes=reducers.wire_bytes(outer_alg, chunk, pods),
+            predicted_s=cost_model.allreduce_latency(
+                outer_alg, n_bytes / d, pods, link=inter, gamma=gamma)))
+    else:
+        stages.append(_flat_allreduce_stage(
+            outer_alg, outer_codec, outer_axis, pods, chunk, inter, gamma,
+            wire_itemsize))
     if d > 1:
         stages.append(Stage(
             op="all_gather", algorithm=inner_alg, axis=inner_axis,
-            axis_size=d, n_bytes=chunk, wire_bytes=level_bytes,
+            axis_size=d, n_bytes=chunk, wire_bytes=level_wire,
             predicted_s=(d - 1) * intra.alpha_s
-            + n_bytes * frac_d * intra.beta))
+            + level_beta_bytes * intra.beta + quant_toll,
+            codec=inner_eff))
     return tuple(stages)
 
 
 def strategy_latency(strategy: str, n_bytes: float,
                      axis_sizes: Sequence[int],
-                     intra=cost_model.ICI, inter=cost_model.DCN) -> float:
+                     intra=cost_model.ICI, inter=cost_model.DCN,
+                     codec: str = "none",
+                     wire_itemsize: int = 4) -> float:
     """Cost-model latency of one allreduce of ``n_bytes`` with
     ``strategy`` over ``axis_sizes`` (outermost first) — the stage sum
     of the decomposition tree; the selector's argmin objective."""
@@ -527,7 +627,8 @@ def strategy_latency(strategy: str, n_bytes: float,
     names = tuple(f"ax{i}" for i in range(len(sizes)))
     return sum(st.predicted_s
                for st in decompose(strategy, int(n_bytes), names, sizes,
-                                   intra=intra, inter=inter))
+                                   intra=intra, inter=inter, codec=codec,
+                                   wire_itemsize=wire_itemsize))
 
 
 # ---------------------------------------------------------------------------
@@ -553,6 +654,11 @@ class ScheduleRequest:
     switch_points: tuple[int, ...]
     placement: str
     link_key: tuple                # (intra α, intra bw, inter α, inter bw)
+    # FULL codec identity — the spec string (kind), not an itemsize:
+    # int8 and fp8_e4m3 share itemsize 1 and would alias under the
+    # wire-itemsize key scheme (pinned in tests/test_wire_dtype.py).
+    codec: str = "none"
+    error_feedback: bool = False
 
     def fingerprint(self) -> Hashable:
         # NOT dataclasses.astuple: that deep-copies every field, and a
@@ -560,7 +666,8 @@ class ScheduleRequest:
         return (self.treedef, self.shapes, self.dtypes, self.groups_key,
                 self.threshold_bytes, self.fuse, self.wire_dtype,
                 self.axis_names, self.axis_sizes, self.strategy_context,
-                self.switch_points, self.placement, self.link_key)
+                self.switch_points, self.placement, self.link_key,
+                self.codec, self.error_feedback)
 
 
 def _tree_meta(tree, groups):
@@ -580,6 +687,7 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
          groups=None, wire_dtype: str = "float32",
          align_buckets: bool = True, placement: str = "post_backward",
          intra=cost_model.ICI, inter=cost_model.DCN,
+         codec: str = "none", error_feedback: bool = False,
          cache=None) -> ReduceSchedule:
     """Resolve ``tree`` (arrays or ShapeDtypeStructs) into a
     :class:`ReduceSchedule` — the ONE path from config to executable
@@ -603,6 +711,10 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
     inter = cost_model.resolve_link(inter)
     wire_dtype = str(jnp.dtype(wire_dtype))
     wire_itemsize = jnp.dtype(wire_dtype).itemsize
+    codec = codec or "none"
+    codec_mod.validate_spec(codec)
+    if error_feedback and codec == "none":
+        raise ValueError("error_feedback requires a wire codec")
 
     switch: tuple[int, ...] = ()
     if selector is not None and fuse and align_buckets:
@@ -629,7 +741,8 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
                 strat = normalize_strategy(strategy, len(names))
                 predicted = None
             stages = decompose(strat, n_bytes, names, sizes,
-                               intra=intra, inter=inter)
+                               intra=intra, inter=inter, codec=codec,
+                               wire_itemsize=wire_itemsize)
             if predicted is None:
                 predicted = sum(st.predicted_s for st in stages)
             buckets.append(BucketSchedule(
@@ -640,7 +753,8 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
         return ReduceSchedule(
             axis_names=names, axis_sizes=sizes, wire_dtype=wire_dtype,
             placement=placement, threshold_bytes=int(threshold_bytes),
-            switch_points=switch, buckets=tuple(buckets), plan=fplan)
+            switch_points=switch, buckets=tuple(buckets), codec=codec,
+            error_feedback=error_feedback, plan=fplan)
 
     if cache is None:
         return _resolve()
@@ -652,7 +766,8 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
         strategy_context=strategy_context, switch_points=switch,
         placement=placement,
         link_key=(intra.alpha_s, intra.bandwidth,
-                  inter.alpha_s, inter.bandwidth))
+                  inter.alpha_s, inter.bandwidth),
+        codec=codec, error_feedback=error_feedback)
     return cache.resolve(request, _resolve)
 
 
@@ -666,7 +781,8 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
               intra=cost_model.ICI, inter=cost_model.DCN,
               latency_fn=None, wire_dtype: str = "float32",
               placement: str = "post_backward",
-              threshold_bytes: int = 0) -> ReduceSchedule:
+              threshold_bytes: int = 0,
+              codec: str = "none") -> ReduceSchedule:
     """A DETACHED schedule for an analytic model's bucket list (the
     experiment matrix's stand-in for a FusionPlan): bucket i is the
     i-th variable-group from the START of the network, so readiness is
@@ -681,12 +797,15 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
          else tuple(f"ax{i}" for i in range(len(sizes))))
     strat = normalize_strategy(strategy, len(names))
     itemsize = jnp.dtype(wire_dtype).itemsize
+    codec = codec or "none"
+    codec_mod.validate_spec(codec)
     n = len(tuple(bucket_bytes))
     buckets = []
     for i, b in enumerate(bucket_bytes):
         n_bytes = int(b)
         stages = decompose(strat, n_bytes, names, sizes,
-                           intra=intra, inter=inter)
+                           intra=intra, inter=inter, codec=codec,
+                           wire_itemsize=itemsize)
         predicted = float(latency_fn(n_bytes)) if latency_fn is not None \
             else sum(st.predicted_s for st in stages)
         buckets.append(BucketSchedule(
@@ -697,4 +816,4 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
         axis_names=names, axis_sizes=sizes,
         wire_dtype=str(jnp.dtype(wire_dtype)), placement=placement,
         threshold_bytes=int(threshold_bytes), switch_points=(),
-        buckets=tuple(buckets), plan=None)
+        buckets=tuple(buckets), codec=codec, plan=None)

@@ -42,6 +42,7 @@ import json
 import math
 from typing import Hashable, Mapping, Sequence
 
+from . import codec as codec_mod
 from . import cost_model, schedule as schedule_mod
 
 # JSON tuning-table schema tag (bump on breaking change).
@@ -76,19 +77,24 @@ class Choice:
 def predict_latency(strategy: str, n_bytes: float,
                     axis_sizes: Sequence[int],
                     link: cost_model.LinkParams = cost_model.ICI,
-                    inter_link: cost_model.LinkParams = cost_model.DCN
-                    ) -> float:
+                    inter_link: cost_model.LinkParams = cost_model.DCN,
+                    codec: str = "none",
+                    wire_itemsize: int = 4) -> float:
     """Cost-model latency of ``strategy`` (flat, composed, or the
     ``hierarchical`` alias) for one allreduce of ``n_bytes`` over
     ``axis_sizes`` (outermost/pod axis first, matching the aggregator's
     ``dp_axes``) — the stage sum of the schedule IR's decomposition
-    tree (``schedule.strategy_latency``)."""
+    tree (``schedule.strategy_latency``).  ``codec`` shrinks the β term
+    to the encoded bytes and adds the quantize toll (core/codec.py) on
+    the algorithms that can carry it."""
     sizes = tuple(int(s) for s in axis_sizes)
     if len(sizes) > 2:
         raise ValueError(f"selector supports 1- or 2-axis meshes, "
                          f"got {sizes}")
     return schedule_mod.strategy_latency(strategy, n_bytes, sizes,
-                                         intra=link, inter=inter_link)
+                                         intra=link, inter=inter_link,
+                                         codec=codec,
+                                         wire_itemsize=wire_itemsize)
 
 
 # ---------------------------------------------------------------------------
@@ -126,13 +132,23 @@ class AnalyticSelector(Selector):
     mode = "analytic"
 
     def __init__(self, link=cost_model.ICI, inter_link=cost_model.DCN,
-                 candidates: Sequence[str] = DEFAULT_CANDIDATES):
+                 candidates: Sequence[str] = DEFAULT_CANDIDATES,
+                 codec: str = "none", wire_itemsize: int = 4):
         self.link = resolve_link(link)
         self.inter_link = resolve_link(inter_link)
         for s in candidates:
             if not schedule_mod.is_strategy(s):
                 raise ValueError(f"unknown candidate strategy {s!r}")
         self.candidates = tuple(candidates)
+        # The wire codec the schedules will run under: the argmin must
+        # price the ENCODED β term (and the quantize toll) or it would
+        # keep the float32 crossovers while executing 1-byte wires.
+        # Candidates that cannot carry the codec (psum) are priced
+        # uncoded — the argmin genuinely trades compression off against
+        # the vendor collective.
+        self.codec = codec or "none"
+        codec_mod.validate_spec(self.codec)
+        self.wire_itemsize = int(wire_itemsize)
         self._switch_cache: dict = {}
 
     def candidates_for(self, axis_sizes: Sequence[int]) -> tuple[str, ...]:
@@ -148,7 +164,8 @@ class AnalyticSelector(Selector):
         best, best_t = None, math.inf
         for s in self.candidates_for(sizes):
             t = predict_latency(s, n_bytes, sizes, self.link,
-                                self.inter_link)
+                                self.inter_link, codec=self.codec,
+                                wire_itemsize=self.wire_itemsize)
             if t < best_t:            # strict: first-listed wins ties
                 best, best_t = s, t
         return Choice(best, best_t)
@@ -200,9 +217,14 @@ class AnalyticSelector(Selector):
         return segments
 
     def fingerprint(self) -> Hashable:
-        return ("analytic", self.link.alpha_s, self.link.bandwidth,
-                self.inter_link.alpha_s, self.inter_link.bandwidth,
-                self.candidates)
+        fp = ("analytic", self.link.alpha_s, self.link.bandwidth,
+              self.inter_link.alpha_s, self.inter_link.bandwidth,
+              self.candidates)
+        # Appended only when coded, so every pre-codec fingerprint —
+        # and the plan-cache keys derived from it — is unchanged.
+        if self.codec != "none":
+            fp = fp + (self.codec, self.wire_itemsize)
+        return fp
 
 
 class EmpiricalSelector(Selector):
@@ -210,9 +232,19 @@ class EmpiricalSelector(Selector):
 
     mode = "empirical"
 
-    def __init__(self, table: Mapping):
+    def __init__(self, table: Mapping, codec: str = "none"):
         validate_table(table)
         self.table = table
+        self.codec = codec or "none"
+        codec_mod.validate_spec(self.codec)
+        # Entries measured under a wire codec carry a "codec" field;
+        # selection reads the rows measured under OUR codec, falling
+        # back to the uncoded rows when the table predates the codec
+        # (a committed codec-less table must keep resolving).
+        have = {e.get("codec", "none") for e in table["entries"]}
+        src = self.codec if self.codec in have else \
+            ("none" if "none" in have else sorted(have)[0])
+        self._codec_rows = src
         # flat entries: p -> sorted [(bytes, {strategy: us})];
         # multi-axis entries (an "axes" list, outermost/pod first) are
         # keyed by the exact axes tuple — the composed-schedule rows of
@@ -220,6 +252,8 @@ class EmpiricalSelector(Selector):
         self._rows: dict[int, list[tuple[int, dict]]] = {}
         self._axes_rows: dict[tuple[int, ...], list[tuple[int, dict]]] = {}
         for e in table["entries"]:
+            if e.get("codec", "none") != src:
+                continue
             row = (int(e["bytes"]), dict(e["latency_us"]))
             if e.get("axes"):
                 self._axes_rows.setdefault(
@@ -294,6 +328,8 @@ class EmpiricalSelector(Selector):
         return tuple(pts)
 
     def fingerprint(self) -> Hashable:
+        if self.codec != "none":
+            return ("empirical", self._fp, self.codec)
         return ("empirical", self._fp)
 
 
@@ -329,10 +365,17 @@ def validate_table(table: Mapping) -> None:
                                  f"positive ints: {e!r}")
             if math.prod(axes) != p:
                 raise ValueError(f"entry 'axes' {axes} product != p={p}")
-        key = (p, tuple(axes) if axes else None, b)
+        codec = e.get("codec", "none")
+        if not isinstance(codec, str):
+            raise ValueError(f"entry 'codec' must be a string: {e!r}")
+        try:
+            codec_mod.validate_spec(codec)
+        except ValueError as err:
+            raise ValueError(f"entry (p={p}, bytes={b}): {err}")
+        key = (p, tuple(axes) if axes else None, b, codec)
         if key in seen:
-            raise ValueError(f"duplicate (p={p}, axes={axes}, bytes={b}) "
-                             f"entry")
+            raise ValueError(f"duplicate (p={p}, axes={axes}, bytes={b}, "
+                             f"codec={codec}) entry")
         seen.add(key)
         if not isinstance(lat, Mapping) or not lat:
             raise ValueError(f"entry 'latency_us' must be a non-empty "
@@ -391,12 +434,16 @@ def build_analytic_table(ps: Sequence[int], sizes: Sequence[int],
 
 def crossover_bytes(p: int, link=cost_model.ICI,
                     candidates: Sequence[str] = DEFAULT_CANDIDATES,
-                    lo: int = 1, hi: int = 1 << 32) -> float:
+                    lo: int = 1, hi: int = 1 << 32,
+                    codec: str = "none") -> float:
     """Message size at which the analytic winner stops being the
     latency-optimal ``rhd_rsa``: 0 if RHD never wins (p=3, where the
     pre/post fold erases its step advantage), ``inf`` if it always wins
-    (power-of-two p, where RHD dominates ring at every size)."""
-    sel = AnalyticSelector(link=link, candidates=candidates)
+    (power-of-two p, where RHD dominates ring at every size).  A wire
+    codec shrinks every coded candidate's β term while α stays put, so
+    RHD stays competitive to LARGER messages: crossover(none) <=
+    crossover(int8) at non-pow2 p (pinned in tests/test_selector.py)."""
+    sel = AnalyticSelector(link=link, candidates=candidates, codec=codec)
     if sel.select(lo, (p,)) != "rhd_rsa":
         return 0.0
     if sel.select(hi, (p,)) == "rhd_rsa":
@@ -413,18 +460,22 @@ def crossover_bytes(p: int, link=cost_model.ICI,
 
 def make_selector(mode: str = "analytic", table=None,
                   link=cost_model.ICI, inter_link=cost_model.DCN,
-                  candidates: Sequence[str] = DEFAULT_CANDIDATES
+                  candidates: Sequence[str] = DEFAULT_CANDIDATES,
+                  codec: str = "none", wire_itemsize: int = 4
                   ) -> Selector:
     """Factory used by the aggregator: ``table`` may be a path or a
-    parsed dict (empirical mode only)."""
+    parsed dict (empirical mode only).  ``codec`` makes the argmin
+    price the coded wire (analytic) or read the codec'd table rows
+    (empirical)."""
     if mode == "analytic":
         return AnalyticSelector(link=link, inter_link=inter_link,
-                                candidates=candidates)
+                                candidates=candidates, codec=codec,
+                                wire_itemsize=wire_itemsize)
     if mode == "empirical":
         if table is None:
             raise ValueError("empirical selector mode needs a tuning table "
                              "(selector_table=path or dict)")
         if isinstance(table, str):
             table = load_table(table)
-        return EmpiricalSelector(table)
+        return EmpiricalSelector(table, codec=codec)
     raise ValueError(f"unknown selector mode {mode!r}; one of {MODES}")

@@ -237,6 +237,17 @@ ANALYSIS_WORKERS = WORKERS + (512,)
 ANALYSIS_COMPOSED_MESHES = ((2, 16), (4, 8), (2, 256), (3, 8))
 ANALYSIS_FLAT3_MESH = (2, 16, 16)
 
+# Codec'd schedules the static verifier must prove sound (SV008):
+# every wire codec with a derivable bound, on flat and composed meshes,
+# including the 512-chip production mesh only the static path reaches.
+# (strategy, axis_sizes, axis_names, codec spec)
+ANALYSIS_CODEC_CELLS = (
+    ("ring_rsa", (8,), ("data",), "int8"),
+    ("ring_rsa×rhd_rsa", (4, 8), ("pod", "data"), "int8×bf16"),
+    ("rhd_rsa", (64,), ("data",), "fp8_e4m3"),
+    ("ring_rsa×rhd_rsa", (2, 256), ("pod", "data"), "fp8_e4m3"),
+)
+
 
 def analysis_cells(designs: Sequence[str] = DESIGNS,
                    models: Sequence[str] = MODELS,
@@ -274,6 +285,11 @@ def analysis_cells(designs: Sequence[str] = DESIGNS,
                schedule_mod.synthetic(sizes, strat, ANALYSIS_FLAT3_MESH,
                                       ("pod", "data", "model"),
                                       intra=prof.link))
+    for strat, mesh_sizes, names, codec in ANALYSIS_CODEC_CELLS:
+        mesh = "x".join(str(s) for s in mesh_sizes)
+        yield (f"codec/{strat}/{mesh}/{codec}",
+               schedule_mod.synthetic(sizes, strat, mesh_sizes, names,
+                                      intra=prof.link, codec=codec))
 
 
 # -- matrix execution -------------------------------------------------------
@@ -294,6 +310,10 @@ def _row(point: ExperimentPoint, prof: HwProfile, backend: str,
         "comm_s": tl.comm_s, "exposed_comm_s": tl.exposed_comm_s,
         "hidden_frac": tl.overlap_fraction,
         "n_buckets": len(tl.events),
+        # the wire-codec spec the cell's schedule was resolved under
+        # ("none" for the whole characterization grid today — the field
+        # exists so codec'd rows are first-class, not a side channel)
+        "codec": sched.codec if sched is not None else "none",
     }
     if sched is not None and sched.buckets:
         # the same repro/schedule/v1 record the dryrun writes, grouped

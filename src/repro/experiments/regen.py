@@ -35,6 +35,7 @@ _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
                                      "..", "..", ".."))
 MD_ARTIFACT = os.path.join(_ROOT, "EXPERIMENTS.md")
 JSON_ARTIFACT = os.path.join(_ROOT, "BENCH_experiments.json")
+ALLREDUCE_ARTIFACT = os.path.join(_ROOT, "BENCH_allreduce.json")
 
 MICRO_SIZES = (8, 1024, 64 * 1024, 1 << 20, 16 << 20, 256 << 20)
 MICRO_P = 16
@@ -287,6 +288,42 @@ def check(md_path: str = MD_ARTIFACT,
     failing = [c["key"] for c in rec["claims"] if c["status"] != "PASS"]
     if failing:
         problems.append(f"claims outside their bands: {failing}")
+    problems += check_allreduce_artifact()
+    return problems
+
+
+def check_allreduce_artifact(path: str = ALLREDUCE_ARTIFACT) -> list[str]:
+    """Currency of the MEASURED allreduce trajectory artifact.  Its
+    wall-clock values cannot be re-derived deterministically, so
+    currency means structure: it loads, validates against the selector
+    table schema, and carries the wire-codec sweep (codec'd entries
+    plus the measured-vs-modeled speedup report with every band cell
+    in band) — refreshed by a full-grid
+    ``benchmarks/allreduce_micro.py --emit-table`` run."""
+    from repro.core import selector as sel
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{name}: unreadable ({e})"]
+    problems = []
+    try:
+        sel.validate_table(table)
+    except (ValueError, KeyError) as e:
+        problems.append(f"{name}: schema-invalid ({e})")
+        return problems
+    if not any(e.get("codec", "none") != "none"
+               for e in table.get("entries", ())):
+        problems.append(f"{name}: no codec'd entries (stale pre-codec "
+                        f"sweep; rerun the full measured grid)")
+    codec_meta = table.get("meta", {}).get("codec")
+    if not codec_meta:
+        problems.append(f"{name}: meta.codec speedup report missing")
+    elif not codec_meta.get("all_within_band"):
+        problems.append(f"{name}: measured codec speedup outside the "
+                        f"cost model's band "
+                        f"(x{codec_meta.get('band_factor')})")
     return problems
 
 

@@ -30,7 +30,8 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                 fusion_mb: float, sharding_aware: bool = True,
                 remat: bool = False, wire_dtype: str = "",
                 spec_overrides=None, selector_mode: str = "analytic",
-                selector_table: str = "", overlap: bool = False):
+                selector_table: str = "", overlap: bool = False,
+                codec: str = "", error_feedback: bool = False):
     """Returns (jitted_fn, arg_structs, aux); aux carries the
     GradientAggregator (train shapes only) so the caller can report the
     resolved per-bucket schedule."""
@@ -64,7 +65,9 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                                         wire_dtype=wire_dtype,
                                         selector_mode=selector_mode,
                                         selector_table=selector_table,
-                                        overlap=overlap),
+                                        overlap=overlap,
+                                        codec=codec,
+                                        error_feedback=error_feedback),
             dp_axes=dp_axes)
         step, shardings = make_train_step(model, opt, mesh, cfg, specs,
                                           donate=False)
@@ -133,7 +136,8 @@ def _static_verify(arch: str, shape_name: str, mesh, strategy: str,
                    fusion_mb: float, sharding_aware: bool,
                    remat: bool = False, wire_dtype: str = "",
                    spec_overrides=None, selector_mode: str = "analytic",
-                   selector_table: str = "", overlap: bool = False) -> dict:
+                   selector_table: str = "", overlap: bool = False,
+                   codec: str = "", error_feedback: bool = False) -> dict:
     """Resolve the config's ReduceSchedule WITHOUT lowering or
     compiling and run the static verifier (repro.analysis) over it —
     the path that proves a >32-device schedule sound even though
@@ -162,7 +166,8 @@ def _static_verify(arch: str, shape_name: str, mesh, strategy: str,
                          wire_dtype=wire_dtype,
                          selector_mode=selector_mode,
                          selector_table=selector_table,
-                         overlap=overlap), dp_axes)
+                         overlap=overlap, codec=codec,
+                         error_feedback=error_feedback), dp_axes)
     axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
     sched = agg.resolve(params, axis_sizes,
                         groups=param_groups(params))
@@ -175,7 +180,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             sharding_aware: bool = True, verbose: bool = True,
             remat: bool = False, wire_dtype: str = "",
             spec_overrides=None, selector_mode: str = "analytic",
-            selector_table: str = "", overlap: bool = False) -> dict:
+            selector_table: str = "", overlap: bool = False,
+            codec: str = "", error_feedback: bool = False) -> dict:
     import jax
     from repro.configs import SHAPES, get_spec, shape_supported
     from repro.core.compat import use_mesh
@@ -189,6 +195,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
            "strategy": strategy, "fusion_mb": fusion_mb,
            "sharding_aware": sharding_aware, "remat": remat,
            "wire_dtype": wire_dtype, "overlap": overlap,
+           "codec": codec or "none", "error_feedback": error_feedback,
            "spec_overrides": spec_overrides or {}}
     if not ok:
         rec.update(status="SKIP", reason=why)
@@ -207,7 +214,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                           spec_overrides=spec_overrides,
                                           selector_mode=selector_mode,
                                           selector_table=selector_table,
-                                          overlap=overlap)
+                                          overlap=overlap, codec=codec,
+                                          error_feedback=error_feedback)
             lowered = step.lower(*args)
             t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
@@ -306,7 +314,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                     sharding_aware, remat=remat, wire_dtype=wire_dtype,
                     spec_overrides=spec_overrides,
                     selector_mode=selector_mode,
-                    selector_table=selector_table, overlap=overlap)
+                    selector_table=selector_table, overlap=overlap,
+                    codec=codec, error_feedback=error_feedback)
                 rec["analysis"] = analysis
                 rec["verified_static"] = analysis["n_errors"] == 0
             except Exception as ve:  # noqa: BLE001 — recorded, not raised
@@ -349,6 +358,12 @@ def main():
     ap.add_argument("--no-sharding-aware", action="store_true")
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--wire-dtype", default="")
+    ap.add_argument("--codec", default="",
+                    help="wire codec spec (core/codec.py): bf16 | int8 | "
+                         "fp8_e4m3, or '<inner>x<outer>' per mesh level")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry the quantization residual into the next "
+                         "step (requires --codec)")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--override", action="append", default=[],
                     help="spec override k=v (int/float/bool literal)")
@@ -382,7 +397,8 @@ def main():
                       spec_overrides=overrides,
                       selector_mode=args.selector_mode,
                       selector_table=args.selector_table,
-                      overlap=args.overlap)
+                      overlap=args.overlap, codec=args.codec,
+                      error_feedback=args.error_feedback)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

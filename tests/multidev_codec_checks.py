@@ -1,0 +1,306 @@
+"""Wire-codec numerics wall (DESIGN.md §3.10), run as a SUBPROCESS by
+test_reducers_multidev.py with 8 host devices.
+
+Pins the codec subsystem end to end, against EXECUTED schedules:
+
+  * p ∈ {3, 4, 6, 8} × {ring_rsa, rhd_rsa}: an int8-wire (and, where
+    the jax has the dtype, fp8_e4m3-wire) allreduce lands within the
+    DERIVED tolerance (``verify.codec_tolerance`` of the very schedule
+    that ran — not a hand-tuned rtol) of the bit-exact ``psum``
+    reference, and the quantization error is nonzero (the codec really
+    was on the wire);
+  * the bf16 codec is bit-identical to the PR-4 ``wire_dtype="bfloat16"``
+    path on bf16-representable data at power-of-two p — both paths
+    round at the same points, so when every rounding is the identity
+    the outputs (and the psum reference) agree to the bit;
+  * error feedback: the first-step residual equals the quantization
+    error exactly (≤ absmax/254 for int8, nonzero on continuous data);
+  * a REAL auto train step (smollm-360m reduced) mixes codec'd and
+    uncodec'd buckets in one schedule — the forced empirical table
+    sends the big bucket to vendor psum (codec degrades to "none": no
+    ppermute hop to encode around) and the small fused bucket to
+    rhd_rsa:int8 — and the loss still decreases;
+  * HLO byte exactness: on divisible shapes the compiled step's charged
+    ``collective-permute`` bytes equal Σ per-stage ENCODED IR wire
+    bytes to the BYTE (payload at codec itemsize + one f32 scale scalar
+    per hop), and ``roofline.wire_check`` (HL001) passes.
+
+Exit code 0 = all checks passed."""
+from devflags import force_host_devices
+
+force_host_devices(8)
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis import verify
+from repro.core import AggregatorConfig, GradientAggregator, PlanCache
+from repro.core import codec as codec_mod
+from repro.core import selector as sel
+from repro.core.compat import shard_map
+from repro.launch import hlo_analysis as ha
+from repro.launch import roofline
+
+
+def run_agg(cfg, mesh, grads):
+    agg = GradientAggregator(cfg, ("data",), cache=PlanCache())
+    fn = jax.jit(shard_map(lambda g: agg(g), mesh, in_specs=P("data"),
+                           out_specs=P("data"), axis_names={"data"},
+                           check_vma=False))
+    return fn(grads), agg, fn
+
+
+def float_grads(p, rng):
+    """Continuous float32 grads (two scales an order apart, so the
+    bucket absmax is dominated by one leaf): every quantizer must
+    produce NONZERO error — a silent fall-through to the uncoded path
+    cannot pass the err > 0 witness."""
+    return {
+        "w": rng.standard_normal((p * 64, 4)).astype(np.float32),
+        "b": (rng.standard_normal(p * 32) * 10.0).astype(np.float32),
+    }
+
+
+def check_quantized_within_derived_bound():
+    """The SV008 contract, executed: |codec'd mean - psum mean| <=
+    codec_tolerance(schedule) · absmax(input) for every leaf."""
+    devs = jax.devices()
+    codecs = ["int8"]
+    if codec_mod.available("fp8_e4m3"):
+        codecs.append("fp8_e4m3")
+    rng = np.random.default_rng(0)
+    for p in (3, 4, 6, 8):
+        mesh = Mesh(np.array(devs[:p]), ("data",))
+        grads = {k: jnp.asarray(v) for k, v in float_grads(p, rng).items()}
+        absmax = max(float(jnp.max(jnp.abs(v))) for v in grads.values())
+        out_ref, _, _ = run_agg(
+            AggregatorConfig(strategy="psum"), mesh, grads)
+        for strat in ("ring_rsa", "rhd_rsa"):
+            for cname in codecs:
+                cfg = AggregatorConfig(strategy=strat, codec=cname)
+                out, agg, _ = run_agg(cfg, mesh, grads)
+                sched = agg.last_schedule
+                stage_codecs = {st.codec for b in sched.buckets
+                                for st in b.stages}
+                assert stage_codecs == {cname}, \
+                    f"p={p} {strat}:{cname}: schedule stages carry " \
+                    f"{stage_codecs}, codec not on the wire"
+                tol = verify.codec_tolerance(sched)
+                assert tol is not None and tol > 0, \
+                    f"p={p} {strat}:{cname}: no derivable tolerance"
+                worst = 0.0
+                for k in grads:
+                    err = float(jnp.max(jnp.abs(
+                        out[k].astype(jnp.float32)
+                        - out_ref[k].astype(jnp.float32))))
+                    worst = max(worst, err)
+                    # bound is for the SUM, relative to the bucket
+                    # input absmax; the mean path only divides by p,
+                    # so tol·absmax is strictly looser
+                    assert err <= tol * absmax, \
+                        f"p={p} {strat}:{cname} leaf {k!r}: err {err} " \
+                        f"> derived bound {tol * absmax} " \
+                        f"(tol={tol}, absmax={absmax})"
+                assert worst > 0.0, \
+                    f"p={p} {strat}:{cname}: zero error on continuous " \
+                    f"data — the quantizer never ran"
+    print("quantized allreduce within derived bound ok "
+          f"(codecs {codecs})")
+
+
+def int_grads_bf16(p):
+    """Integer-valued float32 grads in [0, 8): values, all partial sums
+    (≤ 7p ≤ 56) and the /p means (p power of two) are EXACTLY
+    representable in bfloat16, so every rounding in both bf16 paths is
+    the identity and bit-equality is the bar."""
+    return {
+        "a": (jnp.arange(p * 48, dtype=jnp.float32) % 8.0)
+        .reshape(p * 16, 3),
+        "w": (jnp.arange(p * 512, dtype=jnp.float32) % 8.0),
+    }
+
+
+def check_bf16_codec_matches_wire_dtype():
+    """codec="bf16" (per-hop encode, f32 accumulation) vs the PR-4
+    wire_dtype="bfloat16" (whole-buffer cast): on bf16-exact data at
+    power-of-two p both are bit-identical to each other AND to psum."""
+    devs = jax.devices()
+    cases = [(4, "ring_rsa"), (8, "ring_rsa"), (8, "rhd_rsa")]
+    for p, strat in cases:
+        mesh = Mesh(np.array(devs[:p]), ("data",))
+        grads = int_grads_bf16(p)
+        out_codec, agg, _ = run_agg(
+            AggregatorConfig(strategy=strat, codec="bf16"), mesh, grads)
+        out_wire, _, _ = run_agg(
+            AggregatorConfig(strategy=strat, wire_dtype="bfloat16"),
+            mesh, grads)
+        out_ref, _, _ = run_agg(
+            AggregatorConfig(strategy="psum"), mesh, grads)
+        assert {st.codec for b in agg.last_schedule.buckets
+                for st in b.stages} == {"bf16"}
+        for k in grads:
+            a = np.asarray(out_codec[k].astype(jnp.float32))
+            b = np.asarray(out_wire[k].astype(jnp.float32))
+            r = np.asarray(out_ref[k].astype(jnp.float32))
+            assert (a == b).all(), \
+                f"p={p} {strat} leaf {k!r}: bf16 codec != wire_dtype " \
+                f"path bit-exactly"
+            assert (a == r).all(), \
+                f"p={p} {strat} leaf {k!r}: bf16 codec != psum on " \
+                f"bf16-exact data"
+    print("bf16 codec bit-identical to wire_dtype path ok")
+
+
+def check_error_feedback_residual():
+    """First EF step: the returned residual IS the quantization error
+    of q(g + 0) — nonzero on continuous data and ≤ half a quantization
+    step (absmax/254 for int8) elementwise."""
+    devs = jax.devices()
+    p = 8
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    rng = np.random.default_rng(1)
+    grads = {"w": jnp.asarray(
+        rng.standard_normal((p * 32, 4)).astype(np.float32))}
+    agg = GradientAggregator(
+        AggregatorConfig(strategy="ring_rsa", codec="int8",
+                         error_feedback=True),
+        ("data",), cache=PlanCache())
+
+    def f(g):
+        res = agg.init_residuals(g)
+        out, new_res = agg(g, residuals=res)
+        return out, new_res
+
+    fn = jax.jit(shard_map(f, mesh, in_specs=P("data"),
+                           out_specs=P("data"), axis_names={"data"},
+                           check_vma=False))
+    out, (r1,) = fn(grads)
+    r1 = np.asarray(r1)
+    # per-shard bound: each device quantized its own local buffer
+    local = np.asarray(grads["w"]).reshape(p, -1)
+    res = r1.reshape(p, -1)
+    for d in range(p):
+        step = np.max(np.abs(local[d])) / 254.0
+        got = np.max(np.abs(res[d]))
+        assert 0.0 < got <= step * (1 + 1e-5), \
+            f"dev {d}: EF residual {got} outside (0, absmax/254" \
+            f"={step}]"
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+    print("error-feedback residual ok")
+
+
+FORCED_SPLIT = 32 * 1024
+
+
+def forced_table(ps):
+    """Below 32KiB rhd_rsa "measures" fastest, above it psum — so the
+    auto step mixes a codec'd explicit schedule (rhd:int8) with the
+    vendor collective (psum, which has no hop to encode around and
+    degrades to codec "none")."""
+    entries = []
+    for p in ps:
+        entries.append({"p": p, "bytes": 0,
+                        "latency_us": {"rhd_rsa": 1.0, "psum": 5.0,
+                                       "ring_rsa": 9.0}})
+        entries.append({"p": p, "bytes": FORCED_SPLIT,
+                        "latency_us": {"psum": 1.0, "rhd_rsa": 5.0,
+                                       "ring_rsa": 9.0}})
+    return {"schema": sel.TABLE_SCHEMA, "entries": entries}
+
+
+def check_auto_train_mixes_coded_and_uncoded():
+    """strategy='auto' + codec='int8' drives a real multi-device train
+    step whose ONE schedule carries both codec'd (rhd:int8) and
+    uncodec'd (psum) buckets; the loss still decreases."""
+    from repro.configs import get_spec
+    from repro.core.compat import make_mesh
+    from repro.data.synthetic import SyntheticText
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train import TrainStepConfig, make_train_step
+
+    with tempfile.TemporaryDirectory() as td:
+        table_path = os.path.join(td, "table.json")
+        with open(table_path, "w") as f:
+            json.dump(forced_table((6,)), f)
+        mesh = make_mesh((6,), ("data",))
+        spec = get_spec("smollm-360m").reduced()
+        model = build_model(spec)
+        data = SyntheticText(spec.vocab_size, batch=6, seq_len=32)
+        opt = adamw(1e-3)
+        cfg = TrainStepConfig(
+            aggregator=AggregatorConfig(strategy="auto",
+                                        selector_mode="empirical",
+                                        selector_table=table_path,
+                                        codec="int8",
+                                        fusion_threshold_mb=0.02),
+            dp_axes=("data",))
+        step_fn, shardings = make_train_step(model, opt, mesh, cfg,
+                                             data.batch_at(0),
+                                             donate=False)
+        params = model.init(jax.random.PRNGKey(0))
+        state = opt.init(params)
+        losses = []
+        for i in range(12):
+            params, state, m = step_fn(params, state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        sched = shardings["aggregator"].last_schedule
+        per_bucket = [{st.codec for st in b.stages}
+                      for b in sched.buckets]
+        assert {"int8"} in per_bucket, \
+            f"no codec'd bucket in the auto schedule: {sched.render()}"
+        assert {"none"} in per_bucket, \
+            f"no uncodec'd (psum) bucket in the auto schedule: " \
+            f"{sched.render()}"
+        assert all(np.isfinite(losses)), losses
+        assert losses[-1] < losses[0], losses
+        print(f"auto train step mixes coded/uncoded ok: "
+              f"{sched.render()}, loss {losses[0]:.3f} -> "
+              f"{losses[-1]:.3f}")
+
+
+def check_hlo_bytes_match_encoded_ir():
+    """Byte-exact HLO cross-check: charged collective-permute bytes ==
+    Σ per-stage ENCODED wire bytes, and wire_check/HL001 passes.  The
+    shard (2048 elems) is divisible by p and by every ring chunk / RHD
+    half, so no padding blurs the equality; the scale scalars ride as
+    f32[] permutes the IR charges at 4 bytes/hop."""
+    devs = jax.devices()
+    p = 8
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    grads = {"w": jnp.arange(p * 2048, dtype=jnp.float32)}
+    for strat in ("ring_rsa", "rhd_rsa"):
+        for cname in ("int8", "bf16"):
+            cfg = AggregatorConfig(strategy=strat, codec=cname)
+            out, agg, fn = run_agg(cfg, mesh, grads)
+            sched = agg.last_schedule
+            predicted = sum(st.hlo_bytes for b in sched.buckets
+                            for st in b.stages
+                            if st.hlo_kind == "collective-permute")
+            txt = fn.lower(grads).compile().as_text()
+            assert "all-reduce(" not in txt, \
+                f"{strat}:{cname}: unexpected vendor all-reduce"
+            charged = ha.analyze(txt).collective_bytes
+            got = int(charged.get("collective-permute", 0))
+            assert got == predicted, \
+                f"{strat}:{cname}: HLO charges {got} permute bytes, " \
+                f"IR predicts {predicted} " \
+                f"({sched.render()})"
+            wc = roofline.wire_check(sched, charged)
+            assert wc["consistent"], f"{strat}:{cname}: {wc}"
+    print("HLO permute bytes == encoded IR wire bytes ok")
+
+
+if __name__ == "__main__":
+    check_quantized_within_derived_bound()
+    check_bf16_codec_matches_wire_dtype()
+    check_error_feedback_residual()
+    check_auto_train_mixes_coded_and_uncoded()
+    check_hlo_bytes_match_encoded_ir()
+    print("ALL CODEC CHECKS PASSED")

@@ -203,6 +203,76 @@ def test_sv007_latency_sensitive_fingerprint():
     assert rule_ids(base) == []
 
 
+def coded(strategy="ring_rsa", codec="int8", p=8):
+    return sm.synthetic([8 << 20], strategy, (p,), ("data",), codec=codec)
+
+
+def replace_stage(sched, **kw):
+    b = sched.buckets[0]
+    stages = (dataclasses.replace(b.stages[0], **kw),) + b.stages[1:]
+    return replace_bucket(sched, 0, stages=stages)
+
+
+def test_sv008_unknown_codec_has_no_bound():
+    """A codec the wire-identity table doesn't know cannot get a derived
+    error bound — the verifier must refuse it rather than pass it as
+    uncoded, and codec_tolerance (what the numerics walls divide by)
+    must refuse to produce a number."""
+    bad = replace_stage(coded(), codec="int4")
+    assert rule_ids(bad) == ["SV008"]
+    hits = [d for d in av.verify_schedule(bad) if d.rule_id == "SV008"]
+    assert hits[0].location == "bucket[0].stage[0]"
+    assert hits[0].severity == ERROR
+    assert "no derivable per-hop error bound" in hits[0].message
+    assert av.codec_tolerance(bad) is None
+
+
+def test_sv008_coded_wire_bytes_mismatch():
+    """Corrupting a codec'd stage's wire_bytes trips the SV008 encoded
+    re-derivation — and ONLY SV008: SV001 defers coded buckets to the
+    codec rule, so the mismatch can't double-report or slip through."""
+    s = coded()
+    bad = replace_stage(s, wire_bytes=s.buckets[0].stages[0].wire_bytes + 64)
+    assert rule_ids(bad) == ["SV008"]
+    hits = [d for d in av.verify_schedule(bad) if d.rule_id == "SV008"]
+    assert "on the wire" in hits[0].message
+
+
+def test_sv008_codec_on_non_permute_algorithm():
+    """Vendor psum exposes no per-hop ppermute to re-quantize at — a
+    codec'd psum stage is unexecutable and must be rejected statically
+    (the planner refuses to build one; the verifier catches hand-edited
+    or deserialized IR)."""
+    bad = replace_stage(sm.synthetic([8 << 20], "psum", (8,), ("data",)),
+                        codec="int8")
+    assert rule_ids(bad) == ["SV008"]
+    hits = [d for d in av.verify_schedule(bad) if d.rule_id == "SV008"]
+    assert "ppermute" in hits[0].message
+
+
+def test_sv008_clean_coded_schedules_and_summary_tolerance():
+    """Every registered codec verifies clean on both ppermute
+    algorithms, the composed per-level mix verifies clean, and
+    verify_summary carries the derived codec_tolerance the multidev
+    wall asserts against (None/0 would make that wall vacuous)."""
+    for spec in ("bf16", "int8", "fp8_e4m3"):
+        for strat in ("ring_rsa", "rhd_rsa"):
+            s = coded(strategy=strat, codec=spec)
+            assert rule_ids(s) == [], (strat, spec)
+            tol = av.codec_tolerance(s)
+            assert tol is not None and tol > 0, (strat, spec)
+    comp = sm.synthetic([4 << 20], "ring_rsa×rhd_rsa", (4, 8),
+                        ("pod", "data"), codec="int8×bf16")
+    assert rule_ids(comp) == []
+    rec = av.verify_summary(coded(), context="unit")
+    assert rec["codec_tolerance"] == pytest.approx(
+        av.codec_tolerance(coded()))
+    assert rec["n_errors"] == 0
+    json.dumps(rec)
+    # uncoded schedules report codec_tolerance 0.0, never None
+    assert av.verify_summary(flat())["codec_tolerance"] == 0.0
+
+
 # ---------------------------------------------------------------------------
 # clean sweep: everything the planner/matrix produces verifies
 # ---------------------------------------------------------------------------
@@ -220,6 +290,11 @@ def test_every_matrix_cell_verifies_clean():
     assert any(l.startswith("composed/") and "/2x256" in l
                for l in labels)
     assert any(l.startswith("flat3/") for l in labels)
+    # every codec'd analysis cell (incl. the 2x256 production mesh
+    # under fp8) is part of the clean sweep above
+    for strat, sizes, _, codec in matrix.ANALYSIS_CODEC_CELLS:
+        mesh = "x".join(str(s) for s in sizes)
+        assert f"codec/{strat}/{mesh}/{codec}" in labels
     # and the full characterization grid
     for d in matrix.DESIGNS:
         for p in matrix.WORKERS:

@@ -1,0 +1,139 @@
+"""Wire codecs (core/codec.py): hypothesis property tests.
+
+The three properties every codec must satisfy for the derived-tolerance
+wall to be sound:
+
+  1. single round-trip error is within the per-quantize bound
+     ``eps(codec) · absmax(x)`` — across the nasty regimes: all-zero
+     buffers (the absmax zero-guard), denormal-scale values, and a
+     single outlier that crushes everything else onto few int8 levels;
+  2. error feedback telescopes EXACTLY: over k steps the residual
+     carries every bit the quantizer dropped, so the emitted sum equals
+     the true sum up to the LAST residual (bounded, not growing in k);
+  3. ``codec.encoded_bytes`` equals its closed form
+     ``(n_bytes // wire_itemsize) · itemsize``.
+
+Skipped cleanly when ``hypothesis`` (dev extra, requirements-dev.txt)
+is not installed; the multidev numerics wall
+(tests/multidev_codec_checks.py) exercises the same bounds end-to-end
+through the executed schedules either way.
+"""
+import numpy as np
+import pytest
+
+from repro.core import codec
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+CODED = [c for c in codec.CODECS if c != "none" and codec.available(c)]
+
+
+def _buffer(draw_floats, n, regime, rng):
+    if regime == "zero":
+        return np.zeros(n, np.float32)
+    if regime == "denormal":
+        return (rng.standard_normal(n) * 1e-38).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    if regime == "outlier":
+        x[rng.integers(0, n)] = 1e4
+    return x
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(CODED),
+    n=st.integers(1, 4096),
+    regime=st.sampled_from(["normal", "zero", "denormal", "outlier"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_roundtrip_within_per_quantize_bound(name, n, regime, seed):
+    rng = np.random.default_rng(seed)
+    x = _buffer(None, n, regime, rng)
+    rt = np.asarray(codec.roundtrip(name, x))
+    assert np.all(np.isfinite(rt)), f"{name} produced non-finite values"
+    absmax = float(np.max(np.abs(x)))
+    err = float(np.max(np.abs(rt - x)))
+    if absmax == 0.0:
+        assert err == 0.0           # zero-guard: zeros survive exactly
+    elif absmax < np.finfo(np.float32).tiny * 512:
+        # subnormal regime: the absmax/denominator scale itself goes
+        # subnormal and the RELATIVE bound degrades to O(1) — but the
+        # absolute error stays below ~2·absmax < 2^-116, i.e. no
+        # gradient signal distinguishable from zero in f32 is lost
+        assert err <= 2.0 * absmax * (1 + 1e-6), \
+            f"{name}/{regime}: subnormal err {err} > 2·absmax {absmax}"
+    else:
+        c = codec.get(name)
+        assert err <= c.eps * absmax * (1 + 1e-6), \
+            f"{name}/{regime}: err {err} > eps·absmax {c.eps * absmax}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(CODED),
+    n=st.integers(1, 1024),
+    k=st.integers(2, 6),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_error_feedback_telescopes(name, n, k, seed):
+    """sum of emitted quantized grads + final residual == true sum,
+    exactly (fp32): the residual is DEFINED as the dropped part, so the
+    telescoping identity has no rounding slack to hide in."""
+    rng = np.random.default_rng(seed)
+    grads = [rng.standard_normal(n).astype(np.float32)
+             for _ in range(k)]
+    residual = np.zeros(n, np.float32)
+    emitted = np.zeros(n, np.float64)
+    for g in grads:
+        q, residual = codec.ef_quantize(name, g, residual)
+        q, residual = np.asarray(q), np.asarray(residual)
+        # the step identity itself: q + r_new == g + r_old in fp32
+        emitted += q.astype(np.float64)
+    true_sum = np.sum(np.asarray(grads, np.float64), axis=0)
+    gap = np.abs(emitted + np.asarray(residual, np.float64) - true_sum)
+    # fp32 summation noise only — NOT k quantization errors
+    assert float(np.max(gap)) <= 1e-4 * k, \
+        f"{name}: telescoping gap {np.max(gap)} after {k} steps"
+    # convergence: the emitted sum is within ONE per-quantize bound of
+    # the true sum (|r_k| bounded), independent of k
+    absmax = max(float(np.max(np.abs(g))) for g in grads) or 1.0
+    bound = 2.0 * codec.get(name).eps * absmax * k + 1e-4 * k
+    assert float(np.max(np.abs(emitted - true_sum))) <= max(bound, 1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    name=st.sampled_from(["none"] + CODED),
+    n_elems=st.integers(0, 1 << 16),
+    wire_itemsize=st.sampled_from([2, 4, 8]),
+    slack=st.integers(0, 3),
+)
+def test_encoded_bytes_closed_form(name, n_elems, wire_itemsize, slack):
+    """encoded_bytes == (n_bytes // wire_itemsize) · itemsize for every
+    codec, including ragged n_bytes (slack) and the none identity."""
+    n_bytes = n_elems * wire_itemsize + slack
+    got = codec.encoded_bytes(name, n_bytes, wire_itemsize)
+    if name == "none":
+        assert got == n_bytes
+    else:
+        want = (n_bytes // wire_itemsize) * codec.get(name).itemsize
+        assert got == want
+        # a codec never inflates the wire
+        assert got <= n_bytes
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(CODED),
+    p=st.integers(2, 64),
+    hops=st.integers(1, 128),
+)
+def test_tolerance_monotone_and_derivable(name, p, hops):
+    """The derived bound exists for every registered codec, grows with
+    hop count, and is None only for unknown codecs."""
+    t = codec.tolerance(name, p, hops=hops)
+    assert t is not None and t > 0
+    assert codec.tolerance(name, p, hops=hops + 1) > t
+    assert codec.tolerance("int4", p, hops=hops) is None

@@ -70,6 +70,19 @@ def test_multidev_hierarchical_overlap_checks():
 
 
 @pytest.mark.timeout(900)
+def test_multidev_codec_checks():
+    """Wire-codec numerics wall (DESIGN.md §3.10) on p ∈ {3, 4, 6, 8}:
+    int8/fp8 allreduce within the DERIVED tolerance of psum
+    (verify.codec_tolerance of the executed schedule), bf16 codec
+    bit-identical to the wire_dtype path on bf16-exact data, the EF
+    residual equal to the quantization error, a real auto train step
+    mixing codec'd and uncodec'd buckets, and HLO permute bytes ==
+    Σ encoded IR wire bytes with roofline.wire_check PASS."""
+    _run_checks("multidev_codec_checks.py", 8,
+                "ALL CODEC CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
 def test_multidev_overlap_checks():
     """overlap=True (in-backward per-bucket reductions) on
     p ∈ {3, 4, 6, 8}: bit-exact with the post-backward path and with

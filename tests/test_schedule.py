@@ -185,6 +185,60 @@ def test_fingerprint_stability_and_sensitivity():
     assert c.fingerprint() == a.fingerprint()
 
 
+def test_codec_ir_json_roundtrip_and_render():
+    """A codec'd schedule round-trips losslessly (schedule- AND
+    per-stage codec), renders with the ``:codec`` suffix, and an
+    UNCODED record emits no codec keys at all — every pre-codec
+    committed artifact must parse and serialize byte-identically."""
+    sched = S.synthetic([4 << 20, 1 << 20], "ring_rsa", (8,), ("data",),
+                        codec="int8")
+    rec = sched.to_json()
+    assert rec["codec"] == "int8"
+    assert all(b["stages"][0]["codec"] == "int8" for b in rec["buckets"])
+    back = S.from_json(json.loads(json.dumps(rec)))
+    assert back.codec == "int8"
+    assert all(st.codec == "int8" for b in back.buckets
+               for st in b.stages)
+    assert back.to_json() == rec
+    assert back.fingerprint() == sched.fingerprint()
+    assert ":int8" in sched.render()
+    # composed spec: per-level codecs land on their levels' stages
+    comp = S.synthetic([4 << 20], "ring_rsa×rhd_rsa", (4, 8),
+                       ("pod", "data"), codec="int8×bf16")
+    crec = comp.to_json()
+    cback = S.from_json(json.loads(json.dumps(crec)))
+    assert cback.to_json() == crec
+    assert ":int8" in comp.render() and ":bf16" in comp.render()
+    # backward compatibility: uncoded records carry NO codec field
+    plain = S.synthetic([4 << 20], "ring_rsa", (8,), ("data",))
+    prec = plain.to_json()
+    assert "codec" not in prec
+    assert all("codec" not in st for b in prec["buckets"]
+               for st in b["stages"])
+
+
+def test_codec_moves_fingerprint_uncoded_stays_put():
+    """The codec is schedule identity: resolving under int8 vs fp8 vs
+    uncoded must yield three distinct fingerprints (the PlanCache and
+    empirical tables key on them), while an EXPLICIT codec='none'
+    reproduces the pre-codec fingerprint bit-for-bit."""
+    grads = _grads()
+    plain = _agg().resolve(grads, (8,))
+    explicit = _agg(codec="none").resolve(grads, (8,))
+    assert explicit.fingerprint() == plain.fingerprint()
+    i8 = _agg(codec="int8").resolve(grads, (8,))
+    f8 = _agg(codec="fp8_e4m3").resolve(grads, (8,))
+    fps = {plain.fingerprint(), i8.fingerprint(), f8.fingerprint()}
+    assert len(fps) == 3
+    assert i8.codec == "int8" and plain.codec == "none"
+    # the synthetic/static path agrees: codec moves detached prints too
+    syn = S.synthetic([1 << 20], "rhd_rsa", (8,), ("data",))
+    syn8 = S.synthetic([1 << 20], "rhd_rsa", (8,), ("data",),
+                       codec="int8")
+    assert syn.fingerprint(detached=True) != \
+        syn8.fingerprint(detached=True)
+
+
 # ---------------------------------------------------------------------------
 # Planner equivalence with the pre-IR resolution
 # ---------------------------------------------------------------------------

@@ -194,6 +194,89 @@ def test_validate_table_rejects_garbage():
         S.validate_table(neg_lat)
 
 
+def test_codec_aware_argmin_faithfulness():
+    """A coded analytic selector IS the coded cost model: for every
+    (bytes, p) grid point its choice equals the brute-force argmin of
+    ``predict_latency(..., codec=...)`` — psum is priced UNCODED in
+    that argmin (no ppermute hop to encode around), so the selection
+    genuinely trades compression off against the vendor collective."""
+    for codec in ("bf16", "int8"):
+        sel = S.AnalyticSelector(codec=codec)
+        for p in (3, 6, 8, 12):
+            for n in GRID_BYTES:
+                want, want_t = None, math.inf
+                for s in sel.candidates:
+                    t = S.predict_latency(s, n, (p,), sel.link,
+                                          sel.inter_link, codec=codec)
+                    if t < want_t:
+                        want, want_t = s, t
+                assert sel.select(n, (p,)) == want, (codec, p, n)
+
+
+def test_codec_shifts_crossover_upward():
+    """A wire codec shrinks every coded candidate's β term while α
+    stays put, so the latency-optimal RHD stays competitive to LARGER
+    messages: crossover(none) < crossover(bf16) < crossover(int8),
+    ordered by compression ratio (2x vs 4x), on both link profiles."""
+    for link in (cm.PAPER_LINK, cm.ICI):
+        for p in (6, 12):
+            xs = [S.crossover_bytes(p, link=link, codec=c)
+                  for c in ("none", "bf16", "int8")]
+            assert 0 < xs[0] < xs[1] < xs[2] < math.inf, (link, p, xs)
+    # pow2 p stays crossover-free under any codec (RHD dominates ring
+    # at every size; compression rescales both identically)
+    for c in ("none", "bf16", "int8"):
+        assert S.crossover_bytes(8, link=cm.PAPER_LINK, codec=c) \
+            == math.inf, c
+
+
+def test_empirical_selector_reads_codec_rows():
+    """Tables may carry per-codec measurements: a coded selector reads
+    the rows measured under ITS codec; a codec with no measured rows
+    falls back to the uncoded rows (a committed codec-less table must
+    keep resolving)."""
+    table = {"schema": S.TABLE_SCHEMA, "entries": [
+        {"p": 8, "bytes": 0,
+         "latency_us": {"rhd_rsa": 1.0, "ring_rsa": 2.0}},
+        {"p": 8, "bytes": 0, "codec": "int8",
+         "latency_us": {"ring_rsa": 1.0, "rhd_rsa": 2.0}},
+    ]}
+    S.validate_table(table)
+    assert S.EmpiricalSelector(table).select(1024, (8,)) == "rhd_rsa"
+    assert S.EmpiricalSelector(table, codec="int8") \
+        .select(1024, (8,)) == "ring_rsa"
+    assert S.EmpiricalSelector(table, codec="bf16") \
+        .select(1024, (8,)) == "rhd_rsa"
+    # codec identity reaches the fingerprint (plan-cache key)
+    fps = {S.EmpiricalSelector(table, codec=c).fingerprint()
+           for c in ("none", "int8", "bf16")}
+    assert len(fps) == 3
+
+
+def test_validate_table_rejects_codec_garbage():
+    """The codec field is schema-checked: unknown codec names are
+    rejected, non-strings are rejected, and the duplicate key includes
+    the codec — same (p, bytes) under different codecs is two
+    legitimate measurements, same codec twice is a duplicate."""
+    good = S.build_analytic_table(ps=(4,), sizes=(1024,))
+    bad_codec = json.loads(json.dumps(good))
+    bad_codec["entries"][0]["codec"] = "int4"
+    with pytest.raises(ValueError, match="must be a codec name"):
+        S.validate_table(bad_codec)
+    nonstr = json.loads(json.dumps(good))
+    nonstr["entries"][0]["codec"] = 8
+    with pytest.raises(ValueError, match="codec"):
+        S.validate_table(nonstr)
+    two_codecs = json.loads(json.dumps(good))
+    two_codecs["entries"].append(
+        dict(json.loads(json.dumps(good))["entries"][0], codec="int8"))
+    S.validate_table(two_codecs)          # NOT a duplicate
+    dup = json.loads(json.dumps(two_codecs))
+    dup["entries"].append(dup["entries"][-1])
+    with pytest.raises(ValueError, match="duplicate"):
+        S.validate_table(dup)
+
+
 def test_selector_fingerprints_distinguish_configs(tmp_path):
     a = S.AnalyticSelector(link=cm.ICI)
     b = S.AnalyticSelector(link=cm.PAPER_LINK)

@@ -29,6 +29,53 @@ def test_plan_cache_key_distinguishes_wire_itemsize():
     assert len(cache) == 2
 
 
+def test_codec_identity_never_aliases():
+    """The wire-codec key is the FULL identity (codec kind + error-
+    feedback flag), never an itemsize: int8 and fp8_e4m3 both put
+    1 byte/element on the wire but execute different arithmetic, and
+    EF on/off changes what the schedule sends — none of the four may
+    share a cache entry (the codec analogue of the wire-itemsize pin
+    above)."""
+    import jax
+
+    from repro.core import PlanCache as PC, schedule as schedule_mod
+
+    tree = {"a": jnp.zeros((64,), jnp.float32)}
+    keys = {PC.key_for(tree, 1024, None, True, switch_itemsize=4,
+                       codec=(spec, ef))
+            for spec, ef in [("none", False), ("int8", False),
+                             ("fp8_e4m3", False), ("int8", True)]}
+    assert len(keys) == 4
+
+    # and end to end: four resolutions differing only in codec identity
+    # occupy four distinct resolved-schedule cache entries
+    cache = PC()
+    sds = {"w": jax.ShapeDtypeStruct((256,), jnp.float32)}
+    fps = set()
+    for spec, ef in [("none", False), ("int8", False),
+                     ("fp8_e4m3", False), ("int8", True)]:
+        sched = schedule_mod.plan(
+            sds, axis_names=("data",), axis_sizes=(8,),
+            strategy="ring_rsa", codec=spec, error_feedback=ef,
+            cache=cache)
+        fps.add(schedule_mod.ScheduleRequest(
+            treedef=None, shapes=(), dtypes=(), groups_key=None,
+            threshold_bytes=1024, fuse=True, wire_dtype="float32",
+            axis_names=("data",), axis_sizes=(8,),
+            strategy_context="ring_rsa", switch_points=(),
+            placement="post_backward", link_key=(),
+            codec=spec, error_feedback=ef).fingerprint())
+        assert sched.codec == spec
+    assert len(fps) == 4
+    hits, entries = cache.stats.hits, len(cache)
+    # re-resolving any identity is a pure cache hit, no new entry
+    schedule_mod.plan(sds, axis_names=("data",), axis_sizes=(8,),
+                      strategy="ring_rsa", codec="int8",
+                      error_feedback=True, cache=cache)
+    assert len(cache) == entries
+    assert cache.stats.hits > hits
+
+
 def test_bf16_wire_halves_permute_bytes_and_bounds_error():
     """Lowered + compiled on 4 forced host devices (subprocess, like
     test_hlo_analysis):
