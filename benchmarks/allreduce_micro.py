@@ -439,7 +439,28 @@ def emit_table(path: str, mode="measured", ps=None, sizes=None,
     return table
 
 
+def _record_measured_rows(rows, sweep: str):
+    """Mirror a measured sweep into the telemetry registry (no-op when
+    telemetry is off): per-strategy latency histograms, so a traced
+    benchmark run snapshots the same numbers the CSV lines print."""
+    from repro import telemetry
+    if not telemetry.enabled():
+        return
+    h = telemetry.METRICS.histogram(
+        "allreduce_measured_us",
+        help="measured allreduce latency (µs) by sweep/strategy/p")
+    for r in rows:
+        p = r.get("p") or "x".join(str(a) for a in r.get("axes", ()))
+        for k, v in r.items():
+            if k.endswith("_us") and not isinstance(v, dict):
+                h.observe(float(v), sweep=sweep, strategy=k[:-3], p=p)
+        for s, v in (r.get("latency_us") or {}).items():
+            h.observe(float(v), sweep=sweep, strategy=s, p=p)
+
+
 def run(csv=True, measure=True):
+    from repro import telemetry
+    tracer = telemetry.get_tracer()
     rows = analytic_rows()
     lines = []
     for r in rows:
@@ -463,14 +484,23 @@ def run(csv=True, measure=True):
             f"p={r['p']} bytes={r['bytes']} steps={r['ring_steps']} "
             f"wire={r['ring_wire_bytes']}")
     if measure:
-        for r in measured_rows(device_counts=(3, 6, 8, 12)):
+        with tracer.span("bench.measure.flat", cat="wall",
+                         device_counts=[3, 6, 8, 12]) as sp:
+            flat = measured_rows(device_counts=(3, 6, 8, 12))
+            sp.set("n_rows", len(flat))
+        _record_measured_rows(flat, "flat")
+        for r in flat:
             for k, v in r.items():
                 if k.endswith("_us"):
                     lines.append(f"allreduce_micro.measured.{k[:-3]},"
                                  f"{v:.1f},p={r['p']} bytes={r['bytes']}"
                                  f" host-cpu")
         # composed two-level schedules on (pod × data) meshes
-        for r in measured_multiaxis_rows(sizes=[64 * 1024, 1 << 20]):
+        with tracer.span("bench.measure.multiaxis", cat="wall") as sp:
+            multi = measured_multiaxis_rows(sizes=[64 * 1024, 1 << 20])
+            sp.set("n_rows", len(multi))
+        _record_measured_rows(multi, "multiaxis")
+        for r in multi:
             pods, d = r["axes"]
             for s, v in r["latency_us"].items():
                 lines.append(f"allreduce_micro.multiaxis.{s},"
@@ -499,10 +529,22 @@ def main(argv=None):
                     help="wall-clock the wire-codec sweep (codec'd vs "
                          "uncoded ring/RHD through execute_stages) and "
                          "print measured-vs-modeled speedups")
+    ap.add_argument("--trace", metavar="OUT.json",
+                    help="enable telemetry for this run and write a "
+                         "Perfetto-loadable trace (repro/trace/v1) plus "
+                         "a metrics snapshot next to it")
     args = ap.parse_args(argv)
 
+    from repro import telemetry
+    if args.trace:
+        telemetry.configure(telemetry.TelemetryConfig(enabled=True))
+
     if args.codec:
-        rows = measured_codec_rows()
+        with telemetry.get_tracer().span("bench.measure.codec",
+                                         cat="wall") as sp:
+            rows = measured_codec_rows()
+            sp.set("n_rows", len(rows))
+        _record_measured_rows(rows, "codec")
         rep = codec_report(rows)
         for r in rep["rows"]:
             band = ""
@@ -516,6 +558,7 @@ def main(argv=None):
         print(f"allreduce_micro.codec.all_within_band,"
               f"{int(rep['all_within_band'])},band_factor="
               f"{rep['band_factor']} strategy={rep['band_strategy']}")
+        _write_trace(args.trace)
         return
 
     if args.emit_table:
@@ -536,8 +579,23 @@ def main(argv=None):
             where += f" and {os.path.normpath(BENCH_ARTIFACT)}"
         print(f"wrote {len(table['entries'])} entries "
               f"({args.table_mode}) to {where}")
+        _write_trace(args.trace)
         return
     print("\n".join(run(measure=not args.no_measure)))
+    _write_trace(args.trace)
+
+
+def _write_trace(path):
+    """Export the run's trace + metrics snapshot when --trace was given
+    (the spans wrap the subprocess sweeps: host wall-clock of each
+    measurement pass, with row counts and per-row latencies mirrored
+    into the metrics registry)."""
+    if not path:
+        return
+    from repro import telemetry
+    telemetry.get_tracer().write(path)
+    print(f"wrote trace to {path}")
+    print(telemetry.METRICS.render())
 
 
 if __name__ == "__main__":

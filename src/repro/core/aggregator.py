@@ -33,6 +33,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
+
 from . import codec as codec_mod
 from . import compat, reducers, schedule as schedule_mod, \
     selector as selector_mod
@@ -199,6 +201,16 @@ class GradientAggregator:
             codec=cfg.codec or "none",
             error_feedback=cfg.error_feedback, cache=self.cache)
         self.last_schedule = sched
+        if telemetry.enabled():
+            tracer = telemetry.get_tracer()
+            with tracer.span("aggregate.resolve", cat="trace",
+                             fingerprint=sched.fingerprint(),
+                             n_buckets=len(sched.buckets),
+                             strategy=cfg.strategy,
+                             placement=cfg.placement):
+                pass
+            telemetry.metrics.record_schedule(sched)
+            telemetry.record_plan_cache(self.cache)
         return sched
 
     def _trace_context(self, grads, groups):
@@ -229,32 +241,44 @@ class GradientAggregator:
         quantizes ONCE on the whole fused buffer before the stage walk —
         the per-hop codec then transports an already-on-grid payload."""
         cfg = self.config
-        accum = jnp.dtype(cfg.wire_dtype or cfg.accum_dtype)
-        orig = buf.dtype
-        new_residual = None
-        if residual is not None:
-            cname = next((st.codec for st in bucket.stages
-                          if st.codec != "none"), "none")
-            if cname != "none":
-                buf, new_residual = codec_mod.ef_quantize(
-                    cname, buf, residual)
-                buf = buf.astype(orig)
-            else:
-                # Bucket ended up uncoded (e.g. psum won the argmin):
-                # nothing was quantized, so nothing feeds back.
-                new_residual = residual
-        if orig != accum:
-            buf = buf.astype(accum)
-        # chunked reducers slice along dim 0; if the bucket's leaf is
-        # model-sharded on dim 0, rotate an unsharded dim to the front
-        # so the auto sharding is never disturbed (§Perf it.0).
-        axis = _chunk_axis(group, buf.ndim)
-        if axis != 0:
-            buf = jnp.moveaxis(buf, axis, 0)
-        buf = reducers.execute_stages(buf, bucket.stages)
-        if axis != 0:
-            buf = jnp.moveaxis(buf, 0, axis)
-        out = (buf * scale).astype(orig)
+        tracer = telemetry.get_tracer()
+        if tracer.enabled:
+            ctx = tracer.span(
+                bucket.path, cat="trace", ir_path=bucket.path,
+                strategy=bucket.strategy, size=bucket.size,
+                n_bytes=bucket.n_bytes, wire_bytes=bucket.wire_bytes,
+                readiness_rank=bucket.readiness_rank,
+                placement=cfg.placement,
+                error_feedback=residual is not None)
+        else:
+            ctx = tracer.span("")           # shared no-op
+        with ctx:
+            accum = jnp.dtype(cfg.wire_dtype or cfg.accum_dtype)
+            orig = buf.dtype
+            new_residual = None
+            if residual is not None:
+                cname = next((st.codec for st in bucket.stages
+                              if st.codec != "none"), "none")
+                if cname != "none":
+                    buf, new_residual = codec_mod.ef_quantize(
+                        cname, buf, residual)
+                    buf = buf.astype(orig)
+                else:
+                    # Bucket ended up uncoded (e.g. psum won the argmin):
+                    # nothing was quantized, so nothing feeds back.
+                    new_residual = residual
+            if orig != accum:
+                buf = buf.astype(accum)
+            # chunked reducers slice along dim 0; if the bucket's leaf is
+            # model-sharded on dim 0, rotate an unsharded dim to the front
+            # so the auto sharding is never disturbed (§Perf it.0).
+            axis = _chunk_axis(group, buf.ndim)
+            if axis != 0:
+                buf = jnp.moveaxis(buf, axis, 0)
+            buf = reducers.execute_stages(buf, bucket.stages)
+            if axis != 0:
+                buf = jnp.moveaxis(buf, 0, axis)
+            out = (buf * scale).astype(orig)
         if residual is not None:
             return out, new_residual
         return out
@@ -294,15 +318,19 @@ class GradientAggregator:
                 f"{len(residuals)} residual buffers for "
                 f"{len(bufs)} fusion buckets — pass init_residuals() "
                 f"output for these grads")
-        for i, (bucket, buf) in enumerate(zip(sched.buckets, bufs)):
-            group = plan.buckets[bucket.index].group
-            if residuals is not None:
-                out, r = self._reduce_buffer(bucket, group, buf, scale,
-                                             residual=residuals[i])
-                new_residuals.append(r)
-            else:
-                out = self._reduce_buffer(bucket, group, buf, scale)
-            reduced.append(out)
+        tracer = telemetry.get_tracer()
+        with tracer.span("aggregate", cat="trace",
+                         n_buckets=len(sched.buckets),
+                         placement=self.config.placement):
+            for i, (bucket, buf) in enumerate(zip(sched.buckets, bufs)):
+                group = plan.buckets[bucket.index].group
+                if residuals is not None:
+                    out, r = self._reduce_buffer(bucket, group, buf, scale,
+                                                 residual=residuals[i])
+                    new_residuals.append(r)
+                else:
+                    out = self._reduce_buffer(bucket, group, buf, scale)
+                reduced.append(out)
         if residuals is not None:
             return plan.unflatten(reduced), tuple(new_residuals)
         return plan.unflatten(reduced)
@@ -355,12 +383,19 @@ class GradientAggregator:
         sched, scale = self._trace_context(params, groups)
         flat, treedef = jax.tree_util.tree_flatten(params)
         out = list(flat)
-        for bi in sched.readiness_order():
-            bucket = sched.buckets[bi]
-            boundary = self._bucket_boundary(sched, bucket, scale)
-            wrapped = boundary(*[flat[i] for i in bucket.leaf_indices])
-            for i, leaf in zip(bucket.leaf_indices, wrapped):
-                out[i] = leaf
+        tracer = telemetry.get_tracer()
+        # The per-bucket spans fire later, when jax traces the BACKWARD
+        # (each custom_vjp bwd rule runs _reduce_buffer); this span only
+        # records the wrap order at forward-trace time.
+        with tracer.span("overlap_params", cat="trace",
+                         n_buckets=len(sched.buckets),
+                         readiness_order=list(sched.readiness_order())):
+            for bi in sched.readiness_order():
+                bucket = sched.buckets[bi]
+                boundary = self._bucket_boundary(sched, bucket, scale)
+                wrapped = boundary(*[flat[i] for i in bucket.leaf_indices])
+                for i, leaf in zip(bucket.leaf_indices, wrapped):
+                    out[i] = leaf
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # -- scalars (loss/metrics) ---------------------------------------------

@@ -37,11 +37,24 @@ from . import fusion
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    # Back-reference so ``cache.stats()`` (the introspection snapshot)
+    # and ``cache.stats.hits`` (the historical counter accessors) are
+    # the same attribute: CacheStats is callable, returning the owning
+    # cache's full snapshot dict.
+    _cache: "PlanCache | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def __call__(self) -> dict:
+        if self._cache is None:
+            return {"hits": self.hits, "misses": self.misses,
+                    "hit_rate": self.hit_rate, "interned": 0,
+                    "n_builds": 0, "builds": {}}
+        return self._cache.stats_snapshot()
 
 
 class PlanCache:
@@ -50,7 +63,19 @@ class PlanCache:
         self._lock = threading.Lock()
         self._build_locks: dict[Hashable, threading.Lock] = {}
         self._generation = 0
-        self.stats = CacheStats()
+        self.stats = CacheStats(_cache=self)
+        # Per-key build counts (key-id -> count), reset with stats on
+        # clear().  A build voided by a concurrent clear() is NOT
+        # counted — same philosophy as the miss counter: stats reflect
+        # cache behaviour, so builds == misses, per key.
+        self._builds: dict[str, int] = {}
+
+    @staticmethod
+    def _key_id(key: Hashable) -> str:
+        """Short stable-within-process id for a cache key (the raw keys
+        are large treedef/shape tuples — unreadable and unserializable
+        in an introspection dict)."""
+        return f"{hash(key) & 0xffffffffffff:012x}"
 
     @staticmethod
     def key_for(tree, threshold_bytes: int, groups, fuse: bool,
@@ -129,6 +154,9 @@ class PlanCache:
                         if self._generation == generation:
                             self._plans[key] = plan
                             self.stats.misses += 1
+                            kid = self._key_id(key)
+                            self._builds[kid] = \
+                                self._builds.get(kid, 0) + 1
                 finally:
                     # Retire the lock before releasing it so every
                     # waiter retries instead of building a duplicate.
@@ -164,6 +192,24 @@ class PlanCache:
         return self._get_or_build(("schedule", request.fingerprint()),
                                   builder)
 
+    def stats_snapshot(self) -> dict:
+        """Introspection snapshot — also reachable as ``cache.stats()``
+        (CacheStats is callable): hits, misses, hit rate, interned plan
+        count, and per-key build counts (key-ids from :meth:`_key_id`).
+        With the per-key build guard working, every key-id maps to
+        exactly 1 — a value > 1 would mean the guard let two threads
+        build the same plan (the race semantics
+        tests/test_plan_cache.py pins through this dict)."""
+        with self._lock:
+            return {
+                "hits": self.stats.hits,
+                "misses": self.stats.misses,
+                "hit_rate": self.stats.hit_rate,
+                "interned": len(self._plans),
+                "n_builds": sum(self._builds.values()),
+                "builds": dict(self._builds),
+            }
+
     def clear(self):
         with self._lock:
             self._plans.clear()
@@ -171,7 +217,8 @@ class PlanCache:
             # holds its per-key lock, and a post-clear misser must
             # serialize on that same lock object (its finally pops it).
             self._generation += 1
-            self.stats = CacheStats()
+            self.stats = CacheStats(_cache=self)
+            self._builds = {}
 
     def __len__(self):
         return len(self._plans)

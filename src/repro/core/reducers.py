@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.telemetry import trace as telemetry_trace
+
 from . import compat
 from .compat import all_gather, axis_index, axis_size, ppermute
 
@@ -259,6 +261,28 @@ def _stage_permute(st):
     return codec_mod.permuter(cname)
 
 
+def _traced_permute(tracer, inner, st, stage_path):
+    """Wrap a stage's hop primitive so every ppermute hop records a
+    telemetry span (``<stage_path>.hop[k]``) with its payload bytes.
+    For codec'd stages ``inner`` is the encode→permute→decode wrapper,
+    so the hop span covers the codec encode/decode as well.  Spans are
+    host-side metadata only — the traced computation is untouched
+    (DESIGN.md §3.11 disabled-mode identity)."""
+    cname = getattr(st, "codec", "none") or "none"
+    counter = [0]
+
+    def permute(x, axis, perm):
+        k = counter[0]
+        counter[0] += 1
+        with tracer.span(f"hop[{k}]", cat="trace",
+                         ir_path=f"{stage_path}.hop[{k}]",
+                         payload_bytes=int(x.size) * x.dtype.itemsize,
+                         n_edges=len(perm), codec=cname):
+            return inner(x, axis, perm)
+
+    return permute
+
+
 def execute_stages(x: jax.Array, stages) -> jax.Array:
     """Run a bucket's decomposition tree (a sequence of
     ``schedule.Stage``-like objects with ``op``/``algorithm``/``axis``)
@@ -280,33 +304,57 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
     orig_dtype = x.dtype
     if coded and x.dtype != jnp.float32:
         x = x.astype(jnp.float32)
+    tracer = telemetry_trace.get_tracer()
     pending: list = []                      # (axis, orig_len) stack
-    for st in stages:
+    for j, st in enumerate(stages):
         permute = _stage_permute(st)
-        if st.op == "reduce_scatter":
-            if st.algorithm != "ring_rsa":
-                raise ValueError(f"unknown reduce-scatter algorithm "
-                                 f"{st.algorithm!r}")
-            x, n = ring_reduce_scatter(x, st.axis, permute=permute)
-            pending.append((st.axis, n))
-        elif st.op == "all_gather":
-            if not pending or pending[-1][0] != st.axis:
-                raise ValueError(
-                    f"all_gather@{st.axis} without a matching "
-                    f"reduce_scatter (pending {pending})")
-            _, n = pending.pop()
-            x = ring_all_gather(x, st.axis, n, permute=permute)
-        elif st.op == "allreduce":
-            fn = _FLAT_FNS.get(st.algorithm)
-            if fn is None:
-                raise ValueError(f"unknown allreduce algorithm "
-                                 f"{st.algorithm!r}")
-            if permute is not ppermute:
-                x = fn(x, st.axis, permute=permute)
-            else:
-                x = fn(x, st.axis)
+        if tracer.enabled:
+            # IR path = enclosing bucket span's path (opened by the
+            # aggregator) + this stage's index; bare stage lists (the
+            # micro-benchmarks) get "stage[j]" alone.
+            base = tracer.current_path()
+            path = f"{base}.stage[{j}]" if base else f"stage[{j}]"
+            ctx = tracer.span(
+                f"stage[{j}]", cat="trace", ir_path=path,
+                op=st.op, algorithm=st.algorithm, axis=st.axis,
+                axis_size=int(getattr(st, "axis_size", 0)),
+                n_bytes=int(getattr(st, "n_bytes", 0)),
+                wire_bytes=int(getattr(st, "wire_bytes", 0)),
+                hlo_kind=getattr(st, "hlo_kind", ""),
+                hlo_bytes=int(getattr(st, "hlo_bytes", 0)),
+                codec=getattr(st, "codec", "none") or "none")
+            # Only ppermute-hop algorithms take a permute override
+            # (psum/ps_gather have no explicit hops to wrap).
+            if st.op != "allreduce" or st.algorithm in ("ring_rsa",
+                                                        "rhd_rsa"):
+                permute = _traced_permute(tracer, permute, st, path)
         else:
-            raise ValueError(f"unknown stage op {st.op!r}")
+            ctx = tracer.span("")           # shared no-op
+        with ctx:
+            if st.op == "reduce_scatter":
+                if st.algorithm != "ring_rsa":
+                    raise ValueError(f"unknown reduce-scatter algorithm "
+                                     f"{st.algorithm!r}")
+                x, n = ring_reduce_scatter(x, st.axis, permute=permute)
+                pending.append((st.axis, n))
+            elif st.op == "all_gather":
+                if not pending or pending[-1][0] != st.axis:
+                    raise ValueError(
+                        f"all_gather@{st.axis} without a matching "
+                        f"reduce_scatter (pending {pending})")
+                _, n = pending.pop()
+                x = ring_all_gather(x, st.axis, n, permute=permute)
+            elif st.op == "allreduce":
+                fn = _FLAT_FNS.get(st.algorithm)
+                if fn is None:
+                    raise ValueError(f"unknown allreduce algorithm "
+                                     f"{st.algorithm!r}")
+                if permute is not ppermute:
+                    x = fn(x, st.axis, permute=permute)
+                else:
+                    x = fn(x, st.axis)
+            else:
+                raise ValueError(f"unknown stage op {st.op!r}")
     if pending:
         raise ValueError(f"unterminated reduce_scatter stages: {pending}")
     if coded and x.dtype != orig_dtype:

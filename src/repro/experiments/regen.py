@@ -289,6 +289,7 @@ def check(md_path: str = MD_ARTIFACT,
     if failing:
         problems.append(f"claims outside their bands: {failing}")
     problems += check_allreduce_artifact()
+    problems += check_telemetry_artifact()
     return problems
 
 
@@ -325,6 +326,20 @@ def check_allreduce_artifact(path: str = ALLREDUCE_ARTIFACT) -> list[str]:
                         f"cost model's band "
                         f"(x{codec_meta.get('band_factor')})")
     return problems
+
+
+def check_telemetry_artifact(path: str = "") -> list[str]:
+    """Currency of the MEASURED telemetry-closure artifact
+    (``BENCH_telemetry.json``, schema repro/telemetry/v1).  Its wall
+    clocks cannot be re-derived deterministically, so currency means
+    the check repro.telemetry.closure.check_artifact runs WITHOUT
+    re-measuring: the stored cells still match the canonical cell set,
+    the stored predicted side still matches the CURRENT cost model
+    (drift there means the model changed under the measurements —
+    re-emit), and every gated residual sits inside the declared band.
+    Refreshed by ``python -m repro.telemetry.closure --emit``."""
+    from repro.telemetry import closure
+    return closure.check_artifact(path or closure.TELEMETRY_ARTIFACT)
 
 
 def run_lines(ctx=None) -> list[str]:

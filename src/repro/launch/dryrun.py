@@ -175,13 +175,93 @@ def _static_verify(arch: str, shape_name: str, mesh, strategy: str,
         sched, context=f"{arch}/{shape_name}")
 
 
+def _attach_trace(rec: dict, arch: str, shape_name: str, mesh,
+                  strategy: str, fusion_mb: float, sharding_aware: bool,
+                  remat: bool, wire_dtype: str, spec_overrides,
+                  selector_mode: str, selector_table: str, overlap: bool,
+                  codec: str, error_feedback: bool, trace_path: str,
+                  verbose: bool = True) -> None:
+    """--trace: enable telemetry, replay the config's ReduceSchedule
+    through the measured probe (repro.telemetry.closure — each distinct
+    stage as its own jitted collective on an axis_size submesh of the
+    dry-run's forced host devices), attach the per-stage residual table
+    + metrics snapshot to the record and write the Perfetto trace.
+
+    Works on SKIP records too: the schedule resolves without lowering
+    (the same path _static_verify uses), so even configs the executor
+    refuses (>32-device partial-auto) get measured per-stage replays at
+    production payload sizes."""
+    import dataclasses
+
+    import jax
+    from repro import telemetry
+    from repro.configs import SHAPES, get_spec, spec_for_shape
+    from repro.core import AggregatorConfig, GradientAggregator
+    from repro.launch.mesh import dp_axes_of
+    from repro.models import build_model, param_groups
+    from repro.telemetry import closure
+
+    if SHAPES[shape_name].kind != "train":
+        rec["measured"] = {"skipped":
+                           "no ReduceSchedule on non-train shapes"}
+        return
+    tracer = telemetry.configure(telemetry.TelemetryConfig(enabled=True))
+    spec = spec_for_shape(get_spec(arch), shape_name)
+    if remat:
+        spec = dataclasses.replace(spec, remat=True)
+    if spec_overrides:
+        spec = dataclasses.replace(spec, **spec_overrides)
+    model = build_model(spec)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    dp_axes = dp_axes_of(mesh)
+    agg = GradientAggregator(
+        AggregatorConfig(strategy=strategy, fusion_threshold_mb=fusion_mb,
+                         sharding_aware=sharding_aware,
+                         wire_dtype=wire_dtype,
+                         selector_mode=selector_mode,
+                         selector_table=selector_table,
+                         overlap=overlap, codec=codec,
+                         error_feedback=error_feedback), dp_axes)
+    axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
+    with tracer.span("dryrun.trace", cat="wall", arch=arch,
+                     shape=shape_name):
+        sched = agg.resolve(params, axis_sizes,
+                            groups=param_groups(params))
+        measured = closure.measure_schedule(sched, reps=2, tracer=tracer)
+        report = closure.closure_report(sched, measured)
+    rec["measured"] = report
+    if rec.get("schedule") and rec.get("roofline", {}).get("compute_s"):
+        # OK records carry a roofline: replay the §3.6 simulator with
+        # the measured per-bucket latencies (calibrated back into model
+        # units) so report.py can put a measured overlap fraction next
+        # to the predicted one.
+        tl = closure.measured_timeline(
+            sched, measured, report["calibration"]["k"],
+            compute_s=float(rec["roofline"]["compute_s"]))
+        rec["schedule"]["measured_overlap"] = {
+            "overlap_fraction": tl.overlap_fraction,
+            "hidden_comm_s": tl.hidden_comm_s,
+            "exposed_comm_s": tl.exposed_comm_s,
+            "step_s": tl.step_s,
+        }
+    rec["metrics"] = telemetry.METRICS.snapshot()
+    tracer.write(trace_path)
+    if verbose:
+        cal = report["calibration"]
+        print(f"  trace: {report['n_stages']} stages "
+              f"({report['n_gated']} gated) k={cal['k']:.3g} "
+              f"max_ratio={report['max_ratio']:.2f} "
+              f"within_band={report['all_within_band']} -> {trace_path}")
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             strategy: str = "rhd_rsa", fusion_mb: float = 4.0,
             sharding_aware: bool = True, verbose: bool = True,
             remat: bool = False, wire_dtype: str = "",
             spec_overrides=None, selector_mode: str = "analytic",
             selector_table: str = "", overlap: bool = False,
-            codec: str = "", error_feedback: bool = False) -> dict:
+            codec: str = "", error_feedback: bool = False,
+            trace_path: str = "") -> dict:
     import jax
     from repro.configs import SHAPES, get_spec, shape_supported
     from repro.core.compat import use_mesh
@@ -328,12 +408,23 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
                       f"SKIP (partial-auto unsupported on this jax; "
                       f"schedule {mark})")
-            return rec
-        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
-                   traceback=traceback.format_exc()[-4000:])
-        if verbose:
-            print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: FAIL "
-                  f"{e}")
+        else:
+            rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-4000:])
+            if verbose:
+                print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
+                      f"FAIL {e}")
+    if trace_path and rec["status"] in ("OK", "SKIP"):
+        try:
+            _attach_trace(rec, arch, shape_name, mesh, strategy,
+                          fusion_mb, sharding_aware, remat, wire_dtype,
+                          spec_overrides, selector_mode, selector_table,
+                          overlap, codec, error_feedback, trace_path,
+                          verbose=verbose)
+        except Exception as te:  # noqa: BLE001 — recorded, not raised
+            rec["measured"] = {"error": f"{type(te).__name__}: {te}"}
+            if verbose:
+                print(f"  trace: FAILED ({te})")
     return rec
 
 
@@ -368,6 +459,10 @@ def main():
     ap.add_argument("--override", action="append", default=[],
                     help="spec override k=v (int/float/bool literal)")
     ap.add_argument("--json")
+    ap.add_argument("--trace", default="",
+                    help="write a Perfetto/Chrome trace_event JSON here "
+                         "and attach the measured-replay residual table "
+                         "(repro.telemetry.closure) to the record")
     args = ap.parse_args()
 
     from repro.configs import SHAPES, list_archs
@@ -398,7 +493,8 @@ def main():
                       selector_mode=args.selector_mode,
                       selector_table=args.selector_table,
                       overlap=args.overlap, codec=args.codec,
-                      error_feedback=args.error_feedback)
+                      error_feedback=args.error_feedback,
+                      trace_path=args.trace)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

@@ -104,12 +104,19 @@ def schedule_table(recs):
             if r.get("status") == "OK" and r.get("schedule")]
     if not rows:
         return ""
+    # measured overlap column (dryrun --trace replays, telemetry
+    # closure) is rendered ONLY when at least one record carries it —
+    # trace-less sweeps keep the historical table shape.
+    has_measured = any(r["schedule"].get("measured_overlap")
+                       for r in rows)
+    meas_hdr = "comm hidden (measured) | " if has_measured else ""
+    meas_sep = "---|" if has_measured else ""
     out = ["### Reduction schedules (per-bucket algorithm selection "
            "+ predicted overlap)\n",
            "| arch | shape | buckets | decomposition | verify | "
            "predicted comm | charged comm | wire bytes (pred→charged) | "
-           "comm hidden | step serial→overlapped |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+           f"comm hidden | {meas_hdr}step serial→overlapped |",
+           "|---|---|---|---|---|---|---|---|---|" + meas_sep + "---|"]
     for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
         s = r["schedule"]
         # fed straight from the serialized IR; older records without an
@@ -125,6 +132,9 @@ def schedule_table(recs):
                     f"{fmt_s(ov['step_overlapped_s'])}")
         else:
             hidden = step = "—"
+        mo = s.get("measured_overlap")
+        measured = (f"{mo['overlap_fraction'] * 100:.0f}%"
+                    if mo else "—") if has_measured else None
         wc = s.get("wire_check")
         if wc:
             mark = "✓" if wc["consistent"] else "**✗**"
@@ -140,11 +150,41 @@ def schedule_table(recs):
             verified = "✓"
         else:
             verified = f"**✗ {vr['n_errors']}**"
+        meas_cell = f"{measured} | " if has_measured else ""
         out.append(
             f"| {r['arch']} | {r['shape']} | "
             f"{s['n_buckets']} | {algs} | {verified} | "
             f"{fmt_s(s['predicted_comm_s'])} | "
-            f"{fmt_s(s['charged_comm_s'])} | {wire} | {hidden} | {step} |")
+            f"{fmt_s(s['charged_comm_s'])} | {wire} | {hidden} | "
+            f"{meas_cell}{step} |")
+    return "\n".join(out) + "\n"
+
+
+def telemetry_table(recs):
+    """Measured-vs-predicted closure summaries (dryrun --trace): the
+    per-record residual table from repro.telemetry.closure — stages
+    replayed as real collectives, calibrated against the cost model,
+    gated by the residual band.  Empty string when no record carries a
+    trace (the section only appears for traced sweeps)."""
+    rows = [r for r in recs
+            if isinstance(r.get("measured"), dict)
+            and "calibration" in r["measured"]]
+    if not rows:
+        return ""
+    out = ["### Telemetry closure (measured stage replays vs cost "
+           "model)\n",
+           "| arch | shape | stages (gated) | calibration k | "
+           "max ratio | band | within |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        m = r["measured"]
+        band = m.get("band", {})
+        mark = "✓" if m.get("all_within_band") else "**✗**"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{m['n_stages']} ({m['n_gated']}) | "
+            f"{m['calibration']['k']:.3g} | {m['max_ratio']:.2f} | "
+            f"≤{band.get('factor', 0):g}× | {mark} |")
     return "\n".join(out) + "\n"
 
 
@@ -177,6 +217,10 @@ def main():
     if sched:
         print()
         print(sched)
+    tele = telemetry_table(recs)
+    if tele:
+        print()
+        print(tele)
 
 
 if __name__ == "__main__":

@@ -64,6 +64,10 @@ def main():
     ap.add_argument("--strategy", default="rhd_rsa")
     ap.add_argument("--timeout", type=int, default=1800)
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="pass --trace to every dryrun: each pair also "
+                         "writes a Perfetto trace next to its record "
+                         "and carries the measured residual table")
     args = ap.parse_args()
 
     from repro.configs import SHAPES, list_archs
@@ -72,11 +76,17 @@ def main():
     shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
 
     n_ok = n_skip = n_fail = 0
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
     for arch in archs:
         for shape in shapes:
+            extra = ()
+            if args.trace:
+                base = pair_path(args.out, arch, shape, mesh_tag,
+                                 args.strategy)
+                extra = ("--trace", base[:-len(".json")] + ".trace.json")
             rec = run_pair(args.out, arch, shape, args.multi_pod,
                            args.strategy, timeout=args.timeout,
-                           force=args.force)
+                           force=args.force, extra_args=extra)
             st = rec.get("status")
             n_ok += st == "OK"
             n_skip += st == "SKIP"
@@ -94,12 +104,24 @@ def main():
                 if sched.get("overlap"):
                     ov = (" overlap="
                           f"{sched['overlap']['overlap_fraction']*100:.0f}%")
+                # measured counterpart (dryrun --trace): rendered only
+                # when the record carries a trace, next to the
+                # predicted fraction
+                mo = sched.get("measured_overlap")
+                if mo:
+                    ov += (" overlap_meas="
+                           f"{mo['overlap_fraction']*100:.0f}%")
                 wc = sched.get("wire_check")
                 if wc:
                     wire = " wire=" + ("ok" if wc.get("consistent")
                                        else "MISMATCH")
+            meas = ""
+            m = rec.get("measured")
+            if isinstance(m, dict) and "calibration" in m:
+                meas = " residual=" + ("ok" if m.get("all_within_band")
+                                       else "BAND")
             print(f"{st:7s} {arch:22s} {shape:12s} {rec.get('mesh')} "
-                  f"dominant={dom}{algs}{ov}{wire} "
+                  f"dominant={dom}{algs}{ov}{wire}{meas} "
                   f"wall={rec.get('wall_s', 0)}s",
                   flush=True)
     print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")

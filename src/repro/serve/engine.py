@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.models import ModelApi
 from .step import make_decode_step, make_prefill_step
 
@@ -51,12 +52,22 @@ class ServeEngine:
         tokens = batch["tokens"]
         b = tokens.shape[0]
 
+        tracer = telemetry.get_tracer()
         pkey = (self._batch_key(batch), cfg.max_seq)
         if self._prefill_key != pkey:
             self._prefill = make_prefill_step(
                 self.model, self.mesh, self.dp_axes, batch, cfg.max_seq)
             self._prefill_key = pkey
-        logits, cache = self._prefill(self.params, batch)
+        with tracer.span("serve.prefill", cat="wall", batch=int(b),
+                         prompt_len=int(tokens.shape[1])) as sp:
+            logits, cache = self._prefill(self.params, batch)
+            if tracer.enabled:
+                jax.block_until_ready((logits, cache))
+        if tracer.enabled:
+            telemetry.METRICS.histogram(
+                "serve_prefill_s",
+                help="host-timed prefill latency (s)"
+            ).observe(sp.t1 - sp.t0)
 
         key = (b, cfg.max_seq)
         if self._decode_key != key:
@@ -69,9 +80,18 @@ class ServeEngine:
         cur = self._sample(logits, rng)
         for t in range(cfg.max_new_tokens):
             out.append(np.asarray(cur))
-            logits, cache = self._decode(self.params, cache, cur[:, None])
-            rng, sub = jax.random.split(rng)
-            cur = self._sample(logits, sub)
+            with tracer.span("serve.decode", cat="wall", token=t) as sp:
+                logits, cache = self._decode(self.params, cache,
+                                             cur[:, None])
+                rng, sub = jax.random.split(rng)
+                cur = self._sample(logits, sub)
+                if tracer.enabled:
+                    jax.block_until_ready(cur)
+            if tracer.enabled:
+                telemetry.METRICS.histogram(
+                    "serve_decode_s",
+                    help="host-timed per-token decode latency (s)"
+                ).observe(sp.t1 - sp.t0)
         return np.stack(out, axis=1)
 
     def _sample(self, logits, rng):

@@ -1,0 +1,55 @@
+"""Runtime telemetry: span tracing, metrics, and timeline closure.
+
+Three pieces (DESIGN.md §3.11):
+
+* :mod:`repro.telemetry.trace` — a :class:`Tracer` producing nested
+  ``Span(name, t0, t1, attrs)`` records keyed by the same IR paths the
+  analysis layer uses (``bucket[i].stage[j]``), exported as
+  Chrome-trace / Perfetto ``trace_event`` JSON plus a schema-versioned
+  ``repro/trace/v1`` record.
+* :mod:`repro.telemetry.metrics` — a process-local registry of
+  counters / gauges / histograms (wire bytes by algorithm×codec,
+  PlanCache hits/misses/interning, step-time percentiles) with a JSON
+  snapshot and a text summary.
+* :mod:`repro.telemetry.closure` — the measured-vs-predicted timeline
+  closure: replays each distinct IR stage as its own jitted collective
+  with host timers, fits a single calibration scalar, and gates the
+  per-stage residuals in a declared band (``BENCH_telemetry.json``).
+
+Telemetry is **zero-cost when disabled** (the default): every hook in
+the execution path guards on :func:`enabled` and records host-side
+metadata only — no operation is ever inserted into a traced
+computation, so compiled HLO, schedule fingerprints, and all existing
+artifacts are byte-identical with telemetry on or off.
+
+``closure`` imports jax and :mod:`repro.core`; it is deliberately NOT
+imported here so that low-level core modules (reducers, aggregator)
+can import :mod:`repro.telemetry` without a cycle.
+"""
+from . import metrics, trace
+from .metrics import REGISTRY as METRICS
+from .metrics import MetricsRegistry, record_plan_cache
+from .trace import (
+    TRACE_SCHEMA,
+    Span,
+    TelemetryConfig,
+    Tracer,
+    configure,
+    enabled,
+    get_tracer,
+)
+
+__all__ = [
+    "METRICS",
+    "MetricsRegistry",
+    "Span",
+    "TRACE_SCHEMA",
+    "TelemetryConfig",
+    "Tracer",
+    "configure",
+    "enabled",
+    "get_tracer",
+    "metrics",
+    "record_plan_cache",
+    "trace",
+]

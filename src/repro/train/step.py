@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro.core import AggregatorConfig, GradientAggregator
 from repro.core.compat import shard_map
 from repro.data.synthetic import batch_pspecs
@@ -121,6 +122,14 @@ def make_train_step(model: ModelApi, optimizer: Optimizer,
         in_shardings=(ns(pspecs), ns(sspecs), batch_sh),
         out_shardings=(ns(pspecs), ns(sspecs), None),
         donate_argnums=(0, 1) if donate else ())
+    if telemetry.enabled():
+        # Host-timed wall span + step-time histogram around every
+        # executed step (the wrapper syncs with block_until_ready, so
+        # the span closes when the devices are done — DESIGN.md §3.11
+        # clock caveats).  Built ONLY when telemetry is on: the
+        # disabled path returns the raw jitted callable untouched.
+        jitted = telemetry.trace.timed_call(jitted, "train.step",
+                                            histogram="train_step_s")
     # "aggregator" rides along so callers (launch/dryrun, examples) can
     # report the resolved per-bucket schedule of strategy="auto".
     return jitted, {"params": pspecs, "opt": sspecs, "batch": bspecs,

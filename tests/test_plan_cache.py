@@ -45,6 +45,36 @@ def test_clear():
     assert len(cache) == 0 and cache.stats.misses == 0
 
 
+def test_stats_callable_snapshot():
+    """cache.stats() (telemetry introspection) and the legacy
+    cache.stats.hits attribute access are BOTH part of the contract."""
+    cache = PlanCache()
+    cache.get_or_build(_tree(), 1024)
+    cache.get_or_build(_tree(), 1024)
+    snap = cache.stats()
+    assert snap["hits"] == 1 and snap["misses"] == 1
+    assert snap["hit_rate"] == 0.5
+    assert snap["interned"] == 1
+    assert snap["n_builds"] == 1
+    assert list(snap["builds"].values()) == [1]
+    # attribute access still works on the same object
+    assert cache.stats.hits == 1
+
+
+def test_stats_feed_metrics_registry():
+    from repro import telemetry
+    cache = PlanCache()
+    cache.get_or_build(_tree(), 1024)
+    cache.get_or_build(_tree(), 1024)
+    reg = telemetry.MetricsRegistry()
+    telemetry.record_plan_cache(cache, registry=reg)
+    g = reg.snapshot()["metrics"]["plan_cache"]["values"]
+    assert g["field=hits"] == 1.0
+    assert g["field=misses"] == 1.0
+    assert g["field=interned"] == 1.0
+    assert g["field=n_builds"] == 1.0
+
+
 def test_concurrent_same_key_builds_once(monkeypatch):
     """Two threads racing on the same key must produce ONE plan object,
     ONE miss, and ONE hit — the loser of the build race may not skew
