@@ -87,6 +87,8 @@ def wire_check(sched, collective_bytes, rel_tol: float = 0.02) -> dict:
     predicted: dict = {}
     for bucket in sched.buckets:
         for st in bucket.stages:
+            if st.hlo_kind is None:
+                continue             # "shard" bracket opener: local
             predicted[st.hlo_kind] = predicted.get(st.hlo_kind, 0) \
                 + st.hlo_bytes
     charged = {k: int(v) for k, v in collective_bytes.items()}

@@ -231,12 +231,33 @@ _STAGE_FIELDS = ("op", "algorithm", "axis", "axis_size", "n_bytes",
                  "wire_bytes")
 
 
+def _bracketed(sched, bucket) -> bool:
+    """Does this bucket carry the model bracket (DESIGN.md §3.12)?
+    The opener is structural: a bracketed stage list starts with the
+    zero-wire ``shard`` op on the schedule's model axis."""
+    return (sched.model_axis is not None and sched.model_axis_size > 1
+            and bool(bucket.stages) and bucket.stages[0].op == "shard")
+
+
 def _rule_sv001(sched, out):
     for b in sched.buckets:
         if not _decomposable(sched, b):
             continue
-        fresh = schedule_mod.decompose(b.strategy, b.n_bytes,
-                                       sched.axis_names, sched.axis_sizes)
+        if _bracketed(sched, b):
+            # Re-derive the whole bracket: decompose() itself emits the
+            # shard opener, the chunk-sized dp stages, and the terminal
+            # model all_gather, so the fresh list is an end-to-end
+            # independent derivation of the three-level composition.
+            fresh = schedule_mod.decompose(
+                b.strategy, b.n_bytes,
+                sched.axis_names, sched.axis_sizes,
+                wire_itemsize=int(jnp.dtype(sched.wire_dtype).itemsize),
+                model_axis=sched.model_axis,
+                model_axis_size=sched.model_axis_size)
+        else:
+            fresh = schedule_mod.decompose(b.strategy, b.n_bytes,
+                                           sched.axis_names,
+                                           sched.axis_sizes)
         if len(fresh) != len(b.stages):
             out.append(Diagnostic(
                 "SV001", ERROR, b.path,
@@ -260,8 +281,18 @@ def _rule_sv001(sched, out):
                for st in b.stages):
             continue                 # coded buckets: SV008 re-derives
         total = sum(st.wire_bytes for st in b.stages)
-        want_total = closed_form_wire_bytes(b.strategy, b.n_bytes,
-                                            sched.axis_sizes)
+        if _bracketed(sched, b):
+            # Bracket closed form: the dp levels move the per-model-rank
+            # chunk, plus (m-1)/m of the chunked payload for the
+            # terminal model all_gather (ring AG of m chunks).
+            m = sched.model_axis_size
+            chunk = schedule_mod.bracket_chunk_bytes(
+                b.n_bytes, m, int(jnp.dtype(sched.wire_dtype).itemsize))
+            want_total = closed_form_wire_bytes(
+                b.strategy, chunk, sched.axis_sizes) + (m - 1) * chunk
+        else:
+            want_total = closed_form_wire_bytes(b.strategy, b.n_bytes,
+                                                sched.axis_sizes)
         if total != want_total:
             out.append(Diagnostic(
                 "SV001", ERROR, b.path,
@@ -272,6 +303,12 @@ def _rule_sv001(sched, out):
 
 def _rule_sv002(sched, out):
     mesh = dict(zip(sched.axis_names, sched.axis_sizes))
+    if sched.model_axis is not None and sched.model_axis_size > 1:
+        # The manual tensor-parallel axis is schedule metadata, not a dp
+        # axis: its shard/all_gather bracket obeys the same stack
+        # discipline but is excluded from reduce coverage (nothing is
+        # ever summed over it).
+        mesh[sched.model_axis] = sched.model_axis_size
     for b in sched.buckets:
         stack: list[str] = []
         covered: dict[str, int] = {ax: 0 for ax in sched.axis_names}
@@ -290,7 +327,12 @@ def _rule_sv002(sched, out):
                     "SV002", ERROR, loc,
                     f"stage axis_size {st.axis_size} != mesh size "
                     f"{mesh[st.axis]} of axis {st.axis!r}"))
-            if st.op == "reduce_scatter":
+            if st.op == "shard":
+                # Bracket opener: pushes like reduce_scatter (the
+                # terminal model all_gather pops it) but reduces
+                # nothing, so it never counts toward coverage.
+                stack.append(st.axis)
+            elif st.op == "reduce_scatter":
                 stack.append(st.axis)
                 covered[st.axis] += 1
             elif st.op == "all_gather":

@@ -152,14 +152,24 @@ class GradientAggregator:
     dp_axes: manual mesh axis names, outermost first — e.g. ``("data",)``
         or ``("pod", "data")`` for the multi-pod mesh.
     cache: PlanCache (defaults to the process-global one).
+    model_axis: the manual tensor-parallel axis of the full-manual train
+        step (DESIGN.md §3.12), or None.  When set, gradients arrive
+        shard-shaped for model-sharded leaves (the gather boundary in
+        core/manual.py slices their cotangents) and replicated-group
+        buckets get the model BRACKET — dp stages on a 1/m chunk plus a
+        terminal ``ag@model`` — so no dp reduction is duplicated across
+        model ranks.  The reduction itself still averages over the data
+        axes only.
     """
 
     def __init__(self, config: AggregatorConfig,
                  dp_axes: Sequence[str],
-                 cache: PlanCache | None = None):
+                 cache: PlanCache | None = None,
+                 model_axis: "str | None" = None):
         config.validate()
         self.config = config
         self.dp_axes = tuple(dp_axes)
+        self.model_axis = model_axis
         self.cache = cache if cache is not None else GLOBAL_PLAN_CACHE
         self.selector = config.make_selector()
         # The ReduceSchedule resolved by the last resolve() /
@@ -176,7 +186,8 @@ class GradientAggregator:
         return str(jnp.dtype(cfg.wire_dtype or cfg.accum_dtype))
 
     def resolve(self, grads, axis_sizes: Sequence[int],
-                groups=None) -> ReduceSchedule:
+                groups=None,
+                model_axis_size: "int | None" = None) -> ReduceSchedule:
         """Resolve ``grads`` (arrays or ShapeDtypeStructs) into the
         :class:`ReduceSchedule` IR without running a reduction.
 
@@ -185,10 +196,21 @@ class GradientAggregator:
         runs outside ``shard_map`` (launch/dryrun's preview path).
         The same call happens at trace time inside ``__call__`` /
         ``overlap_params``, so the preview IS the executed schedule.
+
+        ``model_axis_size`` must be given (same reason) when the
+        aggregator carries a ``model_axis``; preview callers pass the
+        mesh's model-axis size and SHARD-shaped grad structs
+        (core/manual.py ``shard_param_structs``) so the previewed
+        schedule is the traced one.
         """
         cfg = self.config
         if not cfg.sharding_aware:
             groups = None
+        if self.model_axis is not None and model_axis_size is None:
+            raise ValueError(
+                f"aggregator has model_axis={self.model_axis!r}; resolve "
+                f"needs its size (static inside the trace, explicit in "
+                f"preview calls)")
         sched = schedule_mod.plan(
             grads, axis_names=self.dp_axes,
             axis_sizes=tuple(int(s) for s in axis_sizes),
@@ -199,7 +221,9 @@ class GradientAggregator:
             align_buckets=cfg.align_buckets, placement=cfg.placement,
             intra=cfg.selector_link, inter="dcn",
             codec=cfg.codec or "none",
-            error_feedback=cfg.error_feedback, cache=self.cache)
+            error_feedback=cfg.error_feedback,
+            model_axis=self.model_axis,
+            model_axis_size=int(model_axis_size or 1), cache=self.cache)
         self.last_schedule = sched
         if telemetry.enabled():
             tracer = telemetry.get_tracer()
@@ -220,7 +244,10 @@ class GradientAggregator:
         layout, per-bucket strategy, per-axis stages) is resolved at
         trace time and the compiled step hard-codes it."""
         axis_sizes = tuple(axis_size(ax) for ax in self.dp_axes)
-        sched = self.resolve(grads, axis_sizes, groups=groups)
+        msize = axis_size(self.model_axis) \
+            if self.model_axis is not None else None
+        sched = self.resolve(grads, axis_sizes, groups=groups,
+                             model_axis_size=msize)
         dp_size = 1
         for s in axis_sizes:
             dp_size *= s

@@ -37,6 +37,12 @@ schedule, so the degraded mode is strictly a correctness fallback for
 the old-jax CPU test environment — on new jax every collective lowers
 natively and the compiled HLO is the schedule we wrote.  Full-manual
 regions (all mesh axes manual) never degrade on any version.
+
+Since the full-manual lowering path (DESIGN.md §3.12) removed every
+production use of partial-auto, the degraded mode is opt-in: legacy
+partial-auto raises :class:`PartialAutoUnsupported` unless the caller
+passes ``allow_degraded_partial_auto=True``, and even then only meshes
+up to ``PARTIAL_AUTO_MAX_DEVICES`` devices are accepted.
 """
 from __future__ import annotations
 
@@ -208,11 +214,22 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
 
 
 def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
-              check_vma: bool = False):
+              check_vma: bool = False,
+              allow_degraded_partial_auto: bool = False):
     """Version-portable ``shard_map``.
 
     ``axis_names``: the set of MANUAL axes (new-API semantics).  ``None``
     means all mesh axes are manual.
+
+    ``allow_degraded_partial_auto``: on legacy jax, partial-auto regions
+    (``axis_names`` a strict subset of the mesh axes) only lower through
+    the psum-emulation degraded mode (module docstring), which is a
+    correctness fallback — p*N wire cost, validated only up to
+    ``PARTIAL_AUTO_MAX_DEVICES`` devices.  Since the full-manual lowering
+    path landed (DESIGN.md §3.12) no production call site needs it, so it
+    is opt-in: without this flag a legacy partial-auto region raises
+    ``PartialAutoUnsupported`` at ANY device count instead of silently
+    degrading.  New jax ignores the flag (native lowering is exact).
     """
     if _HAS_NEW_SHARD_MAP:
         kwargs: dict[str, Any] = dict(mesh=mesh, in_specs=in_specs,
@@ -233,6 +250,21 @@ def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
     # PartitionSpec is a tuple subclass, so a bare P(...) must be treated
     # as a single-argument spec, not unpacked into per-argument specs.
     n_devices = int(mesh.devices.size)
+    if not allow_degraded_partial_auto:
+        raise PartialAutoUnsupported(
+            f"partial-auto shard_map (manual axes "
+            f"{sorted(set(mesh.axis_names) - auto)}, auto axes "
+            f"{sorted(auto)}) on this jax version ({jax.__version__}) "
+            f"only lowers through the degraded psum-emulation fallback "
+            f"(p*N wire cost; native legacy lowering aborts the PROCESS "
+            f"inside XLA's SPMD partitioner with a fatal 'Check failed: "
+            f"sharding.IsManualSubgroup()'), which is opt-in since the "
+            f"full-manual lowering path landed. Make every mesh axis "
+            f"manual instead (axis_names=None, DESIGN.md §3.12), upgrade "
+            f"to a jax with the new jax.shard_map(check_vma=...) API, or "
+            f"pass allow_degraded_partial_auto=True to accept the "
+            f"degraded fallback on a <= {PARTIAL_AUTO_MAX_DEVICES}-device "
+            f"host mesh (DESIGN.md §3.7 known-limit registry).")
     if n_devices > PARTIAL_AUTO_MAX_DEVICES:
         raise PartialAutoUnsupported(
             f"partial-auto shard_map (manual axes "

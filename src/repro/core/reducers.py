@@ -294,6 +294,13 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
     all_gather@data]``, which is exactly what :func:`hierarchical`
     composes by hand.
 
+    The model bracket's ``shard`` opener (DESIGN.md §3.12) is a local
+    slice — pad the leading dim to the model-axis size and keep this
+    rank's chunk in the ring RS ownership convention (device i holds
+    chunk (i+1) % p) — pushed on the same stack, so its terminal
+    ``all_gather`` stage reassembles through :func:`ring_all_gather`
+    unchanged.
+
     Stages carrying a wire codec (``st.codec != "none"``) encode the
     payload around every ppermute hop; the bucket buffer is upcast to
     float32 for the whole stage list (dequantize-reduce-requantize with
@@ -320,7 +327,7 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
                 axis_size=int(getattr(st, "axis_size", 0)),
                 n_bytes=int(getattr(st, "n_bytes", 0)),
                 wire_bytes=int(getattr(st, "wire_bytes", 0)),
-                hlo_kind=getattr(st, "hlo_kind", ""),
+                hlo_kind=getattr(st, "hlo_kind", "") or "",
                 hlo_bytes=int(getattr(st, "hlo_bytes", 0)),
                 codec=getattr(st, "codec", "none") or "none")
             # Only ppermute-hop algorithms take a permute override
@@ -336,6 +343,13 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
                     raise ValueError(f"unknown reduce-scatter algorithm "
                                      f"{st.algorithm!r}")
                 x, n = ring_reduce_scatter(x, st.axis, permute=permute)
+                pending.append((st.axis, n))
+            elif st.op == "shard":
+                p = axis_size(st.axis)
+                x, n = _pad_leading(x, p)
+                chunks = x.reshape(p, -1, *x.shape[1:])
+                idx = axis_index(st.axis)
+                x = jnp.take(chunks, (idx + 1) % p, axis=0, mode="wrap")
                 pending.append((st.axis, n))
             elif st.op == "all_gather":
                 if not pending or pending[-1][0] != st.axis:

@@ -150,6 +150,7 @@ def _short(alg: str) -> str:
 class Stage:
     """One collective phase of a bucket's decomposition tree."""
     op: str            # "reduce_scatter" | "allreduce" | "all_gather"
+                       # | "shard" (model bracket: local 1/m slice, no wire)
     algorithm: str     # reducers algorithm executing the op
     axis: str          # mesh axis name
     axis_size: int
@@ -176,7 +177,10 @@ class Stage:
         """The compiled-HLO op family this stage lowers to (the wire
         check's per-kind ledger): explicit ppermute schedules →
         collective-permute, the vendor ``psum`` → all-reduce, the PS
-        pattern → all-gather."""
+        pattern → all-gather.  The model bracket's ``shard`` stage is a
+        local slice — no collective, no kind (None)."""
+        if self.op == "shard":
+            return None
         if self.algorithm == "psum":
             return "all-reduce"
         if self.algorithm == "ps_gather":
@@ -226,7 +230,10 @@ class BucketSchedule:
         """Human-readable decomposition, e.g. ``ring@data×rhd@pod`` for
         a composed bucket or ``rhd@data`` for a flat one (RS/AG pairs
         collapse onto their allreduce line).  Coded stages carry a
-        ``:codec`` suffix: ``ring@data:int8×rhd@pod:bf16``."""
+        ``:codec`` suffix: ``ring@data:int8×rhd@pod:bf16``.  The model
+        bracket's terminal stand-alone all_gather renders as its own
+        level — ``ring@data×rhd@pod×ag@model`` (its ``shard`` opener is
+        local and silent)."""
         parts = []
         skip_ag = set()
         for i, st in enumerate(self.stages):
@@ -239,6 +246,9 @@ class BucketSchedule:
                     if other.op == "all_gather" and other.axis == st.axis:
                         skip_ag.add(j)
                         break
+            elif st.op == "all_gather":
+                parts.append(f"ag@{st.axis}")
+                continue
             elif st.op != "allreduce":
                 continue
             part = f"{_short(st.algorithm)}@{st.axis}"
@@ -273,6 +283,13 @@ class ReduceSchedule:
     buckets: tuple[BucketSchedule, ...]
     codec: str = "none"            # requested wire-codec spec (codec.py)
     error_feedback: bool = False   # EF residual state kept by the caller
+    # Model bracket (DESIGN.md §3.12): the manual tensor-parallel axis
+    # whose replicated buckets carry shard -> dp stages -> ag@model.
+    # NOT part of axis_names — the dp reduction axes stay the schedule's
+    # identity; these are emitted/fingerprinted only when set so every
+    # committed pre-bracket artifact stays byte-identical.
+    model_axis: "str | None" = None
+    model_axis_size: int = 1
     plan: "fusion.FusionPlan | None" = None   # None = detached
 
     # -- views --------------------------------------------------------------
@@ -353,6 +370,9 @@ class ReduceSchedule:
             rec["codec"] = self.codec
         if self.error_feedback:
             rec["error_feedback"] = True
+        if self.model_axis is not None and self.model_axis_size > 1:
+            rec["model_axis"] = self.model_axis
+            rec["model_axis_size"] = self.model_axis_size
         if not group:
             rec["buckets"] = [b.to_json() for b in self.buckets]
             return rec
@@ -417,6 +437,9 @@ class ReduceSchedule:
             struct["codec"] = self.codec
         if self.error_feedback:
             struct["error_feedback"] = True
+        if self.model_axis is not None and self.model_axis_size > 1:
+            struct["model_axis"] = self.model_axis
+            struct["model_axis_size"] = self.model_axis_size
         blob = json.dumps(struct, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:16]
 
@@ -465,7 +488,9 @@ def from_json(rec: dict) -> ReduceSchedule:
         threshold_bytes=int(rec["threshold_bytes"]),
         switch_points=tuple(int(s) for s in rec["switch_points"]),
         buckets=tuple(buckets), codec=rec.get("codec", "none"),
-        error_feedback=bool(rec.get("error_feedback", False)), plan=None)
+        error_feedback=bool(rec.get("error_feedback", False)),
+        model_axis=rec.get("model_axis"),
+        model_axis_size=int(rec.get("model_axis_size", 1)), plan=None)
 
 
 # ---------------------------------------------------------------------------
@@ -515,11 +540,21 @@ def _flat_allreduce_stage(alg: str, cname: str, axis: str, p: int,
                  codec=eff)
 
 
+def bracket_chunk_bytes(n_bytes: int, m: int, wire_itemsize: int) -> int:
+    """Per-model-rank chunk of a bracketed bucket: elements padded up to
+    a multiple of ``m`` (the executor pads the fused buffer), then 1/m of
+    the padded payload."""
+    elems = max(int(n_bytes) // int(wire_itemsize), 1)
+    padded = elems + (-elems) % int(m)
+    return (padded // int(m)) * int(wire_itemsize)
+
+
 def decompose(strategy: str, n_bytes: int,
               axis_names: Sequence[str], axis_sizes: Sequence[int],
               intra=cost_model.ICI, inter=cost_model.DCN,
               gamma: float = cost_model.GAMMA_S_PER_BYTE,
-              codec: str = "none", wire_itemsize: int = 4
+              codec: str = "none", wire_itemsize: int = 4,
+              model_axis: "str | None" = None, model_axis_size: int = 1
               ) -> tuple[Stage, ...]:
     """The decomposition tree of one bucket: per-axis stages with
     algorithmic wire bytes (reducers accounting) and cost-model
@@ -534,7 +569,18 @@ def decompose(strategy: str, n_bytes: int,
     (psum, ps_gather) degrade to ``"none"``; coded stages charge
     ENCODED wire bytes (in ``wire_itemsize``-byte decoded elements)
     plus per-hop scale scalars, and a γ-style quantize toll in
-    ``predicted_s``."""
+    ``predicted_s``.
+
+    ``model_axis``/``model_axis_size`` (DESIGN.md §3.12): when set (size
+    > 1), wrap the dp stages in the model BRACKET — a local ``shard``
+    opener (pad elements to a multiple of m, keep this rank's 1/m
+    chunk; zero wire), the dp stages on the chunk, and a terminal ring
+    ``all_gather`` over the model axis ((m-1) hops of the chunk on the
+    intra link).  Replicated-bucket gradients are identical across model
+    ranks, so each rank dp-reduces a disjoint chunk and the gather
+    reassembles the exact dp-sum — bit-for-bit the un-bracketed result,
+    at 1/m of the dp wire.  The bracket does not compose with wire
+    codecs (SV008's byte arithmetic charges from the full bucket)."""
     names = tuple(axis_names)
     sizes = tuple(int(s) for s in axis_sizes)
     if len(names) != len(sizes) or not names:
@@ -545,6 +591,28 @@ def decompose(strategy: str, n_bytes: int,
     parts = split_strategy(strategy)
     n_bytes = int(n_bytes)
     wire_itemsize = int(wire_itemsize)
+
+    m = int(model_axis_size)
+    if model_axis is not None and m > 1:
+        if (codec or "none") != "none":
+            raise ValueError("the model bracket does not compose with "
+                             "wire codecs (codec={!r})".format(codec))
+        if model_axis in names:
+            raise ValueError(f"model axis {model_axis!r} collides with "
+                             f"dp axes {names}")
+        chunk = bracket_chunk_bytes(n_bytes, m, wire_itemsize)
+        inner = decompose(strategy, chunk, names, sizes, intra=intra,
+                          inter=inter, gamma=gamma, codec="none",
+                          wire_itemsize=wire_itemsize)
+        shard = Stage(op="shard", algorithm="ring_rsa", axis=model_axis,
+                      axis_size=m, n_bytes=n_bytes, wire_bytes=0,
+                      predicted_s=0.0)
+        gather = Stage(op="all_gather", algorithm="ring_rsa",
+                       axis=model_axis, axis_size=m, n_bytes=chunk,
+                       wire_bytes=(m - 1) * chunk,
+                       predicted_s=(m - 1) * intra.alpha_s
+                       + (m - 1) * chunk * intra.beta)
+        return (shard,) + inner + (gather,)
 
     if len(parts) == 1:
         # Flat fold: a FULL allreduce per axis, innermost first —
@@ -659,6 +727,9 @@ class ScheduleRequest:
     # wire-itemsize key scheme (pinned in tests/test_wire_dtype.py).
     codec: str = "none"
     error_feedback: bool = False
+    # (model_axis, size) when the planner may bracket replicated buckets
+    # over a manual model axis; None otherwise (DESIGN.md §3.12).
+    model_key: Hashable = None
 
     def fingerprint(self) -> Hashable:
         # NOT dataclasses.astuple: that deep-copies every field, and a
@@ -667,7 +738,7 @@ class ScheduleRequest:
                 self.threshold_bytes, self.fuse, self.wire_dtype,
                 self.axis_names, self.axis_sizes, self.strategy_context,
                 self.switch_points, self.placement, self.link_key,
-                self.codec, self.error_feedback)
+                self.codec, self.error_feedback, self.model_key)
 
 
 def _tree_meta(tree, groups):
@@ -688,6 +759,7 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
          align_buckets: bool = True, placement: str = "post_backward",
          intra=cost_model.ICI, inter=cost_model.DCN,
          codec: str = "none", error_feedback: bool = False,
+         model_axis: "str | None" = None, model_axis_size: int = 1,
          cache=None) -> ReduceSchedule:
     """Resolve ``tree`` (arrays or ShapeDtypeStructs) into a
     :class:`ReduceSchedule` — the ONE path from config to executable
@@ -700,6 +772,15 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
     choice; ``strategy`` is the fixed name used when ``selector`` is
     None.  ``cache`` (a :class:`repro.core.plan_cache.PlanCache`)
     interns resolved schedules by :class:`ScheduleRequest` fingerprint.
+
+    ``model_axis``/``model_axis_size``: the manual tensor-parallel axis
+    of the full-manual train step (DESIGN.md §3.12).  Replicated-group
+    buckets (whose gradients are identical across model ranks) get the
+    model BRACKET — their dp stages run on a 1/m chunk and a terminal
+    ``ag@model`` reassembles — while model-sharded leaves arrive
+    shard-shaped from the gather boundary and dp-reduce as-is.  The
+    selector prices bracketed buckets on the chunk it actually moves.
+    Codec'd plans skip the bracket (decompose: SV008 byte arithmetic).
     """
     names = tuple(axis_names)
     sizes = tuple(int(s) for s in axis_sizes)
@@ -724,6 +805,13 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
         ("auto", selector.fingerprint()) if selector is not None \
         else normalize_strategy(strategy, len(names))
 
+    model_m = int(model_axis_size)
+    may_bracket = (model_axis is not None and model_m > 1
+                   and codec == "none")
+
+    def _replicated_group(g) -> bool:
+        return g is None or all(e is None for e in tuple(g))
+
     def _resolve() -> ReduceSchedule:
         fplan = fusion.build_plan(
             tree, int(threshold_bytes), groups=groups, fuse=fuse,
@@ -733,16 +821,24 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
         buckets = []
         for i, bucket in enumerate(fplan.buckets):
             n_bytes = int(bucket.size) * wire_itemsize
+            bracket = may_bracket and _replicated_group(bucket.group)
+            # Price what the dp levels actually move: the 1/m chunk for
+            # bracketed buckets, the full payload otherwise.
+            dp_bytes = bracket_chunk_bytes(n_bytes, model_m,
+                                           wire_itemsize) \
+                if bracket else n_bytes
             if selector is not None:
-                choice = selector.choose(n_bytes, sizes)
+                choice = selector.choose(dp_bytes, sizes)
                 strat = normalize_strategy(choice.strategy, len(names))
-                predicted = choice.predicted_s
+                predicted = None if bracket else choice.predicted_s
             else:
                 strat = normalize_strategy(strategy, len(names))
                 predicted = None
             stages = decompose(strat, n_bytes, names, sizes,
                                intra=intra, inter=inter, codec=codec,
-                               wire_itemsize=wire_itemsize)
+                               wire_itemsize=wire_itemsize,
+                               model_axis=model_axis if bracket else None,
+                               model_axis_size=model_m if bracket else 1)
             if predicted is None:
                 predicted = sum(st.predicted_s for st in stages)
             buckets.append(BucketSchedule(
@@ -754,7 +850,9 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
             axis_names=names, axis_sizes=sizes, wire_dtype=wire_dtype,
             placement=placement, threshold_bytes=int(threshold_bytes),
             switch_points=switch, buckets=tuple(buckets), codec=codec,
-            error_feedback=error_feedback, plan=fplan)
+            error_feedback=error_feedback,
+            model_axis=model_axis if may_bracket else None,
+            model_axis_size=model_m if may_bracket else 1, plan=fplan)
 
     if cache is None:
         return _resolve()
@@ -767,7 +865,8 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
         placement=placement,
         link_key=(intra.alpha_s, intra.bandwidth,
                   inter.alpha_s, inter.bandwidth),
-        codec=codec, error_feedback=error_feedback)
+        codec=codec, error_feedback=error_feedback,
+        model_key=(model_axis, model_m) if may_bracket else None)
     return cache.resolve(request, _resolve)
 
 
@@ -782,7 +881,9 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
               latency_fn=None, wire_dtype: str = "float32",
               placement: str = "post_backward",
               threshold_bytes: int = 0,
-              codec: str = "none") -> ReduceSchedule:
+              codec: str = "none",
+              model_axis: "str | None" = None,
+              model_axis_size: int = 1) -> ReduceSchedule:
     """A DETACHED schedule for an analytic model's bucket list (the
     experiment matrix's stand-in for a FusionPlan): bucket i is the
     i-th variable-group from the START of the network, so readiness is
@@ -790,7 +891,9 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
     ``overlap.model_tasks``.  ``latency_fn`` overrides the per-bucket
     predicted latency (the matrix's per-design cost functions and the
     measured backend); stages keep their cost-model estimates either
-    way."""
+    way.  ``model_axis``/``model_axis_size`` bracket EVERY bucket over a
+    manual model axis (synthetic buckets carry no group tags, so all are
+    treated as replicated — DESIGN.md §3.12)."""
     sizes = tuple(int(s) for s in axis_sizes)
     names = tuple(axis_names) if axis_names is not None else \
         (("pod", "data") if len(sizes) == 2
@@ -800,12 +903,16 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
     codec = codec or "none"
     codec_mod.validate_spec(codec)
     n = len(tuple(bucket_bytes))
+    model_m = int(model_axis_size)
+    bracket = model_axis is not None and model_m > 1
     buckets = []
     for i, b in enumerate(bucket_bytes):
         n_bytes = int(b)
         stages = decompose(strat, n_bytes, names, sizes,
                            intra=intra, inter=inter, codec=codec,
-                           wire_itemsize=itemsize)
+                           wire_itemsize=itemsize,
+                           model_axis=model_axis if bracket else None,
+                           model_axis_size=model_m if bracket else 1)
         predicted = float(latency_fn(n_bytes)) if latency_fn is not None \
             else sum(st.predicted_s for st in stages)
         buckets.append(BucketSchedule(
@@ -816,4 +923,6 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
         axis_names=names, axis_sizes=sizes,
         wire_dtype=str(jnp.dtype(wire_dtype)), placement=placement,
         threshold_bytes=int(threshold_bytes), switch_points=(),
-        buckets=tuple(buckets), codec=codec, plan=None)
+        buckets=tuple(buckets), codec=codec,
+        model_axis=model_axis if bracket else None,
+        model_axis_size=model_m if bracket else 1, plan=None)

@@ -86,7 +86,14 @@ def predict_latency(strategy: str, n_bytes: float,
     ``dp_axes``) — the stage sum of the schedule IR's decomposition
     tree (``schedule.strategy_latency``).  ``codec`` shrinks the β term
     to the encoded bytes and adds the quantize toll (core/codec.py) on
-    the algorithms that can carry it."""
+    the algorithms that can carry it.
+
+    Model brackets (DESIGN.md §3.12) stay invisible here on purpose:
+    when a schedule carries a ``model_axis`` the aggregator prices the
+    dp levels on the 1/m ``bracket_chunk_bytes`` chunk — the selector is
+    simply asked about the chunk, and the terminal ``(m-1)/m``
+    all-gather is a fixed toll identical across every dp strategy, so
+    it can never flip a choice and is not modelled."""
     sizes = tuple(int(s) for s in axis_sizes)
     if len(sizes) > 2:
         raise ValueError(f"selector supports 1- or 2-axis meshes, "

@@ -248,6 +248,18 @@ ANALYSIS_CODEC_CELLS = (
     ("ring_rsa×rhd_rsa", (2, 256), ("pod", "data"), "fp8_e4m3"),
 )
 
+# Model-bracketed three-level schedules (DESIGN.md §3.12): the dp
+# levels run on the 1/m bracket chunk and a terminal ``ag@model``
+# reassembles — the per-bucket IR the full-manual train step executes
+# on model-parallel meshes.  Includes the 2×16×16 production mesh the
+# 512-device dryrun compiles for real (dp = pod×data, m = 16).
+# (strategy, dp axis_sizes, dp axis_names, model_axis_size)
+ANALYSIS_BRACKET_CELLS = (
+    ("rhd_rsa", (16,), ("data",), 2),
+    ("ring_rsa×rhd_rsa", (2, 2), ("pod", "data"), 2),
+    ("ring_rsa×rhd_rsa", (2, 16), ("pod", "data"), 16),
+)
+
 
 def analysis_cells(designs: Sequence[str] = DESIGNS,
                    models: Sequence[str] = MODELS,
@@ -259,8 +271,10 @@ def analysis_cells(designs: Sequence[str] = DESIGNS,
     × model × p, one resolved IR per cell via :func:`point_schedule`),
     plus the meshes only the *static* path can reach: 512 workers,
     composed two-level ``ring_rsa×<outer>`` schedules on multi-pod
-    meshes (including 2×256 = the 512-chip production mesh), and a
-    three-axis flat fold.  Every cell must verify clean
+    meshes (including 2×256 = the 512-chip production mesh), a
+    three-axis flat fold, codec'd cells (SV008), and model-bracketed
+    three-level cells (§3.12, including 2×16 dp × m=16 = the 2×16×16
+    production mesh).  Every cell must verify clean
     (tests/test_analysis.py pins this)."""
     prof = PROFILES[profile]
     for d in designs:
@@ -290,6 +304,13 @@ def analysis_cells(designs: Sequence[str] = DESIGNS,
         yield (f"codec/{strat}/{mesh}/{codec}",
                schedule_mod.synthetic(sizes, strat, mesh_sizes, names,
                                       intra=prof.link, codec=codec))
+    for strat, mesh_sizes, names, m in ANALYSIS_BRACKET_CELLS:
+        mesh = "x".join(str(s) for s in mesh_sizes)
+        yield (f"bracket/{strat}/{mesh}xm{m}",
+               schedule_mod.synthetic(sizes, strat, mesh_sizes, names,
+                                      intra=prof.link,
+                                      model_axis="model",
+                                      model_axis_size=m))
 
 
 # -- matrix execution -------------------------------------------------------

@@ -31,7 +31,8 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                 remat: bool = False, wire_dtype: str = "",
                 spec_overrides=None, selector_mode: str = "analytic",
                 selector_table: str = "", overlap: bool = False,
-                codec: str = "", error_feedback: bool = False):
+                codec: str = "", error_feedback: bool = False,
+                legacy_partial_auto: bool = False):
     """Returns (jitted_fn, arg_structs, aux); aux carries the
     GradientAggregator (train shapes only) so the caller can report the
     resolved per-bucket schedule."""
@@ -69,12 +70,25 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
                                         codec=codec,
                                         error_feedback=error_feedback),
             dp_axes=dp_axes)
-        step, shardings = make_train_step(model, opt, mesh, cfg, specs,
-                                          donate=False)
+        step, shardings = make_train_step(
+            model, opt, mesh, cfg, specs, donate=False,
+            legacy_partial_auto=legacy_partial_auto)
         params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         opt_state = jax.eval_shape(opt.init, params)
-        aux = {"aggregator": shardings.get("aggregator"),
-               "dp_axes": dp_axes}
+        agg = shardings.get("aggregator")
+        aux = {"aggregator": agg, "dp_axes": dp_axes,
+               "resolve_struct": params, "model_axis_size": None}
+        if agg is not None and getattr(agg, "model_axis", None):
+            # Full-manual lowering (§3.12): the aggregator sees SHARD-
+            # shaped grads inside the region, so the preview resolve
+            # must run on the sharded structs with the static axis size.
+            from repro.core import manual as manual_mod
+            m = int(mesh.shape.get(agg.model_axis, 1))
+            mspecs = manual_mod.model_shard_specs(params, mesh,
+                                                  axis=agg.model_axis)
+            aux["resolve_struct"] = manual_mod.shard_param_structs(
+                params, mspecs, m)
+            aux["model_axis_size"] = m
         return step, (params, opt_state, specs), aux
 
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -90,7 +104,8 @@ def _build_step(arch: str, shape_name: str, mesh, strategy: str,
 
 
 def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
-                     collective_bytes=None) -> dict:
+                     collective_bytes=None,
+                     model_axis_size=None) -> dict:
     """Resolve and record the ReduceSchedule IR (DESIGN.md §3.8): the
     same object the compiled step executes — per-bucket decomposition
     trees with per-stage wire bytes and latencies — serialized under
@@ -105,7 +120,8 @@ def _schedule_record(agg, mesh, dp_axes, params_struct, roof,
 
     axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
     sched = agg.resolve(params_struct, axis_sizes,
-                        groups=param_groups(params_struct))
+                        groups=param_groups(params_struct),
+                        model_axis_size=model_axis_size)
     timeline = overlap_mod.simulate_schedule(sched,
                                              compute_s=roof.compute_s)
     verify_diags = analysis_verify.verify_schedule(sched)
@@ -180,7 +196,8 @@ def _attach_trace(rec: dict, arch: str, shape_name: str, mesh,
                   remat: bool, wire_dtype: str, spec_overrides,
                   selector_mode: str, selector_table: str, overlap: bool,
                   codec: str, error_feedback: bool, trace_path: str,
-                  verbose: bool = True) -> None:
+                  verbose: bool = True,
+                  legacy_partial_auto: bool = False) -> None:
     """--trace: enable telemetry, replay the config's ReduceSchedule
     through the measured probe (repro.telemetry.closure — each distinct
     stage as its own jitted collective on an axis_size submesh of the
@@ -214,6 +231,10 @@ def _attach_trace(rec: dict, arch: str, shape_name: str, mesh,
     model = build_model(spec)
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     dp_axes = dp_axes_of(mesh)
+    # mirror make_train_step's lowering gate so the replayed schedule is
+    # the one the compiled step carries (bracketed under full-manual)
+    manual = ("model" in mesh.axis_names and not legacy_partial_auto
+              and not bool(getattr(spec, "seq_parallel", False)))
     agg = GradientAggregator(
         AggregatorConfig(strategy=strategy, fusion_threshold_mb=fusion_mb,
                          sharding_aware=sharding_aware,
@@ -221,12 +242,20 @@ def _attach_trace(rec: dict, arch: str, shape_name: str, mesh,
                          selector_mode=selector_mode,
                          selector_table=selector_table,
                          overlap=overlap, codec=codec,
-                         error_feedback=error_feedback), dp_axes)
+                         error_feedback=error_feedback), dp_axes,
+        model_axis="model" if manual else None)
     axis_sizes = tuple(int(mesh.shape[a]) for a in dp_axes)
+    model_m = None
+    if manual:
+        from repro.core import manual as manual_mod
+        model_m = int(mesh.shape.get("model", 1))
+        mspecs = manual_mod.model_shard_specs(params, mesh)
+        params = manual_mod.shard_param_structs(params, mspecs, model_m)
     with tracer.span("dryrun.trace", cat="wall", arch=arch,
                      shape=shape_name):
         sched = agg.resolve(params, axis_sizes,
-                            groups=param_groups(params))
+                            groups=param_groups(params),
+                            model_axis_size=model_m)
         measured = closure.measure_schedule(sched, reps=2, tracer=tracer)
         report = closure.closure_report(sched, measured)
     rec["measured"] = report
@@ -261,7 +290,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             spec_overrides=None, selector_mode: str = "analytic",
             selector_table: str = "", overlap: bool = False,
             codec: str = "", error_feedback: bool = False,
-            trace_path: str = "") -> dict:
+            trace_path: str = "",
+            legacy_partial_auto: bool = False) -> dict:
     import jax
     from repro.configs import SHAPES, get_spec, shape_supported
     from repro.core.compat import use_mesh
@@ -295,7 +325,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                           selector_mode=selector_mode,
                                           selector_table=selector_table,
                                           overlap=overlap, codec=codec,
-                                          error_feedback=error_feedback)
+                                          error_feedback=error_feedback,
+                                          legacy_partial_auto=
+                                          legacy_partial_auto)
             lowered = step.lower(*args)
             t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
@@ -341,8 +373,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             )
             if aux.get("aggregator") is not None:
                 rec["schedule"] = _schedule_record(
-                    aux["aggregator"], mesh, aux["dp_axes"], args[0],
-                    roof=roof, collective_bytes=coll.bytes_by_kind)
+                    aux["aggregator"], mesh, aux["dp_axes"],
+                    aux["resolve_struct"], roof=roof,
+                    collective_bytes=coll.bytes_by_kind,
+                    model_axis_size=aux.get("model_axis_size"))
             if verbose:
                 print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: OK "
                       f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
@@ -420,7 +454,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                           fusion_mb, sharding_aware, remat, wire_dtype,
                           spec_overrides, selector_mode, selector_table,
                           overlap, codec, error_feedback, trace_path,
-                          verbose=verbose)
+                          verbose=verbose,
+                          legacy_partial_auto=legacy_partial_auto)
         except Exception as te:  # noqa: BLE001 — recorded, not raised
             rec["measured"] = {"error": f"{type(te).__name__}: {te}"}
             if verbose:
@@ -456,6 +491,14 @@ def main():
                     help="carry the quantization residual into the next "
                          "step (requires --codec)")
     ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--legacy-partial-auto", action="store_true",
+                    help="opt back into the pre-§3.12 partial-auto "
+                         "lowering (model axis AUTO under GSPMD): on "
+                         "legacy jax this degrades to psum emulation and "
+                         "is refused beyond compat.PARTIAL_AUTO_MAX_"
+                         "DEVICES (recorded as a statically-verified "
+                         "SKIP).  Default is the full-manual path, "
+                         "which compiles at any device count.")
     ap.add_argument("--override", action="append", default=[],
                     help="spec override k=v (int/float/bool literal)")
     ap.add_argument("--json")
@@ -494,7 +537,8 @@ def main():
                       selector_table=args.selector_table,
                       overlap=args.overlap, codec=args.codec,
                       error_feedback=args.error_feedback,
-                      trace_path=args.trace)
+                      trace_path=args.trace,
+                      legacy_partial_auto=args.legacy_partial_auto)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

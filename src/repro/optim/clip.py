@@ -1,18 +1,46 @@
-"""Global-norm gradient clipping."""
+"""Global-norm gradient clipping.
+
+Under the full-manual model-axis lowering (DESIGN.md §3.12) gradients of
+model-sharded leaves are SHARD-shaped inside the region — each model
+rank holds 1/m of the leaf — while replicated leaves carry identical
+full gradients on every model rank.  ``sharded``/``model_axis`` make the
+norm exact there: squared sums of sharded leaves are psum'd over the
+model axis (disjoint shards), replicated leaves are counted once (a
+plain psum over everything would overcount them m-fold).  The default
+(no kwargs) is the unsharded behavior, bit-for-bit.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 
-def global_norm(tree):
+
+def global_norm(tree, sharded=None, model_axis: "str | None" = None):
+    """L2 norm of all leaves.  ``sharded``: optional pytree of bools
+    matching ``tree`` — True leaves hold one model shard and their
+    squared sums are psum'd over ``model_axis`` (a manual mesh axis)."""
+    if sharded is None or model_axis is None:
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                            for x in leaves))
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                        for x in leaves))
+    flags = jax.tree_util.tree_leaves(sharded)
+    if len(leaves) != len(flags):
+        raise ValueError(f"sharded mask has {len(flags)} leaves for a "
+                         f"{len(leaves)}-leaf tree")
+    zero = jnp.zeros((), jnp.float32)
+    sq_sharded = sum((jnp.sum(jnp.square(x.astype(jnp.float32)))
+                      for x, f in zip(leaves, flags) if f), zero)
+    sq_repl = sum((jnp.sum(jnp.square(x.astype(jnp.float32)))
+                   for x, f in zip(leaves, flags) if not f), zero)
+    return jnp.sqrt(compat.psum(sq_sharded, model_axis) + sq_repl)
 
 
-def clip_by_global_norm(tree, max_norm: float):
-    norm = global_norm(tree)
+def clip_by_global_norm(tree, max_norm: float, sharded=None,
+                        model_axis: "str | None" = None):
+    norm = global_norm(tree, sharded=sharded, model_axis=model_axis)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
     return jax.tree_util.tree_map(
         lambda x: (x * scale.astype(x.dtype)), tree), norm

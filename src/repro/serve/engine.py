@@ -51,6 +51,17 @@ class ServeEngine:
         cfg = self.cfg
         tokens = batch["tokens"]
         b = tokens.shape[0]
+        prompt_len = int(tokens.shape[1])
+        if prompt_len + cfg.max_new_tokens > cfg.max_seq:
+            raise ValueError(
+                f"prompt_len ({prompt_len}) + max_new_tokens "
+                f"({cfg.max_new_tokens}) = "
+                f"{prompt_len + cfg.max_new_tokens} exceeds "
+                f"ServeConfig.max_seq ({cfg.max_seq}): the decode cache "
+                f"is allocated at max_seq positions and token "
+                f"{cfg.max_seq - prompt_len} would write past it.  "
+                f"Raise max_seq, shorten the prompt, or lower "
+                f"max_new_tokens.")
 
         tracer = telemetry.get_tracer()
         pkey = (self._batch_key(batch), cfg.max_seq)
@@ -76,10 +87,28 @@ class ServeEngine:
             self._decode_key = key
 
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # Split BEFORE the first sample: the prefill sample consumes a
+        # subkey, never a key the loop will split again (key reuse would
+        # correlate the first generated token with the second).
+        rng, sub = jax.random.split(rng)
         out = []
-        cur = self._sample(logits, rng)
+        eos = jnp.int32(cfg.eos_id)
+        finished = jnp.zeros((b,), bool) if cfg.eos_id >= 0 else None
+        cur = self._sample(logits, sub)
         for t in range(cfg.max_new_tokens):
+            if finished is not None:
+                # rows that already emitted EOS keep emitting it
+                cur = jnp.where(finished, eos, cur)
             out.append(np.asarray(cur))
+            if finished is not None:
+                finished = finished | (cur == eos)
+                if bool(finished.all()):
+                    # every row is done: pad the remaining positions
+                    # without running the (shape-cached) decode step
+                    pad = np.full((b,), cfg.eos_id, np.int32)
+                    out.extend(pad for _ in
+                               range(cfg.max_new_tokens - len(out)))
+                    break
             with tracer.span("serve.decode", cat="wall", token=t) as sp:
                 logits, cache = self._decode(self.params, cache,
                                              cur[:, None])

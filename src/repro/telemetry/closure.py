@@ -156,6 +156,12 @@ def measure_schedule(sched, wire_dtype: str = "", reps: int = 3,
     cache: Dict[tuple, float] = {}
     out: Dict[str, float] = {}
     for path, _bucket, st in sched.iter_stages():
+        if st.op == "shard":
+            # model-bracket opener: a local slice, nothing on the wire —
+            # recorded at zero so closure_report keeps full path
+            # coverage (wire_bytes=0 keeps it out of the gated band)
+            out[path] = 0.0
+            continue
         key = stage_key(st)
         if key not in cache:
             with tr.span(f"probe:{path}", cat="wall", ir_path=path,

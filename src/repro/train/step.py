@@ -19,8 +19,20 @@ Structure (DESIGN.md §3.1, §3.6):
 
 The data axes are MANUAL: the gradient sum over data shards happens only
 through the aggregator's explicit algorithm (the compiled HLO contains
-our collective-permutes, no XLA-chosen allreduce). The `model` axis stays
-AUTO so GSPMD shards FFN/heads/experts/vocab via `param_pspecs` rules.
+our collective-permutes, no XLA-chosen allreduce).  The ``model`` axis
+is manual too (full-manual lowering, DESIGN.md §3.12): parameters enter
+the region SHARD-shaped under per-leaf specs derived from
+``param_pspecs`` (core/manual.py), a differentiable gather boundary
+reconstructs the full tensors for the loss, and its backward slices each
+cotangent back to the rank's shard — so model-sharded leaves dp-reduce
+at 1/m wire while replicated buckets carry the IR's three-level model
+bracket (``ring@data×rhd@pod×ag@model``).  Full-manual regions never
+degrade on legacy jax, which is what unlocks the 512-device production
+mesh past ``compat.PARTIAL_AUTO_MAX_DEVICES``.  The pre-§3.12 partial
+-auto lowering (model axis AUTO under GSPMD) survives as the explicit
+``legacy_partial_auto`` opt-in — required for ``seq_parallel`` residual
+sharding, which only GSPMD can express — and on legacy jax is refused
+by ``compat.shard_map`` beyond 32 devices.
 
 Clipping order matters twice.  The seed clipped LOCAL grads by each
 rank's own shard norm before aggregation, which (a) is not synchronous
@@ -43,6 +55,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import telemetry
 from repro.core import AggregatorConfig, GradientAggregator
+from repro.core import manual as manual_mod
 from repro.core.compat import shard_map
 from repro.data.synthetic import batch_pspecs
 from repro.models import ModelApi, param_groups, param_pspecs
@@ -59,35 +72,69 @@ class TrainStepConfig:
 def make_train_step(model: ModelApi, optimizer: Optimizer,
                     mesh, cfg: TrainStepConfig,
                     batch_example: Any,
-                    donate: bool = True):
+                    donate: bool = True,
+                    legacy_partial_auto: bool = False):
     """Build the jitted multi-device train step.
 
     ``batch_example``: pytree of arrays or ShapeDtypeStructs with GLOBAL
     shapes (leading dim = global batch).
     Returns (step_fn, shardings) where
     ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``.
+
+    ``legacy_partial_auto``: opt back into the pre-§3.12 lowering (model
+    axis AUTO under GSPMD, degraded psum-emulation on legacy jax, hard
+    ceiling at ``compat.PARTIAL_AUTO_MAX_DEVICES`` there).  The default
+    full-manual path never degrades; ``seq_parallel`` specs force the
+    legacy path since their residual-stream sharding constraint is a
+    GSPMD annotation the manual region cannot express.
     """
     dp_axes = tuple(cfg.dp_axes)
-    agg = GradientAggregator(cfg.aggregator, dp_axes)
+    model_axis = "model" if "model" in mesh.axis_names else None
+    seq_parallel = bool(getattr(model.spec, "seq_parallel", False))
+    manual = (model_axis is not None and not legacy_partial_auto
+              and not seq_parallel)
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_pspecs(params_struct)
+    sspecs = optimizer.state_pspecs(pspecs)
+
+    mspecs = sharded_mask = None
+    if manual:
+        mspecs = manual_mod.model_shard_specs(params_struct, mesh)
+        sharded_mask = manual_mod.sharded_mask(params_struct, mspecs)
+    agg = GradientAggregator(cfg.aggregator, dp_axes,
+                             model_axis=model_axis if manual else None)
+
+    def gather(p):
+        return manual_mod.gather_params(p, mspecs) if manual else p
 
     def local_step(params, opt_state, batch):
         groups = param_groups(params)
         if cfg.aggregator.overlap:
             # In-backward aggregation: the boundary must sit inside the
             # differentiated function so each bucket's reduction fires
-            # as its cotangents complete (readiness order).
+            # as its cotangents complete (readiness order).  The gather
+            # boundary wraps OUTSIDE the bucket boundaries, so sharded
+            # cotangents are sliced back before their bucket reduces.
             def loss_fn(p, b):
-                return model.loss(agg.overlap_params(p, groups=groups), b)
+                return model.loss(
+                    gather(agg.overlap_params(p, groups=groups)), b)
         else:
-            loss_fn = model.loss
+            def loss_fn(p, b):
+                return model.loss(gather(p), b)
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch)
         if not cfg.aggregator.overlap:
             grads = agg(grads, groups=groups)           # ← the technique
         # Clip AFTER aggregation: the norm is the global-batch gradient
-        # norm, identical on every rank (model-axis partial sums are
-        # combined by GSPMD on the auto axis).
-        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        # norm, identical on every rank.  On the full-manual path the
+        # model-sharded leaves hold 1/m each, so their squared sums are
+        # psum'd over the model axis (replicated leaves counted once);
+        # on the legacy path GSPMD combines the auto-axis partial sums.
+        grads, gnorm = clip_by_global_norm(
+            grads, cfg.clip_norm,
+            sharded=sharded_mask if manual else None,
+            model_axis=model_axis if manual else None)
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = jax.tree_util.tree_map(
             lambda p, u: p + u.astype(p.dtype), params, updates)
@@ -96,15 +143,24 @@ def make_train_step(model: ModelApi, optimizer: Optimizer,
         return params, opt_state, metrics
 
     bspecs = batch_pspecs(batch_example, dp_axes)
+    if manual:
+        # Full-manual region: params/opt state enter shard-shaped under
+        # the per-leaf model specs; every mesh axis is manual, so legacy
+        # jax takes the never-degrading branch at any device count.
+        region_pspecs: Any = mspecs
+        region_sspecs: Any = optimizer.state_pspecs(mspecs)
+        region_axes = None
+    else:
+        region_pspecs = P()
+        region_sspecs = P()
+        region_axes = set(dp_axes)
     smapped = shard_map(
         local_step, mesh,
-        in_specs=(P(), P(), bspecs),
-        out_specs=(P(), P(), P()),
-        axis_names=set(dp_axes),
-        check_vma=False)
-
-    pspecs = param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
-    sspecs = optimizer.state_pspecs(pspecs)
+        in_specs=(region_pspecs, region_sspecs, bspecs),
+        out_specs=(region_pspecs, region_sspecs, P()),
+        axis_names=region_axes,
+        check_vma=False,
+        allow_degraded_partial_auto=legacy_partial_auto)
 
     from repro.serve.step import sanitize_pspec
 
@@ -117,6 +173,10 @@ def make_train_step(model: ModelApi, optimizer: Optimizer,
         lambda spec: NamedSharding(mesh, spec), bspecs,
         is_leaf=lambda x: isinstance(x, P))
 
+    if manual:
+        # jit shardings must agree with the region specs exactly —
+        # mismatches would insert GSPMD reshards at the region boundary.
+        pspecs, sspecs = region_pspecs, region_sspecs
     jitted = jax.jit(
         smapped,
         in_shardings=(ns(pspecs), ns(sspecs), batch_sh),

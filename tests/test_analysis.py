@@ -506,7 +506,11 @@ def test_cli_source_mode_green_on_head(tmp_path):
 def test_multipod_dryrun_skip_is_statically_verified(tmp_path):
     """The 512-chip production-mesh record that previously only said
     SKIP must now also prove the schedule sound: verified_static=True
-    with zero error diagnostics (ISSUE 6 acceptance)."""
+    with zero error diagnostics (ISSUE 6 acceptance).  Since the
+    full-manual lowering landed the SKIP path only exists under the
+    explicit --legacy-partial-auto opt-in (the default COMPILES this
+    mesh — pinned by test_partial_auto_guard.py and the CI
+    production-dryrun step)."""
     out = tmp_path / "rec.json"
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
@@ -514,7 +518,7 @@ def test_multipod_dryrun_skip_is_statically_verified(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
          "smollm-360m", "--shape", "train_4k", "--multi-pod",
-         "--json", str(out)],
+         "--legacy-partial-auto", "--json", str(out)],
         capture_output=True, text=True, timeout=400, env=env)
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"

@@ -1,0 +1,197 @@
+"""Single-device units for the full-manual lowering layer
+(core/manual.py + the schedule IR's model bracket, DESIGN.md §3.12).
+The multi-device semantics are pinned by
+tests/multidev_three_axis_checks.py; these tests cover the pure
+spec/shape/IR arithmetic that needs no devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import manual, schedule as schedule_mod
+from repro.core.schedule import bracket_chunk_bytes, decompose
+
+
+# ---------------------------------------------------------------------------
+# spec derivation
+# ---------------------------------------------------------------------------
+
+def test_restrict_and_sharded_dim():
+    assert manual._restrict(P("data", "model"), "model") == \
+        P(None, "model")
+    assert manual._restrict(P(("data", "model"), None), "model") == \
+        P("model", None)
+    assert manual.sharded_dim(P(None, "model")) == 1
+    assert manual.sharded_dim(P("model", None)) == 0
+    assert manual.sharded_dim(P(None, None)) is None
+    assert manual.sharded_dim(P("data", None), axis="model") is None
+
+
+def test_model_shard_specs_divisibility_fallback():
+    """Leaves divisible by m get a model spec on the ruled dim; the rest
+    fall back to replicated — per leaf, not per model."""
+    from repro.models import param_pspecs
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 4}
+
+    params = {"body": {"wq": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+                       "w1": jax.ShapeDtypeStruct((8, 6), jnp.float32),
+                       "wi": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+    pspecs = param_pspecs(params)
+    mspecs = manual.model_shard_specs(params, FakeMesh())
+    flat = {"/".join(str(getattr(k, "key", k)) for k in path): spec
+            for path, spec in
+            jax.tree_util.tree_leaves_with_path(
+                mspecs, is_leaf=lambda x: isinstance(x, P))}
+    # wq's ruled dim (16) divides 4 -> model-sharded; w1's dim of
+    # size 6 does not -> replicated; wi has an all-None rule
+    sharded = [k for k, v in flat.items()
+               if manual.sharded_dim(v) is not None]
+    repl = [k for k, v in flat.items() if manual.sharded_dim(v) is None]
+    assert any("wq" in k for k in sharded), (flat, pspecs)
+    assert all("w1" not in k for k in sharded), flat
+    assert any("wi" in k for k in repl), flat
+
+
+def test_shard_param_structs_and_mask():
+    params = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+              "b": jax.ShapeDtypeStruct((16,), jnp.float32)}
+    mspecs = {"w": P(None, "model"), "b": P()}
+    structs = manual.shard_param_structs(params, mspecs, 4)
+    assert structs["w"].shape == (8, 4)
+    assert structs["b"].shape == (16,)
+    mask = manual.sharded_mask(params, mspecs)
+    assert mask == {"w": True, "b": False}
+
+
+# ---------------------------------------------------------------------------
+# bracket IR arithmetic
+# ---------------------------------------------------------------------------
+
+def test_bracket_chunk_bytes_pads_to_multiple():
+    assert bracket_chunk_bytes(1024, 2, 4) == 512
+    assert bracket_chunk_bytes(1024, 4, 4) == 256
+    # 100 f32 elements over m=3: padded to 102 -> 34 each
+    assert bracket_chunk_bytes(400, 3, 4) == 136
+    # sub-element payloads never collapse to zero
+    assert bracket_chunk_bytes(2, 4, 4) >= 4 // 4
+
+
+def test_decompose_bracket_shape_and_bytes():
+    stages = decompose("ring_rsa×rhd_rsa", 4096, ("pod", "data"), (2, 4),
+                       model_axis="model", model_axis_size=2)
+    assert stages[0].op == "shard"
+    assert stages[0].wire_bytes == 0
+    assert stages[0].hlo_kind is None
+    assert stages[-1].op == "all_gather"
+    assert stages[-1].axis == "model"
+    chunk = bracket_chunk_bytes(4096, 2, 4)
+    assert stages[-1].n_bytes == chunk
+    assert stages[-1].wire_bytes == (2 - 1) * chunk
+    # dp levels run on the chunk, not the full payload
+    inner = stages[1:-1]
+    assert inner == decompose("ring_rsa×rhd_rsa", chunk,
+                              ("pod", "data"), (2, 4))
+
+
+def test_decompose_bracket_rejects_codec_and_axis_collision():
+    with pytest.raises(ValueError, match="codec"):
+        decompose("ring_rsa", 4096, ("data",), (4,), codec="int8",
+                  model_axis="model", model_axis_size=2)
+    with pytest.raises(ValueError, match="collides"):
+        decompose("ring_rsa", 4096, ("model",), (4,),
+                  model_axis="model", model_axis_size=2)
+
+
+def test_render_and_json_roundtrip_with_model_axis():
+    sched = schedule_mod.synthetic(
+        [4096, 8192], "ring_rsa×rhd_rsa", (2, 4), ("pod", "data"),
+        model_axis="model", model_axis_size=2)
+    assert sched.model_axis == "model"
+    assert sched.model_axis_size == 2
+    assert "ag@model" in sched.render()
+    rec = sched.to_json()
+    assert rec["model_axis"] == "model"
+    assert rec["model_axis_size"] == 2
+    back = schedule_mod.from_json(rec)
+    assert back.model_axis == "model"
+    assert back.model_axis_size == 2
+    assert back.render() == sched.render()
+    assert back.fingerprint(detached=True) == \
+        sched.fingerprint(detached=True)
+
+
+def test_json_omits_model_fields_when_unset():
+    """Committed pre-bracket artifacts must stay byte-identical: a
+    schedule without a model axis serializes no model keys at all."""
+    sched = schedule_mod.synthetic([4096], "ring_rsa", (4,), ("data",))
+    rec = sched.to_json()
+    assert "model_axis" not in rec
+    assert "model_axis_size" not in rec
+
+
+def test_verifier_passes_bracketed_and_catches_wrong_gather_bytes():
+    import dataclasses
+
+    from repro.analysis import verify as V
+
+    sched = schedule_mod.synthetic(
+        [4096, 8192], "ring_rsa×rhd_rsa", (2, 4), ("pod", "data"),
+        model_axis="model", model_axis_size=2)
+    diags = V.verify_schedule(sched)
+    assert [d for d in diags if d.severity == "error"] == [], diags
+
+    # corrupt the terminal gather's wire bytes: SV001 must object
+    b0 = sched.buckets[0]
+    bad_stages = b0.stages[:-1] + (
+        dataclasses.replace(b0.stages[-1],
+                            wire_bytes=b0.stages[-1].wire_bytes + 4),)
+    bad = dataclasses.replace(
+        sched, buckets=(dataclasses.replace(b0, stages=bad_stages),)
+        + sched.buckets[1:])
+    diags = V.verify_schedule(bad)
+    assert any(d.rule_id == "SV001" for d in diags), diags
+
+    # drop the terminal gather entirely: SV002's stack must object
+    bad_stages = b0.stages[:-1]
+    bad = dataclasses.replace(
+        sched, buckets=(dataclasses.replace(b0, stages=bad_stages),)
+        + sched.buckets[1:])
+    diags = V.verify_schedule(bad)
+    assert any(d.rule_id == "SV002" for d in diags), diags
+
+
+def test_wire_check_skips_shard_opener():
+    from repro.launch import roofline as rl
+
+    sched = schedule_mod.synthetic(
+        [4096], "ring_rsa", (4,), ("data",),
+        model_axis="model", model_axis_size=2)
+    want = sum(st.wire_bytes for b in sched.buckets for st in b.stages)
+    rep = rl.wire_check(sched, {"collective-permute": want})
+    assert rep["consistent"], rep
+    assert rep["predicted_total"] == want
+    assert None not in rep["kinds"]
+
+
+# ---------------------------------------------------------------------------
+# clip mask plumbing (single device)
+# ---------------------------------------------------------------------------
+
+def test_global_norm_default_path_unchanged():
+    from repro.optim import global_norm
+
+    tree = {"a": jnp.arange(6.0), "b": jnp.ones((3, 2))}
+    assert float(global_norm(tree)) == pytest.approx(
+        float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                           for x in jax.tree_util.tree_leaves(tree)))))
+
+
+def test_global_norm_mask_length_mismatch_raises():
+    from repro.optim import global_norm
+
+    with pytest.raises(ValueError, match="leaves"):
+        global_norm({"a": jnp.ones(3), "b": jnp.ones(3)},
+                    sharded={"a": True}, model_axis="model")

@@ -1,9 +1,13 @@
-"""PR-3 known-limit turned guarded failure: on legacy jax, partial-auto
-shard_map over a production-scale mesh used to ABORT the process inside
-XLA's SPMD partitioner (fatal ``Check failed: sharding.IsManualSubgroup``
-— uncatchable from Python).  core/compat.py now refuses up front with
-an actionable PartialAutoUnsupported, and launch/dryrun records the
-config as a clean SKIP instead of dying mid-sweep."""
+"""PR-3 known-limit, retired to an opt-in fallback: on legacy jax,
+partial-auto shard_map over a production-scale mesh used to ABORT the
+process inside XLA's SPMD partitioner (fatal ``Check failed:
+sharding.IsManualSubgroup`` — uncatchable from Python).  core/compat.py
+first turned that into an actionable PartialAutoUnsupported; the
+full-manual lowering path (DESIGN.md §3.12) then removed every
+production use of partial-auto, so the degraded psum-emulation mode is
+now OPT-IN (``allow_degraded_partial_auto=True``) and refused outright
+otherwise — at ANY device count, not just past the ceiling.  These
+tests pin the fallback-only semantics."""
 import json
 import os
 import subprocess
@@ -29,11 +33,11 @@ def test_exception_type_and_threshold_constant():
 
 @needs_legacy
 @pytest.mark.timeout(300)
-def test_guard_raises_before_lowering():
-    """64-device partial-auto mesh: shard_map construction itself must
-    raise (no lowering, no compile, no process abort); a 8-device
-    partial-auto mesh stays allowed (degraded mode, multidev-validated);
-    full-manual meshes of any size never hit the guard."""
+def test_guard_enforces_fallback_only_semantics():
+    """Partial-auto without opt-in raises at ANY device count (8 and
+    64 alike); with ``allow_degraded_partial_auto=True`` it works up to
+    the 32-device ceiling and still raises past it; full-manual meshes
+    of any size never hit the guard (the §3.12 production path)."""
     code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
@@ -46,11 +50,32 @@ from repro.core import compat
 devs = np.array(jax.devices())
 f = lambda x: x
 
-# 64-device partial-auto: refused with the actionable error
+# partial-auto WITHOUT opt-in: refused even on a small validated mesh
+small = Mesh(devs[:8].reshape(4, 2), ("data", "model"))
+try:
+    compat.shard_map(f, small, in_specs=P("data"), out_specs=P("data"),
+                     axis_names={"data"})
+except compat.PartialAutoUnsupported as e:
+    msg = str(e)
+    assert "allow_degraded_partial_auto" in msg, msg
+    assert "axis_names=None" in msg, msg        # the full-manual fix
+else:
+    raise SystemExit("un-opted-in 8-device partial-auto was not refused")
+
+# WITH opt-in: the validated degraded mode still works <= 32 devices
+fn = compat.shard_map(f, small, in_specs=P("data"), out_specs=P("data"),
+                      axis_names={"data"},
+                      allow_degraded_partial_auto=True)
+out = jax.jit(fn)(jnp.arange(16.0))
+assert out.shape == (16,)
+
+# WITH opt-in past the ceiling: still refused (native lowering aborts
+# the process; the emulation was never validated at this scale)
 mesh = Mesh(devs.reshape(8, 8), ("data", "model"))
 try:
     compat.shard_map(f, mesh, in_specs=P("data"), out_specs=P("data"),
-                     axis_names={"data"})
+                     axis_names={"data"},
+                     allow_degraded_partial_auto=True)
 except compat.PartialAutoUnsupported as e:
     msg = str(e)
     assert "IsManualSubgroup" in msg, msg
@@ -58,12 +83,6 @@ except compat.PartialAutoUnsupported as e:
     assert str(compat.PARTIAL_AUTO_MAX_DEVICES) in msg, msg
 else:
     raise SystemExit("64-device partial-auto was not refused")
-
-# 8-device partial-auto: still allowed (the validated degraded mode)
-small = Mesh(devs[:8].reshape(4, 2), ("data", "model"))
-fn = compat.shard_map(f, small, in_specs=P("data"), out_specs=P("data"),
-                      axis_names={"data"})
-assert fn is not None
 
 # full-manual 64-device mesh: no guard (native legacy lowering)
 full = Mesh(devs.reshape(8, 8), ("data", "model"))
@@ -85,14 +104,18 @@ print("GUARD-OK")
 
 @needs_legacy
 @pytest.mark.timeout(420)
-def test_dryrun_train_records_skip_not_abort(tmp_path):
-    """The exact PR-3 crash scenario: a train-shape dry-run on the
-    256-chip production mesh.  It must now exit 0 with a SKIP record
-    naming the limitation (previously: SIGABRT mid-compile, no JSON)."""
-    out = tmp_path / "rec.json"
+def test_dryrun_train_compiles_by_default_skips_under_legacy_flag(
+        tmp_path):
+    """The exact PR-3 crash scenario — a train-shape dry-run on the
+    256-chip production mesh — now COMPILES by default (full-manual
+    lowering) and only records the clean SKIP when the degraded
+    partial-auto fallback is explicitly requested."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env.pop("XLA_FLAGS", None)
+
+    # default: full-manual, compiled for real
+    out = tmp_path / "rec.json"
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
          "smollm-360m", "--shape", "train_4k", "--json", str(out)],
@@ -100,6 +123,24 @@ def test_dryrun_train_records_skip_not_abort(tmp_path):
     assert proc.returncode == 0, \
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
     rec = json.loads(out.read_text())
+    assert rec["status"] == "OK", rec.get("reason", rec.get("error"))
+    assert rec["mesh"] == "16x16"
+    assert rec["schedule"]["wire_check"]["consistent"] is True
+    # the model bracket's terminal level shows in the decomposition
+    assert "ag@model" in rec["schedule"]["decomposition"]
+
+    # legacy opt-in: the fallback is refused past the ceiling and
+    # recorded as a SKIP naming the limitation (previously: SIGABRT
+    # mid-compile, no JSON)
+    out2 = tmp_path / "rec_legacy.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "smollm-360m", "--shape", "train_4k", "--legacy-partial-auto",
+         "--json", str(out2)],
+        capture_output=True, text=True, timeout=400, env=env)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    rec = json.loads(out2.read_text())
     assert rec["status"] == "SKIP"
     assert "IsManualSubgroup" in rec["reason"]
     assert rec["mesh"] == "16x16"

@@ -83,6 +83,18 @@ def test_multidev_codec_checks():
 
 
 @pytest.mark.timeout(900)
+def test_multidev_three_axis_checks():
+    """Three-level composed schedules on the (2, 2, 2)
+    (pod × data × model) mesh — the full-manual lowering's model
+    bracket (DESIGN.md §3.12): ``ring@data×rhd@pod×ag@model`` bit-exact
+    vs dp psum, HLO permute bytes == Σ per-stage IR wire bytes with
+    wire_check PASS, and a real train step on the three-axis mesh
+    matching the ≤32-device degraded partial-auto opt-in."""
+    _run_checks("multidev_three_axis_checks.py", 8,
+                "ALL THREE-AXIS CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
 def test_multidev_overlap_checks():
     """overlap=True (in-backward per-bucket reductions) on
     p ∈ {3, 4, 6, 8}: bit-exact with the post-backward path and with

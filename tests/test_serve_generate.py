@@ -1,0 +1,149 @@
+"""ServeEngine.generate semantics: EOS stop handling, RNG key
+discipline, and cache-overflow validation.
+
+Three bugs this file pins (one regression test each):
+
+  * ``cfg.eos_id`` was NEVER consulted — generation always ran the full
+    ``max_new_tokens``.  Now a row that emits EOS keeps emitting
+    ``eos_id`` for the rest of the window (per-row finished masking) and
+    the loop exits early once every row has finished, without touching
+    the shape-cached decode step;
+  * the first sample consumed the caller's ``rng`` and the decode loop
+    then SPLIT that same consumed key — one key both used and split,
+    correlating the first two sampled tokens.  Now the key is split
+    before first use, so every ``_sample`` call gets a fresh subkey;
+  * a prompt + generation budget longer than ``max_seq`` silently wrote
+    past the cache (wrapped positions → garbage tokens).  Now
+    ``generate()`` raises an actionable ValueError at entry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_spec
+from repro.core.compat import make_mesh
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.engine import ServeConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = get_spec("smollm-360m").reduced()
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_mesh((1,), ("data",))
+    return spec, model, params, mesh
+
+
+def _toks(spec, b=2, s=8):
+    return (jnp.arange(b * s, dtype=jnp.int32) * 7 + 3) \
+        .reshape(b, s) % spec.vocab_size
+
+
+def _engine(setup, **cfg_kw):
+    spec, model, params, mesh = setup
+    return ServeEngine(model, params, mesh, (),
+                       ServeConfig(**cfg_kw)), spec
+
+
+def test_eos_stop_matches_unstopped_prefix(setup):
+    """Per-row stop parity: against the eos_id=-1 reference, an EOS
+    engine emits the same tokens up to and including each row's first
+    EOS, then pads that row with eos_id for the rest of the window."""
+    eng_ref, spec = _engine(setup, max_new_tokens=8, max_seq=32,
+                            eos_id=-1)
+    batch = {"tokens": _toks(spec)}
+    ref = eng_ref.generate(batch)
+
+    # pick the token the reference emits mid-window so the stop is real
+    eos_id = int(ref[0, 3])
+    eng, _ = _engine(setup, max_new_tokens=8, max_seq=32, eos_id=eos_id)
+    out = eng.generate(batch)
+    assert out.shape == ref.shape
+    for r in range(ref.shape[0]):
+        hits = np.nonzero(ref[r] == eos_id)[0]
+        if hits.size == 0:
+            np.testing.assert_array_equal(out[r], ref[r])
+            continue
+        stop = int(hits[0])
+        np.testing.assert_array_equal(out[r, :stop + 1],
+                                      ref[r, :stop + 1])
+        assert (out[r, stop + 1:] == eos_id).all(), \
+            f"row {r} kept generating past its EOS: {out[r]}"
+
+
+def test_eos_all_finished_exits_early_keeps_cached_steps(setup):
+    """When every row's FIRST token is EOS the loop pads the whole
+    window without running a single decode step — and the shape-cached
+    jitted steps survive for the next call."""
+    eng_ref, spec = _engine(setup, max_new_tokens=6, max_seq=32,
+                            eos_id=-1)
+    # identical rows → identical greedy streams → one shared first token
+    row = _toks(spec, b=1)
+    batch = {"tokens": jnp.tile(row, (2, 1))}
+    ref = eng_ref.generate(batch)
+    eos_id = int(ref[0, 0])
+    assert (ref[:, 0] == eos_id).all()
+
+    eng, _ = _engine(setup, max_new_tokens=6, max_seq=32, eos_id=eos_id)
+    out = eng.generate(batch)
+    decode1 = eng._decode
+    assert (out == eos_id).all(), out
+    assert out.shape == ref.shape
+
+    # a second call with the same shapes reuses both cached steps
+    eng.generate(batch)
+    assert eng._decode is decode1
+
+
+def test_rng_no_key_consumed_twice(setup):
+    """Key-reuse regression: record every key _sample receives under
+    sampling mode — all must be distinct, and none may equal the
+    caller's root key (which the loop also splits)."""
+    eng, spec = _engine(setup, max_new_tokens=5, max_seq=32,
+                        greedy=False, temperature=1.0)
+    seen = []
+    orig = eng._sample
+
+    def recording(logits, rng):
+        seen.append(tuple(np.asarray(jax.random.key_data(rng)).tolist()))
+        return orig(logits, rng)
+
+    eng._sample = recording
+    root = jax.random.PRNGKey(42)
+    eng.generate({"tokens": _toks(spec)}, rng=root)
+    # prefill sample + one per decode iteration (the last is unused)
+    assert len(seen) == 6
+    assert len(set(seen)) == len(seen), \
+        f"a key was passed to _sample twice: {seen}"
+    root_key = tuple(np.asarray(jax.random.key_data(root)).tolist())
+    assert root_key not in seen, \
+        "the root key was consumed AND split (the original bug)"
+
+
+def test_sampled_first_two_tokens_decorrelated(setup):
+    """The observable symptom of the old reuse: with the fix, different
+    root keys give a different sampled stream (sanity that sampling is
+    actually driven by the subkeys)."""
+    eng, spec = _engine(setup, max_new_tokens=6, max_seq=32,
+                        greedy=False, temperature=2.0)
+    batch = {"tokens": _toks(spec)}
+    outs = {tuple(np.asarray(eng.generate(
+        batch, rng=jax.random.PRNGKey(s))).ravel().tolist())
+        for s in range(4)}
+    assert len(outs) > 1, "sampling ignores the rng"
+
+
+def test_overflow_raises_actionable_valueerror(setup):
+    eng, spec = _engine(setup, max_new_tokens=30, max_seq=32)
+    with pytest.raises(ValueError) as ei:
+        eng.generate({"tokens": _toks(spec, s=8)})    # 8 + 30 > 32
+    msg = str(ei.value)
+    assert "max_seq" in msg and "max_new_tokens" in msg
+    assert "8" in msg and "30" in msg and "32" in msg
+    # the boundary case is allowed: 8 + 24 == 32
+    eng2, _ = _engine(setup, max_new_tokens=24, max_seq=32)
+    out = eng2.generate({"tokens": _toks(spec, s=8)})
+    assert out.shape == (2, 24)
