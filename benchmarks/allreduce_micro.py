@@ -86,6 +86,37 @@ CODEC_BAND_STRATEGY = "ring_rsa"
 CODEC_BAND_CODECS = ("bf16", "int8")
 CODEC_BAND_FACTOR = 3.0
 
+# Fused-hop sweep (--fused-hops, and the full-grid BENCH refresh): the
+# same schedule executed through BOTH routes — unfused (per-call jitted
+# shard_map per bucket, the pre-§3.13 path) vs fused (the cached
+# donated StageExecutor whose hops run the fused decode→accumulate→
+# encode kernel) — via telemetry.closure.measure_fused_replay.  The
+# gate is one-sided with a noise corridor: fused must be NO SLOWER
+# anywhere (speedup >= 1/FUSED_NOISE_FACTOR) and strictly faster on at
+# least one codec'd cell (speedup >= FUSED_NOISE_FACTOR).
+#
+# Cells are (n_buckets, bytes_per_bucket).  The single-bucket cells
+# pin ROUTE PARITY: on this host the direct-lowered kernels compile to
+# the same HLO as the staged walk, so fused must hold ~1.0x (the
+# kernel-level win is a TPU/Mosaic effect this backend cannot show).
+# The multi-bucket cell is where the EXECUTOR wins on any backend —
+# one jitted program walks every bucket per call (XLA schedules the
+# per-bucket collectives together) where the unfused route pays one
+# dispatch per bucket — the paper's pointer-cache design point:
+# GDR-Opt's gain is amortizing per-call overheads, not just the
+# kernel.  Bucket counts stay small: XLA CPU's optimization time on
+# one program holding N stage walks grows superlinearly in N (a
+# 16-bucket ring cell compiles for minutes).
+FUSED_P = CODEC_P
+FUSED_CELLS = [(1, 1 << 20), (1, 8 << 20), (6, 64 << 10)]
+FUSED_CODECS = ["none", "bf16", "int8"]
+FUSED_STRATEGIES = ["ring_rsa", "rhd_rsa"]
+# 8 emulated host devices share this machine's cores with the OS:
+# identical cells jitter ±10% between runs even with interleaved
+# best-of-reps timing, so the corridor must clear that floor or the
+# gate flaps (observed: a cell flipping 0.89x <-> 1.05x run to run)
+FUSED_NOISE_FACTOR = 1.15
+
 
 def analytic_nonpow2_rows():
     """RHD vs ring over non-pow2 device counts (the 6-/12-/24-way
@@ -290,6 +321,86 @@ print(json.dumps(out))
 """
 
 
+_MEASURE_FUSED_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+import sys, json
+sys.path.insert(0, {src!r})
+from repro.core import schedule as S
+from repro.telemetry import closure
+
+p = {p}
+out = []
+for codec in {codecs!r}:
+    for n_buckets, n_bytes in {cells!r}:
+        for strat in {strategies!r}:
+            sched = S.synthetic([n_bytes] * n_buckets, strat, (p,),
+                                axis_names=("data",), codec=codec)
+            rep = closure.measure_fused_replay(sched, reps={reps})
+            out.append({{"p": p, "bytes": n_bytes,
+                         "buckets": n_buckets, "codec": codec,
+                         "strategy": strat,
+                         "fused_us": rep["fused_s"] * 1e6,
+                         "unfused_us": rep["unfused_s"] * 1e6,
+                         "speedup": rep["speedup"],
+                         "residual_rel": rep["residual_rel"],
+                         "executor_traces": rep["executor_traces"]}})
+print(json.dumps(out))
+"""
+
+
+def measured_fused_rows(cells=None, p=FUSED_P, codecs=None,
+                        strategies=None, reps=7):
+    """Wall-clock fused-vs-unfused execution of the SAME schedules via
+    ``telemetry.closure.measure_fused_replay`` (subprocess, forced host
+    devices — same discipline as every other sweep here).  ``cells``
+    is a list of ``(n_buckets, bytes_per_bucket)``."""
+    cells = [(int(nb), int(b)) for nb, b in (cells or FUSED_CELLS)]
+    codecs = list(codecs or FUSED_CODECS)
+    strategies = list(strategies or FUSED_STRATEGIES)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _MEASURE_FUSED_SNIPPET.format(
+        src=os.path.abspath(src), ndev=p, p=p, cells=cells,
+        codecs=codecs, strategies=strategies, reps=reps)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=1800,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def fused_report(rows, noise_factor=FUSED_NOISE_FACTOR) -> dict:
+    """Fused-route verdict from ``measured_fused_rows`` output: every
+    cell must be no slower than 1/``noise_factor`` and at least one
+    codec'd cell must be faster than ``noise_factor`` (the paper's
+    GDR-Opt claim shape: the fused kernel wins where the wire is
+    coded, and never loses elsewhere)."""
+    out = []
+    for r in rows:
+        out.append({
+            "p": int(r["p"]), "bytes": int(r["bytes"]),
+            "buckets": int(r.get("buckets", 1)),
+            "codec": r["codec"], "strategy": r["strategy"],
+            "fused_us": round(float(r["fused_us"]), 1),
+            "unfused_us": round(float(r["unfused_us"]), 1),
+            "speedup": round(float(r["speedup"]), 3),
+            "residual_rel": float(r["residual_rel"]),
+            "executor_traces": int(r["executor_traces"]),
+            "no_slower": float(r["speedup"]) >= 1.0 / noise_factor,
+        })
+    return {
+        "noise_factor": noise_factor,
+        "rows": out,
+        "no_slower_everywhere": all(r["no_slower"] for r in out),
+        "faster_codec_cell": any(
+            r["codec"] != "none" and r["speedup"] >= noise_factor
+            for r in out),
+    }
+
+
 def default_codecs() -> list[str]:
     """Every registered wire codec the running jax can encode."""
     from repro.core import codec as codec_mod
@@ -378,7 +489,8 @@ def measured_tuning_entries(ps=None, sizes=None):
 
 
 def build_tuning_table(mode="measured", ps=None, sizes=None,
-                       meshes=None, codec_sweep=False) -> dict:
+                       meshes=None, codec_sweep=False,
+                       fused_sweep=False) -> dict:
     ps = list(ps or TABLE_PS)
     sizes = list(sizes or TABLE_SIZES)
     if mode == "analytic":
@@ -404,6 +516,11 @@ def build_tuning_table(mode="measured", ps=None, sizes=None,
             crows = measured_codec_rows()
             entries += [r for r in crows if r["codec"] != "none"]
             table["meta"]["codec"] = codec_report(crows)
+        if fused_sweep:
+            # fused-vs-unfused rows live in meta only: the tuning
+            # entries measure WHICH algorithm to pick, the fused report
+            # measures HOW to execute it (two routes, same schedule)
+            table["meta"]["fused"] = fused_report(measured_fused_rows())
     else:
         raise ValueError(f"table mode {mode!r}; one of analytic|measured")
     table["meta"].update({
@@ -415,6 +532,15 @@ def build_tuning_table(mode="measured", ps=None, sizes=None,
             str(p): (None if cross == float("inf") else int(cross))
             for p, cross in ((p, sel.crossover_bytes(p, link=cm.ICI))
                              for p in ps)},
+        # ... and the fused-hop re-pricing: the coded crossovers under
+        # the fused γ (cost_model.quant_gamma(fused=True)) — RHD's
+        # reign extends when its heavier quantize toll is fused away
+        # (tests/test_selector.py pins the direction)
+        "fused_crossover_bytes": {
+            str(p): (None if cross == float("inf") else int(cross))
+            for p, cross in ((p, sel.crossover_bytes(
+                p, link=cm.ICI, codec="int8", fused=True))
+                for p in ps)},
     })
     sel.validate_table(table)
     return table
@@ -422,17 +548,22 @@ def build_tuning_table(mode="measured", ps=None, sizes=None,
 
 def emit_table(path: str, mode="measured", ps=None, sizes=None,
                artifact: str | None = None,
-               codec_sweep: bool | None = None) -> dict:
+               codec_sweep: bool | None = None,
+               fused_sweep: bool | None = None) -> dict:
     """Write the tuning table to ``path``; when ``artifact`` is set,
     also refresh the repo-root BENCH_allreduce.json trajectory artifact
     (both are valid empirical-selector inputs). The caller only passes
     ``artifact`` for full default-grid runs — an ad-hoc --table-ps/
     --table-sizes subset must never silently rewrite the tracked
-    trajectory.  The codec sweep defaults to exactly those artifact
-    runs (the tracked trajectory must always carry the codec story)."""
+    trajectory.  The codec and fused-hop sweeps default to exactly
+    those artifact runs (the tracked trajectory must always carry the
+    codec and fused-execution stories)."""
     if codec_sweep is None:
         codec_sweep = bool(artifact) and mode == "measured"
-    table = build_tuning_table(mode, ps, sizes, codec_sweep=codec_sweep)
+    if fused_sweep is None:
+        fused_sweep = bool(artifact) and mode == "measured"
+    table = build_tuning_table(mode, ps, sizes, codec_sweep=codec_sweep,
+                               fused_sweep=fused_sweep)
     sel.save_table(table, path)
     if artifact:
         sel.save_table(table, artifact)
@@ -529,6 +660,11 @@ def main(argv=None):
                     help="wall-clock the wire-codec sweep (codec'd vs "
                          "uncoded ring/RHD through execute_stages) and "
                          "print measured-vs-modeled speedups")
+    ap.add_argument("--fused-hops", action="store_true",
+                    help="wall-clock the fused-hop sweep (kernel-fused "
+                         "decode+accumulate+encode executors vs the "
+                         "stage-by-stage walk, same schedules) and "
+                         "print measured speedups")
     ap.add_argument("--trace", metavar="OUT.json",
                     help="enable telemetry for this run and write a "
                          "Perfetto-loadable trace (repro/trace/v1) plus "
@@ -558,6 +694,27 @@ def main(argv=None):
         print(f"allreduce_micro.codec.all_within_band,"
               f"{int(rep['all_within_band'])},band_factor="
               f"{rep['band_factor']} strategy={rep['band_strategy']}")
+        _write_trace(args.trace)
+        return
+
+    if args.fused_hops:
+        with telemetry.get_tracer().span("bench.measure.fused",
+                                         cat="wall") as sp:
+            rows = measured_fused_rows()
+            sp.set("n_rows", len(rows))
+        _record_measured_rows(rows, "fused")
+        rep = fused_report(rows)
+        for r in rep["rows"]:
+            verdict = " no-slower" if r["no_slower"] else " SLOWER"
+            print(f"allreduce_micro.fused.{r['strategy']}.{r['codec']},"
+                  f"{r['speedup']:.2f}x,"
+                  f"bytes={r['buckets']}x{r['bytes']} p={r['p']} "
+                  f"traces={r['executor_traces']}{verdict}")
+        print(f"allreduce_micro.fused.no_slower_everywhere,"
+              f"{int(rep['no_slower_everywhere'])},noise_factor="
+              f"{rep['noise_factor']}")
+        print(f"allreduce_micro.fused.faster_codec_cell,"
+              f"{int(rep['faster_codec_cell'])}")
         _write_trace(args.trace)
         return
 

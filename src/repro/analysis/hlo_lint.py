@@ -22,6 +22,16 @@ its verdict into typed diagnostics alongside three new rules:
            stage) — XLA substituted or added a vendor allreduce.
            Legitimate sources exist (model-axis GSPMD collectives),
            hence warn severity + the baseline.
+``HL005``  fused-hop codec soundness: a schedule whose codec'd stages
+           run the fused Pallas hop kernel must keep its f32-typed
+           collective-permute traffic within the budget of the
+           legitimately-f32 payloads (uncoded permute stages) plus one
+           4-byte scale scalar per fused coded hop.  An f32 permute
+           carrying a full coded payload means XLA's convert-mover
+           floated the decode outside the permute — the wire went back
+           to 4 bytes/element and the codec's bandwidth win silently
+           vanished (the bitcast pinning of ``core/codec.py`` exists
+           to prevent exactly this).
 
 Warning baseline: ``ANALYSIS_BASELINE.json`` (schema
 ``repro/analysis-baseline/v1``) at the repo root lists accepted
@@ -48,6 +58,8 @@ RULES = {
     "HL003": "no mixed-dtype reduction ops",
     "HL004": "no unexpected all-reduce under an RSA decomposition "
              "(warn)",
+    "HL005": "fused codec'd schedules keep f32 permute traffic within "
+             "the scale-scalar budget (no free-floating converts)",
 }
 
 BASELINE_SCHEMA = "repro/analysis-baseline/v1"
@@ -135,6 +147,56 @@ def min_bucket_permute_steps(sched) -> int:
     return min(counts) if counts else 0
 
 
+_F32_SHAPE = re.compile(r"\bf32\[([\d,]*)\]")
+
+
+def f32_permute_bytes(hlo_text: str) -> int:
+    """f32 payload bytes moved by collective-permute instructions — the
+    measured side of HL005.  Per permute line the LARGEST single f32
+    shape token counts (a ``-start``'s tuple type lists the aliased
+    input and output once each; the payload must not be double-charged),
+    summed over every permute in the text."""
+    total = 0
+    for line in hlo_text.splitlines():
+        # Split at the OP token (with its paren) — the instruction's
+        # own %collective-permute.N name appears first on the line and
+        # must not truncate the head before the result type.
+        for marker in ("collective-permute-start(",
+                       "collective-permute("):
+            if marker in line:
+                head = line.split(marker, 1)[0]
+                break
+        else:
+            continue
+        best = 0
+        for m in _F32_SHAPE.finditer(head):
+            n = 1
+            for d in m.group(1).split(","):
+                if d:
+                    n *= int(d)
+            best = max(best, n * 4)
+        total += best
+    return total
+
+
+def fused_f32_permute_budget(sched) -> int:
+    """Upper bound on LEGITIMATE f32 permute bytes of a fused codec'd
+    schedule: uncoded (or unfused) permute stages move their full
+    payload in f32, and each fused coded hop carries exactly one
+    4-byte f32 absmax scalar next to its bit-pinned payload."""
+    budget = 0
+    for b in sched.buckets:
+        for st in b.stages:
+            if st.hlo_kind != "collective-permute":
+                continue
+            coded = (getattr(st, "codec", "none") or "none") != "none"
+            if coded and getattr(st, "fused_hop", False):
+                budget += stage_permute_steps(st) * 4
+            else:
+                budget += st.hlo_bytes
+    return budget
+
+
 def perm_vs_dots(hlo_text: str) -> tuple[int, int]:
     """(permutes before the last dot, total permutes) — the overlap
     witness of tests/test_overlap_hlo.py."""
@@ -203,6 +265,27 @@ def lint_hlo(sched, hlo_text: str | None = None,
                     "HL003", ERROR, f"hlo:{ln}",
                     f"mixed-dtype reduction op ({'/'.join(sorted(dtypes))})"
                     f": wire-dtype byte accounting no longer holds",
+                    context=context))
+
+    if hlo_text is not None and "HL005" not in skip:
+        fused_coded = any(
+            getattr(st, "fused_hop", False)
+            and (getattr(st, "codec", "none") or "none") != "none"
+            for b in sched.buckets for st in b.stages)
+        if fused_coded:
+            got = f32_permute_bytes(hlo_text)
+            budget = fused_f32_permute_budget(sched)
+            # floor absorbs GSPMD bookkeeping permutes outside the
+            # schedule (same spirit as HL004's vendor-collective floor)
+            allowed = budget + max(1024, budget // 100)
+            if got > allowed:
+                out.append(Diagnostic(
+                    "HL005", ERROR, "collective-permute",
+                    f"fused codec'd schedule moves {got}B of f32 "
+                    f"collective-permute payload but only {budget}B are "
+                    f"legitimate (uncoded payloads + one 4B scale per "
+                    f"fused hop): a convert floated outside a permute "
+                    f"and the coded wire decayed to f32",
                     context=context))
 
     if collective_bytes is not None and "HL004" not in skip:

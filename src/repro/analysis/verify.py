@@ -40,6 +40,13 @@ but only ever checked by executing on small meshes:
            bytes plus one 4-byte f32 scale scalar per hop for scaled
            codecs.  The byte arithmetic is restated here from first
            principles, independent of ``core/codec.py``.
+``SV009``  fused-hop soundness: the ``fused_hop`` flag may only ride
+           stages with an accumulating hop or terminal reduce
+           (:data:`FUSED_HOP_OPS`, restated independently of
+           ``core/reducers.py``), and clearing every flag
+           (``schedule.with_fused_hops(sched, False)``) must leave the
+           derived tolerances and all stage byte accounting untouched —
+           fusion is an execution route, not a different reduction.
 
 All rules run on detached schedules (``plan=None``); the rules that
 need the leaf layout (SV003 leaf-gap, SV004 monotonicity, SV005)
@@ -70,6 +77,7 @@ RULES = {
     "SV006": "reduced-precision wire dtype has a derivable tolerance",
     "SV007": "fingerprint is insensitive to predicted latencies",
     "SV008": "codec'd stages have derivable bounds and encoded bytes",
+    "SV009": "fused hops ride accumulating stages; bounds/bytes invariant",
 }
 
 # Unit roundoff of the dtypes we allow on the wire: the summation-error
@@ -557,6 +565,68 @@ def _rule_sv008(sched, out):
                     f"{' + 4B scale per hop' if scaled else ''})"))
 
 
+# Fused-hop legality for SV009 — RESTATED independently of
+# ``reducers.FUSED_HOP_ALGORITHMS`` (same policy as CODEC_WIRE: the
+# verifier's tables must not be derived from the modules it audits).
+# The Pallas kernel fuses decode → fp32 ACCUMULATE → encode, so only
+# stages with an accumulating hop (ring/RHD ppermute folds) or an
+# accumulating terminal (ps_gather's sum over the gathered axis) can
+# carry it.  all_gather/shard move bytes without accumulating and psum
+# hides its hops inside the vendor collective — a fused flag there
+# names an execution route that does not exist.
+FUSED_HOP_OPS = {
+    "allreduce": ("ring_rsa", "rhd_rsa", "ps_gather"),
+    "reduce_scatter": ("ring_rsa",),
+}
+
+
+def _rule_sv009(sched, out):
+    fused_any = False
+    for b in sched.buckets:
+        for j, st in enumerate(b.stages):
+            if not getattr(st, "fused_hop", False):
+                continue
+            fused_any = True
+            loc = b.stage_path(j)
+            legal = FUSED_HOP_OPS.get(st.op, ())
+            if st.algorithm not in legal:
+                out.append(Diagnostic(
+                    "SV009", ERROR, loc,
+                    f"fused_hop on {st.op}/{st.algorithm}: the fused "
+                    f"kernel needs an accumulating hop or terminal "
+                    f"reduce (legal: "
+                    f"{ {k: v for k, v in FUSED_HOP_OPS.items()} })"))
+    if not fused_any:
+        return
+    # Flag-flip invariance: fusion is an execution ROUTE, not a
+    # different reduction — clearing every fused_hop flag must leave
+    # the derived error bounds and every stage's byte accounting
+    # untouched.  A fused schedule whose tolerance or wire bytes moved
+    # would mean the kernel changed the arithmetic contract the static
+    # walls certify.
+    unfused = schedule_mod.with_fused_hops(sched, False)
+    if codec_tolerance(sched) != codec_tolerance(unfused):
+        out.append(Diagnostic(
+            "SV009", ERROR, "",
+            f"codec tolerance moves when fused_hop flags are cleared "
+            f"({codec_tolerance(sched)} != "
+            f"{codec_tolerance(unfused)}): fused schedules must carry "
+            f"the same derived bound as unfused"))
+    if wire_tolerance(sched) != wire_tolerance(unfused):
+        out.append(Diagnostic(
+            "SV009", ERROR, "",
+            "wire tolerance moves when fused_hop flags are cleared"))
+    for b, ub in zip(sched.buckets, unfused.buckets):
+        for j, (st, ust) in enumerate(zip(b.stages, ub.stages)):
+            if (st.wire_bytes, st.n_bytes) != (ust.wire_bytes,
+                                               ust.n_bytes):
+                out.append(Diagnostic(
+                    "SV009", ERROR, b.stage_path(j),
+                    f"stage bytes change under the fused_hop flag flip "
+                    f"(wire {st.wire_bytes} vs {ust.wire_bytes}, "
+                    f"decoded {st.n_bytes} vs {ust.n_bytes})"))
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -576,6 +646,7 @@ def verify_schedule(sched, context: str = "") -> list[Diagnostic]:
     _rule_sv006(sched, out)
     _rule_sv007(sched, out)
     _rule_sv008(sched, out)
+    _rule_sv009(sched, out)
     if context:
         out = [dataclasses.replace(d, context=context) for d in out]
     return out

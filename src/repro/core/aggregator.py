@@ -39,7 +39,7 @@ from . import codec as codec_mod
 from . import compat, reducers, schedule as schedule_mod, \
     selector as selector_mod
 from .compat import axis_size
-from .plan_cache import GLOBAL_PLAN_CACHE, PlanCache
+from .plan_cache import GLOBAL_EXECUTOR_CACHE, GLOBAL_PLAN_CACHE, PlanCache
 from .schedule import ReduceSchedule
 
 
@@ -93,6 +93,13 @@ class AggregatorConfig:
                                        # the next step (init_residuals /
                                        # __call__(..., residuals=...));
                                        # post-backward path only
+    # -- fused hop kernels (kernels/fused_hop.py, DESIGN.md §3.13) ----------
+    fused_hops: "bool | None" = None   # route codec'd hops + terminal
+                                       # reductions through the Pallas
+                                       # decode→accumulate→encode kernel.
+                                       # None (default) = fuse exactly the
+                                       # coded schedules (schedule.plan's
+                                       # resolution); True/False force it
 
     @property
     def threshold_bytes(self) -> int:
@@ -133,6 +140,13 @@ class AggregatorConfig:
                 raise ValueError("error_feedback is incompatible with "
                                  "overlap=True (post-backward path only)")
 
+    def resolve_fused_hops(self) -> bool:
+        """The fused-hop default of ``schedule.plan``: ``None`` means
+        coded schedules fuse, uncoded schedules stay on plain XLA."""
+        if self.fused_hops is None:
+            return (self.codec or "none") != "none"
+        return bool(self.fused_hops)
+
     def make_selector(self) -> "selector_mod.Selector | None":
         if self.strategy != "auto":
             return None
@@ -140,7 +154,8 @@ class AggregatorConfig:
         return selector_mod.make_selector(
             self.selector_mode, table=self.selector_table or None,
             link=self.selector_link, codec=self.codec or "none",
-            wire_itemsize=wire.itemsize)
+            wire_itemsize=wire.itemsize,
+            fused=self.resolve_fused_hops())
 
 
 class GradientAggregator:
@@ -222,6 +237,7 @@ class GradientAggregator:
             intra=cfg.selector_link, inter="dcn",
             codec=cfg.codec or "none",
             error_feedback=cfg.error_feedback,
+            fused_hops=cfg.fused_hops,
             model_axis=self.model_axis,
             model_axis_size=int(model_axis_size or 1), cache=self.cache)
         self.last_schedule = sched
@@ -235,6 +251,7 @@ class GradientAggregator:
                 pass
             telemetry.metrics.record_schedule(sched)
             telemetry.record_plan_cache(self.cache)
+            telemetry.record_executor_cache(GLOBAL_EXECUTOR_CACHE)
         return sched
 
     def _trace_context(self, grads, groups):

@@ -303,12 +303,23 @@ def roundtrip(name: str, x: jax.Array) -> jax.Array:
     return decode(name, payload, scale)
 
 
-def permuter(name: str):
+def permuter(name: str, fused: bool = False):
     """A drop-in replacement for ``compat.ppermute`` that encodes the
     payload for the hop and decodes on receipt — the
     dequantize-reduce-requantize boundary ``reducers.execute_stages``
-    installs around every hop of a codec'd stage."""
+    installs around every hop of a codec'd stage.
+
+    ``fused=True`` returns the hop-protocol variant
+    (``hop(x, axis, perm, add=None)`` with ``supports_add``): encode
+    and decode(+accumulate) each run as ONE Pallas kernel pass
+    (kernels/fused_hop.py, interpret-mode on CPU / compiled on TPU)
+    instead of staged XLA ops.  The wire payload, scale scalar, and
+    bitcast pinning are identical to the unfused path — the kernels
+    reuse this module's scale/clamp semantics bit-for-bit — so the HLO
+    byte walls and SV008's derived tolerance carry over unchanged."""
     c = get(name)
+    if fused:
+        return _fused_permuter(c)
     if c.name == "none":
         return compat.ppermute
 
@@ -337,6 +348,51 @@ def permuter(name: str):
         return decode(c.name, payload, scale)
 
     return coded_ppermute
+
+
+def _wire_bits_dtype(payload: jax.Array):
+    """The opaque integer wire dtype pinning a float-coded payload
+    against XLA's convert mover (see ``coded_ppermute`` above), or
+    None when no pinning is needed (int8)."""
+    fdt = payload.dtype
+    if jnp.issubdtype(fdt, jnp.floating):
+        return {2: jnp.uint16, 1: jnp.uint8}[fdt.itemsize]
+    return None
+
+
+def _fused_permuter(c: Codec):
+    """Hop-protocol permuter whose encode and decode+accumulate are
+    single Pallas kernel passes.  The bitcast wire pinning stays HERE
+    (outside the kernels): the hazard is XLA moving converts across
+    the collective-permute, which only exists at this level."""
+    from .. import kernels  # lazy: keep core import-light
+
+    if c.name == "none":
+
+        def fused_ppermute(x, axis, perm, add=None):
+            r = compat.ppermute(x, axis, perm)
+            if add is None:
+                return r
+            return kernels.hop_decode_add("none", r, None, add)
+
+        fused_ppermute.supports_add = True
+        return fused_ppermute
+
+    def fused_coded_ppermute(x, axis, perm, add=None):
+        payload, scale = kernels.hop_encode(c.name, x)
+        bits = _wire_bits_dtype(payload)
+        fdt = payload.dtype
+        if bits is not None:
+            payload = jax.lax.bitcast_convert_type(payload, bits)
+        payload = compat.ppermute(payload, axis, perm)
+        if bits is not None:
+            payload = jax.lax.bitcast_convert_type(payload, fdt)
+        if scale is not None:
+            scale = compat.ppermute(scale, axis, perm)
+        return kernels.hop_decode_add(c.name, payload, scale, add)
+
+    fused_coded_ppermute.supports_add = True
+    return fused_coded_ppermute
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,24 @@ GAMMA_S_PER_BYTE = 3.0 / hw.V5E.hbm_bandwidth
 # uncoded while bandwidth-bound ones win.
 QUANT_GAMMA_S_PER_BYTE = 2.5 / hw.V5E.hbm_bandwidth
 
+# Fused-hop variant (kernels/fused_hop.py, the paper's GDR-Opt kernel):
+# decode+accumulate(+encode) run as single VMEM-tiled kernel passes, so
+# the per-hop HBM traffic collapses from ~2.5 bytes per decoded byte to
+# ~1 (one streamed read of the received payload fused with the local
+# partial already in registers).  This is the γ_quant drop that moves
+# the selector's coded crossovers DOWN — smaller messages now afford
+# the wire codec, mirroring the paper's small/medium-message regime
+# win (Fig. 6).
+QUANT_GAMMA_FUSED_S_PER_BYTE = 1.0 / hw.V5E.hbm_bandwidth
+
+
+def quant_gamma(fused: bool = False) -> float:
+    """The codec compute toll per decoded wire byte: unfused staged XLA
+    hops pay ``QUANT_GAMMA_S_PER_BYTE``; fused Pallas hops pay
+    ``QUANT_GAMMA_FUSED_S_PER_BYTE``."""
+    return QUANT_GAMMA_FUSED_S_PER_BYTE if fused \
+        else QUANT_GAMMA_S_PER_BYTE
+
 # A zero-cost link: alpha = 0, beta = 0.  Lets callers split
 # allreduce_latency into its wire part (real link, gamma=0) and its
 # reduce part (FREE_LINK, real gamma) — the decomposition the codec-

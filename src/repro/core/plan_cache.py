@@ -224,5 +224,144 @@ class PlanCache:
         return len(self._plans)
 
 
+# ---------------------------------------------------------------------------
+# Stage executors — the pointer cache extended to COMPILED reductions
+# ---------------------------------------------------------------------------
+
+class StageExecutor:
+    """Compiled whole-schedule stage walk with donated fused buffers.
+
+    The paper's Pointer Cache removed a per-call driver query; the
+    remaining per-call host cost in our stack is handing ``jax.jit``
+    anything structurally fresh (a retrace) and the copy XLA inserts
+    when the fused input buffer must outlive the call.  A StageExecutor
+    closes both: it jits ONE function — every bucket of a resolved
+    :class:`~repro.core.schedule.ReduceSchedule` run through
+    ``reducers.execute_stages`` under ``shard_map`` — and donates the
+    fused buffers (``donate_argnums``), so the reduction reuses their
+    memory in place of an input copy.  ``traces`` counts actual jit
+    traces (incremented inside the traced body): a cached executor's
+    second call must leave it at 1 (tests/test_fused_hop.py pins this).
+
+    Scope: plain dp schedules (the closure replay and benchmark path).
+    Model-bracket schedules reduce inside the train step's own
+    shard_map and never go through a standalone executor."""
+
+    def __init__(self, sched, mesh, donate: bool = True):
+        from . import compat, reducers  # lazy: avoid an import cycle
+        from jax.sharding import PartitionSpec
+        if sched.model_axis is not None:
+            raise ValueError(
+                "StageExecutor runs plain dp schedules; model-bracket "
+                f"schedules (model_axis={sched.model_axis!r}) execute "
+                "inside the train step's shard_map")
+        self.schedule = sched
+        self.mesh = mesh
+        self.donate = bool(donate)
+        self.traces = 0
+        self.calls = 0
+        buckets = sched.buckets
+
+        def walk(*bufs):
+            # Trace-time counter: jit runs this body once per
+            # (shapes, dtypes) signature, so ``traces`` measures
+            # retraces, not calls.
+            self.traces += 1
+            return tuple(reducers.execute_stages(b, bk.stages)
+                         for b, bk in zip(bufs, buckets))
+
+        spec = PartitionSpec(tuple(sched.axis_names))
+        mapped = compat.shard_map(
+            walk, mesh, in_specs=spec, out_specs=spec,
+            axis_names=set(sched.axis_names), check_vma=False)
+        donate_argnums = tuple(range(len(buckets))) if self.donate else ()
+        self._fn = jax.jit(mapped, donate_argnums=donate_argnums)
+
+    def __call__(self, *bufs):
+        """Reduce the per-bucket fused buffers (one array per bucket,
+        dim 0 sharded over the schedule's axes).  With ``donate=True``
+        the inputs are consumed — do not reuse them after the call."""
+        if len(bufs) != len(self.schedule.buckets):
+            raise ValueError(
+                f"{len(bufs)} buffers for "
+                f"{len(self.schedule.buckets)} buckets")
+        self.calls += 1
+        return self._fn(*bufs)
+
+
+class StageExecutorCache:
+    """Interns :class:`StageExecutor` objects — the compiled-function
+    tier of the pointer cache.  The key is the full execution identity:
+    schedule fingerprint (which already folds in strategy, codec, and
+    the fused-hop flags), the flat buffer shapes/dtypes, the codec spec
+    (redundant with the fingerprint but kept explicit so a fingerprint
+    scheme change can never alias two wire arithmetics), donation, and
+    the mesh (axis names/shape + device ids).  Same construction-keyed
+    staleness guarantee as :class:`PlanCache`: any change to what would
+    be executed changes the key."""
+
+    def __init__(self):
+        self._executors: dict[Hashable, StageExecutor] = {}
+        self._lock = threading.Lock()
+        # CacheStats's back-reference is duck-typed on stats_snapshot,
+        # so ``cache.stats()`` works here exactly like on PlanCache.
+        self.stats = CacheStats(_cache=self)
+
+    @staticmethod
+    def key_for(sched, bufs, mesh, donate: bool = True) -> Hashable:
+        shapes = tuple(tuple(int(d) for d in b.shape) for b in bufs)
+        dtypes = tuple(str(jnp.dtype(b.dtype)) for b in bufs)
+        mesh_key = (tuple(mesh.axis_names),
+                    tuple(int(s) for s in mesh.devices.shape),
+                    tuple(int(d.id) for d in mesh.devices.flat))
+        return (sched.fingerprint(), shapes, dtypes,
+                sched.codec or "none", bool(donate), mesh_key)
+
+    def executor_for(self, sched, bufs, mesh,
+                     donate: bool = True) -> StageExecutor:
+        """Cached executor for ``sched`` over buffers shaped/typed like
+        ``bufs`` (arrays or ShapeDtypeStructs) on ``mesh``."""
+        key = self.key_for(sched, bufs, mesh, donate)
+        with self._lock:
+            ex = self._executors.get(key)
+            if ex is not None:
+                self.stats.hits += 1
+                return ex
+        # Build outside the lock (construction only wraps jit — the
+        # trace happens at first call — but keep the critical section
+        # minimal anyway).
+        ex = StageExecutor(sched, mesh, donate=donate)
+        with self._lock:
+            won = self._executors.setdefault(key, ex)
+            if won is ex:
+                self.stats.misses += 1
+            else:
+                self.stats.hits += 1
+        return won
+
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "hits": self.stats.hits,
+                "misses": self.stats.misses,
+                "hit_rate": self.stats.hit_rate,
+                "interned": len(self._executors),
+                "traces": sum(e.traces for e in self._executors.values()),
+                "calls": sum(e.calls for e in self._executors.values()),
+            }
+
+    def clear(self):
+        with self._lock:
+            self._executors.clear()
+            self.stats = CacheStats(_cache=self)
+
+    def __len__(self):
+        return len(self._executors)
+
+
 # Process-global cache, mirroring the MPI-runtime-global pointer cache.
 GLOBAL_PLAN_CACHE = PlanCache()
+
+# Process-global executor cache (compiled tier; cleared by tests that
+# need trace isolation).
+GLOBAL_EXECUTOR_CACHE = StageExecutorCache()

@@ -44,6 +44,31 @@ Axis = str
 
 STRATEGIES = ("psum", "ring_rsa", "rhd_rsa", "ps_gather", "hierarchical")
 
+# Algorithms whose accumulate can route through the fused Pallas hop
+# kernel (kernels/fused_hop.py): the ring/RHD hop adds fuse into the
+# decode pass, and ps_gather's terminal reduction routes through
+# fused_reduce.  psum exposes no hop to fuse (SV009 rejects it) and
+# all_gather/shard stages have no accumulate at all.
+FUSED_HOP_ALGORITHMS = ("ring_rsa", "rhd_rsa", "ps_gather")
+
+
+def _as_hop(permute):
+    """Adapt a hop primitive to the 4-arg hop protocol
+    ``hop(x, axis, perm, add=None)`` — returns ``recv`` (or
+    ``add + recv``).  Fused permuters (``codec.permuter(..,
+    fused=True)``) advertise ``supports_add`` and fold the add into
+    their decode kernel pass; legacy 3-arg permuters get the add
+    applied here as a separate op (f32 addition is commutative
+    bitwise, so either operand order is bit-identical)."""
+    if getattr(permute, "supports_add", False):
+        return permute
+
+    def hop(x, axis, perm, add=None):
+        r = permute(x, axis, perm)
+        return r if add is None else add + r
+
+    return hop
+
 
 def _pow2_core(p: int) -> int:
     """Largest power of two <= p: the size of the RHD core group."""
@@ -91,15 +116,24 @@ def ring_reduce_scatter(x: jax.Array, axis: Axis, permute=ppermute):
     x, n = _pad_leading(x, p)
     if p == 1:
         return x, n
-    chunks = x.reshape(p, -1, *x.shape[1:])
     idx = axis_index(axis)
     perm = _ring_perm(p)
+    hop = _as_hop(permute)
+    # Chunk i lives at offset i*chunk_len of the padded buffer; a
+    # dynamic slice (not jnp.take's gather lowering) fetches it, and
+    # the mod-p index is already in range so no wrap handling is
+    # needed.
+    chunk_len = x.shape[0] // p
+
+    def chunk_at(i):
+        return lax.dynamic_slice_in_dim(x, i * chunk_len, chunk_len,
+                                        axis=0)
+
     # Start with our own chunk `idx`; after step s we hold the partial sum
     # of chunk (idx - s) over devices {idx-s, ..., idx}.
-    buf = jnp.take(chunks, idx, axis=0, mode="wrap")
+    buf = chunk_at(idx)
     for s in range(1, p):
-        buf = permute(buf, axis, perm)
-        buf = buf + jnp.take(chunks, (idx - s) % p, axis=0, mode="wrap")
+        buf = hop(buf, axis, perm, add=chunk_at((idx - s) % p))
     return buf, n
 
 
@@ -160,13 +194,14 @@ def rhd_rsa(x: jax.Array, axis: Axis, permute=ppermute) -> jax.Array:
     r = p - core
     x, n = _pad_leading(x, core)
     idx = axis_index(axis)
+    hop = _as_hop(permute)
 
     if r:
         # Pre-processing fold: excess rank core+j ships its whole buffer
         # to core rank j.  Non-targets of a ppermute receive zeros, so a
         # single add applies the fold only where it landed.
         pre = [(core + j, j) for j in range(r)]
-        x = x + permute(x, axis, pre)
+        x = hop(x, axis, pre, add=x)
 
     # Reduce-scatter by recursive halving over the core: exchange with
     # partner idx^mask, mask = core/2, ..., 1. Bit clear -> keep lower
@@ -182,8 +217,7 @@ def rhd_rsa(x: jax.Array, axis: Axis, permute=ppermute) -> jax.Array:
         bit = (idx & mask) != 0
         send = jnp.where(bit, lower, upper)
         keep = jnp.where(bit, upper, lower)
-        recv = permute(send, axis, perm)
-        buf = keep + recv
+        buf = hop(send, axis, perm, add=keep)
         mask //= 2
     # Core device idx now owns the fully reduced chunk at offset
     # idx * (N/core).
@@ -213,12 +247,22 @@ def rhd_rsa(x: jax.Array, axis: Axis, permute=ppermute) -> jax.Array:
 # parameter-server analogue
 # ---------------------------------------------------------------------------
 
-def ps_gather(x: jax.Array, axis: Axis) -> jax.Array:
+def ps_gather(x: jax.Array, axis: Axis, *, fused: bool = False) -> jax.Array:
     """Parameter-server communication pattern: every worker ships its full
     gradient (all-gather, p·N ingress bytes per device) and the reduction
     happens centrally. Reproduces *why* the paper's gRPC PS baseline loses
-    at scale; the cost model charges the PS ingress bottleneck."""
+    at scale; the cost model charges the PS ingress bottleneck.
+
+    ``fused=True`` routes the terminal reduction through the
+    ``kernels.fused_reduce`` Pallas kernel (one VMEM-tiled fp32 pass —
+    the paper's C2 reduction kernel) instead of the staged ``jnp.sum``;
+    for float32 payloads the two are bit-identical."""
     gathered = all_gather(x, axis)          # (p, ...)
+    if fused:
+        from ..kernels.fused_reduce import fused_reduce as _fused_reduce
+        p = gathered.shape[0]
+        out = _fused_reduce(gathered.reshape(p, -1), out_dtype=x.dtype)
+        return out.reshape(x.shape)
     return jnp.sum(gathered, axis=0)
 
 
@@ -249,16 +293,31 @@ def _stage_permute(st):
     carries a wire codec (core/codec.py).  Codecs are only legal on
     algorithms whose hops are explicit ppermutes (the static verifier's
     SV008 rejects the rest before execution; this is the runtime
-    backstop)."""
+    backstop).
+
+    A stage flagged ``fused_hop`` gets the FUSED permuter: the hop's
+    decode and accumulate (and for coded stages the encode) run as
+    single Pallas kernel passes (kernels/fused_hop.py) instead of
+    staged XLA ops — the paper's GDR-Opt kernel.  Only
+    ``FUSED_HOP_ALGORITHMS`` expose a fusable accumulate (SV009 is the
+    static twin of this runtime check)."""
     cname = getattr(st, "codec", "none") or "none"
+    fused = bool(getattr(st, "fused_hop", False))
+    if fused and st.algorithm not in FUSED_HOP_ALGORITHMS:
+        raise ValueError(
+            f"fused_hop on {st.op}@{st.axis} ({st.algorithm}): only "
+            f"{FUSED_HOP_ALGORITHMS} expose a fusable accumulate")
     if cname == "none":
+        if fused and st.algorithm in ("ring_rsa", "rhd_rsa"):
+            from . import codec as codec_mod
+            return codec_mod.permuter("none", fused=True)
         return ppermute
     from . import codec as codec_mod
     if st.algorithm not in codec_mod.CODED_ALGORITHMS:
         raise ValueError(
             f"codec {cname!r} on {st.op}@{st.axis} ({st.algorithm}): only "
             f"{codec_mod.CODED_ALGORITHMS} expose ppermute hop boundaries")
-    return codec_mod.permuter(cname)
+    return codec_mod.permuter(cname, fused=fused)
 
 
 def _traced_permute(tracer, inner, st, stage_path):
@@ -270,16 +329,20 @@ def _traced_permute(tracer, inner, st, stage_path):
     (DESIGN.md §3.11 disabled-mode identity)."""
     cname = getattr(st, "codec", "none") or "none"
     counter = [0]
+    inner_hop = _as_hop(inner)
 
-    def permute(x, axis, perm):
+    def permute(x, axis, perm, add=None):
         k = counter[0]
         counter[0] += 1
         with tracer.span(f"hop[{k}]", cat="trace",
                          ir_path=f"{stage_path}.hop[{k}]",
                          payload_bytes=int(x.size) * x.dtype.itemsize,
                          n_edges=len(perm), codec=cname):
-            return inner(x, axis, perm)
+            return inner_hop(x, axis, perm, add=add)
 
+    # Preserve the hop protocol so the reducers keep the add fused
+    # into the (possibly fused) inner permuter rather than re-adding.
+    permute.supports_add = True
     return permute
 
 
@@ -347,9 +410,10 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
             elif st.op == "shard":
                 p = axis_size(st.axis)
                 x, n = _pad_leading(x, p)
-                chunks = x.reshape(p, -1, *x.shape[1:])
                 idx = axis_index(st.axis)
-                x = jnp.take(chunks, (idx + 1) % p, axis=0, mode="wrap")
+                chunk_len = x.shape[0] // p
+                x = lax.dynamic_slice_in_dim(
+                    x, ((idx + 1) % p) * chunk_len, chunk_len, axis=0)
                 pending.append((st.axis, n))
             elif st.op == "all_gather":
                 if not pending or pending[-1][0] != st.axis:
@@ -363,7 +427,12 @@ def execute_stages(x: jax.Array, stages) -> jax.Array:
                 if fn is None:
                     raise ValueError(f"unknown allreduce algorithm "
                                      f"{st.algorithm!r}")
-                if permute is not ppermute:
+                if st.algorithm == "ps_gather":
+                    # No ppermute hops to wrap; fused_hop routes the
+                    # terminal reduction through the Pallas kernel.
+                    x = fn(x, st.axis,
+                           fused=bool(getattr(st, "fused_hop", False)))
+                elif permute is not ppermute:
                     x = fn(x, st.axis, permute=permute)
                 else:
                     x = fn(x, st.axis)

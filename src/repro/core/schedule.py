@@ -160,6 +160,8 @@ class Stage:
                        # stage carries a wire codec (core/codec.py)
     predicted_s: float # cost-model latency of this stage alone
     codec: str = "none"  # wire codec around each ppermute hop
+    fused_hop: bool = False  # route hops through the fused Pallas
+                             # kernel (kernels/fused_hop.py)
 
     def to_json(self) -> dict:
         rec = {"op": self.op, "algorithm": self.algorithm,
@@ -167,9 +169,12 @@ class Stage:
                "bytes": self.n_bytes, "wire_bytes": self.wire_bytes,
                "predicted_s": self.predicted_s}
         # Emitted only when set, so uncoded records (and their schema)
-        # stay byte-identical to every pre-codec artifact.
+        # stay byte-identical to every pre-codec artifact; fused_hop
+        # follows the same only-when-set convention.
         if self.codec != "none":
             rec["codec"] = self.codec
+        if self.fused_hop:
+            rec["fused_hop"] = True
         return rec
 
     @property
@@ -426,10 +431,12 @@ class ReduceSchedule:
                  "strategy": b.strategy,
                  # Codec identity joins the stage tuple only when set,
                  # so every pre-codec fingerprint (committed in matrix
-                 # rows and BENCH artifacts) is reproduced bit-for-bit.
+                 # rows and BENCH artifacts) is reproduced bit-for-bit;
+                 # the fused-hop marker follows the same convention.
                  "stages": [[st.op, st.algorithm, st.axis, st.axis_size,
                              st.n_bytes, st.wire_bytes]
                             + ([st.codec] if st.codec != "none" else [])
+                            + (["fused"] if st.fused_hop else [])
                             for st in b.stages]}
                 for b in self.buckets],
         }
@@ -460,7 +467,8 @@ def from_json(rec: dict) -> ReduceSchedule:
                              n_bytes=int(s["bytes"]),
                              wire_bytes=int(s["wire_bytes"]),
                              predicted_s=float(s["predicted_s"]),
-                             codec=s.get("codec", "none"))
+                             codec=s.get("codec", "none"),
+                             fused_hop=bool(s.get("fused_hop", False)))
                        for s in entry["stages"])
         ranks = entry.get("readiness_ranks")
         for j in range(int(entry.get("count", 1))):
@@ -504,9 +512,18 @@ def _stage_link(i: int, n_axes: int, intra, inter):
     return inter if (n_axes > 1 and i == 0) else intra
 
 
+def _stage_fused(alg: str, fused: bool) -> bool:
+    """Whether a stage built with ``fused=True`` actually carries the
+    fused-hop flag: only algorithms with a fusable accumulate do
+    (psum's vendor collective exposes no hop — it silently stays
+    unfused, mirroring how vendor stages degrade codecs to none)."""
+    return bool(fused) and alg in reducers.FUSED_HOP_ALGORITHMS
+
+
 def _flat_allreduce_stage(alg: str, cname: str, axis: str, p: int,
                           n_bytes: int, link, gamma: float,
-                          wire_itemsize: int) -> Stage:
+                          wire_itemsize: int,
+                          fused: bool = False) -> Stage:
     """One flat allreduce stage, coded or not.  Uncoded stages keep the
     pre-codec arithmetic bit-for-bit (fingerprints of committed
     artifacts depend on it).  Coded stages charge:
@@ -516,15 +533,24 @@ def _flat_allreduce_stage(alg: str, cname: str, axis: str, p: int,
       predicted_s = α·steps + β·(encoded wire bytes)      [real link]
                   + γ·(decoded reduce bytes)              [FREE_LINK]
                   + γ_quant·(decoded wire volume)         [codec toll]
+
+    ``fused=True`` marks the stage for the fused Pallas hop kernel:
+    wire bytes are UNCHANGED (the kernels ship bit-identical payloads)
+    and so is the uncoded latency (the accumulate was one op already);
+    only the coded γ_quant toll drops (``cost_model.quant_gamma``) —
+    the decode+accumulate(+encode) collapse that re-prices the
+    selector's crossovers.
     """
     eff = codec_mod.stage_codec(cname, alg)
+    fuse = _stage_fused(alg, fused)
     if eff == "none":
         return Stage(
             op="allreduce", algorithm=alg, axis=axis, axis_size=p,
             n_bytes=n_bytes,
             wire_bytes=reducers.wire_bytes(alg, n_bytes, p),
             predicted_s=cost_model.allreduce_latency(
-                alg, n_bytes, p, link=link, gamma=gamma))
+                alg, n_bytes, p, link=link, gamma=gamma),
+            fused_hop=fuse)
     enc = codec_mod.encoded_bytes(eff, n_bytes, wire_itemsize)
     hops = reducers.allreduce_steps(alg, p)
     wire = reducers.wire_bytes(alg, enc, p) + codec_mod.hop_bytes(eff, hops)
@@ -533,11 +559,11 @@ def _flat_allreduce_stage(alg: str, cname: str, axis: str, p: int,
         + cost_model.allreduce_latency(alg, n_bytes, p,
                                        link=cost_model.FREE_LINK,
                                        gamma=gamma)
-        + cost_model.QUANT_GAMMA_S_PER_BYTE
+        + cost_model.quant_gamma(fuse)
         * reducers.wire_bytes(alg, n_bytes, p))
     return Stage(op="allreduce", algorithm=alg, axis=axis, axis_size=p,
                  n_bytes=n_bytes, wire_bytes=wire, predicted_s=predicted,
-                 codec=eff)
+                 codec=eff, fused_hop=fuse)
 
 
 def bracket_chunk_bytes(n_bytes: int, m: int, wire_itemsize: int) -> int:
@@ -554,8 +580,8 @@ def decompose(strategy: str, n_bytes: int,
               intra=cost_model.ICI, inter=cost_model.DCN,
               gamma: float = cost_model.GAMMA_S_PER_BYTE,
               codec: str = "none", wire_itemsize: int = 4,
-              model_axis: "str | None" = None, model_axis_size: int = 1
-              ) -> tuple[Stage, ...]:
+              model_axis: "str | None" = None, model_axis_size: int = 1,
+              fused: bool = False) -> tuple[Stage, ...]:
     """The decomposition tree of one bucket: per-axis stages with
     algorithmic wire bytes (reducers accounting) and cost-model
     latencies.  ``axis_names``/``axis_sizes`` are outermost first.
@@ -580,7 +606,14 @@ def decompose(strategy: str, n_bytes: int,
     ranks, so each rank dp-reduces a disjoint chunk and the gather
     reassembles the exact dp-sum — bit-for-bit the un-bracketed result,
     at 1/m of the dp wire.  The bracket does not compose with wire
-    codecs (SV008's byte arithmetic charges from the full bucket)."""
+    codecs (SV008's byte arithmetic charges from the full bucket).
+
+    ``fused=True`` marks accumulate stages (allreduce, reduce_scatter)
+    whose algorithm supports it with ``fused_hop`` — execution routes
+    their hops through the fused Pallas kernels and coded stages pay
+    the smaller ``cost_model.quant_gamma(fused=True)`` toll.  The
+    all_gather leg has no accumulate to fuse and keeps the unfused
+    toll; wire bytes never change."""
     names = tuple(axis_names)
     sizes = tuple(int(s) for s in axis_sizes)
     if len(names) != len(sizes) or not names:
@@ -603,7 +636,7 @@ def decompose(strategy: str, n_bytes: int,
         chunk = bracket_chunk_bytes(n_bytes, m, wire_itemsize)
         inner = decompose(strategy, chunk, names, sizes, intra=intra,
                           inter=inter, gamma=gamma, codec="none",
-                          wire_itemsize=wire_itemsize)
+                          wire_itemsize=wire_itemsize, fused=fused)
         shard = Stage(op="shard", algorithm="ring_rsa", axis=model_axis,
                       axis_size=m, n_bytes=n_bytes, wire_bytes=0,
                       predicted_s=0.0)
@@ -625,7 +658,7 @@ def decompose(strategy: str, n_bytes: int,
             link = _stage_link(i, len(names), intra, inter)
             stages.append(_flat_allreduce_stage(
                 alg, cparts[len(names) - 1 - i], names[i], sizes[i],
-                n_bytes, link, gamma, wire_itemsize))
+                n_bytes, link, gamma, wire_itemsize, fused=fused))
         return tuple(stages)
 
     # Composed two-level: RS@inner -> allreduce@outer -> AG@inner.
@@ -640,16 +673,23 @@ def decompose(strategy: str, n_bytes: int,
     stages = []
     frac_d = (d - 1) / d
     level_bytes = int(n_bytes * frac_d)
+    rs_fused = _stage_fused(inner_alg, fused)
     if inner_eff != "none":
         enc = codec_mod.encoded_bytes(inner_eff, n_bytes, wire_itemsize)
         enc_level = int(enc * frac_d)
         level_wire = enc_level + codec_mod.hop_bytes(inner_eff, d - 1)
         level_beta_bytes = enc * frac_d
-        quant_toll = cost_model.QUANT_GAMMA_S_PER_BYTE * n_bytes * frac_d
+        # The RS leg's hops accumulate, so its toll drops when fused;
+        # the AG leg only forwards (encode/decode, no add) and keeps
+        # the unfused toll either way.
+        quant_toll = cost_model.quant_gamma(rs_fused) * n_bytes * frac_d
+        ag_quant_toll = cost_model.QUANT_GAMMA_S_PER_BYTE \
+            * n_bytes * frac_d
     else:
         level_wire = level_bytes
         level_beta_bytes = n_bytes * frac_d
         quant_toll = 0.0
+        ag_quant_toll = 0.0
     if d > 1:
         stages.append(Stage(
             op="reduce_scatter", algorithm=inner_alg, axis=inner_axis,
@@ -657,7 +697,7 @@ def decompose(strategy: str, n_bytes: int,
             predicted_s=(d - 1) * intra.alpha_s
             + level_beta_bytes * intra.beta
             + n_bytes * frac_d * gamma + quant_toll,
-            codec=inner_eff))
+            codec=inner_eff, fused_hop=rs_fused))
     chunk = n_bytes // d
     if codec_mod.stage_codec(outer_codec, outer_alg) == "none":
         # Pre-codec arithmetic, bit-for-bit (note the FLOAT n_bytes/d in
@@ -668,17 +708,18 @@ def decompose(strategy: str, n_bytes: int,
             axis_size=pods, n_bytes=chunk,
             wire_bytes=reducers.wire_bytes(outer_alg, chunk, pods),
             predicted_s=cost_model.allreduce_latency(
-                outer_alg, n_bytes / d, pods, link=inter, gamma=gamma)))
+                outer_alg, n_bytes / d, pods, link=inter, gamma=gamma),
+            fused_hop=_stage_fused(outer_alg, fused)))
     else:
         stages.append(_flat_allreduce_stage(
             outer_alg, outer_codec, outer_axis, pods, chunk, inter, gamma,
-            wire_itemsize))
+            wire_itemsize, fused=fused))
     if d > 1:
         stages.append(Stage(
             op="all_gather", algorithm=inner_alg, axis=inner_axis,
             axis_size=d, n_bytes=chunk, wire_bytes=level_wire,
             predicted_s=(d - 1) * intra.alpha_s
-            + level_beta_bytes * intra.beta + quant_toll,
+            + level_beta_bytes * intra.beta + ag_quant_toll,
             codec=inner_eff))
     return tuple(stages)
 
@@ -687,7 +728,8 @@ def strategy_latency(strategy: str, n_bytes: float,
                      axis_sizes: Sequence[int],
                      intra=cost_model.ICI, inter=cost_model.DCN,
                      codec: str = "none",
-                     wire_itemsize: int = 4) -> float:
+                     wire_itemsize: int = 4,
+                     fused: bool = False) -> float:
     """Cost-model latency of one allreduce of ``n_bytes`` with
     ``strategy`` over ``axis_sizes`` (outermost first) — the stage sum
     of the decomposition tree; the selector's argmin objective."""
@@ -696,7 +738,8 @@ def strategy_latency(strategy: str, n_bytes: float,
     return sum(st.predicted_s
                for st in decompose(strategy, int(n_bytes), names, sizes,
                                    intra=intra, inter=inter, codec=codec,
-                                   wire_itemsize=wire_itemsize))
+                                   wire_itemsize=wire_itemsize,
+                                   fused=fused))
 
 
 # ---------------------------------------------------------------------------
@@ -730,6 +773,9 @@ class ScheduleRequest:
     # (model_axis, size) when the planner may bracket replicated buckets
     # over a manual model axis; None otherwise (DESIGN.md §3.12).
     model_key: Hashable = None
+    # Fused Pallas hop kernels (resolved bool; only-when-set in the
+    # fingerprint so pre-fusion cache keys are reproduced exactly).
+    fused: bool = False
 
     def fingerprint(self) -> Hashable:
         # NOT dataclasses.astuple: that deep-copies every field, and a
@@ -738,7 +784,8 @@ class ScheduleRequest:
                 self.threshold_bytes, self.fuse, self.wire_dtype,
                 self.axis_names, self.axis_sizes, self.strategy_context,
                 self.switch_points, self.placement, self.link_key,
-                self.codec, self.error_feedback, self.model_key)
+                self.codec, self.error_feedback, self.model_key) \
+            + (("fused_hops",) if self.fused else ())
 
 
 def _tree_meta(tree, groups):
@@ -760,6 +807,7 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
          intra=cost_model.ICI, inter=cost_model.DCN,
          codec: str = "none", error_feedback: bool = False,
          model_axis: "str | None" = None, model_axis_size: int = 1,
+         fused_hops: "bool | None" = None,
          cache=None) -> ReduceSchedule:
     """Resolve ``tree`` (arrays or ShapeDtypeStructs) into a
     :class:`ReduceSchedule` — the ONE path from config to executable
@@ -781,6 +829,13 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
     shard-shaped from the gather boundary and dp-reduce as-is.  The
     selector prices bracketed buckets on the chunk it actually moves.
     Codec'd plans skip the bracket (decompose: SV008 byte arithmetic).
+
+    ``fused_hops``: route accumulate hops through the fused Pallas
+    kernels (kernels/fused_hop.py).  ``None`` (default) resolves to
+    ``codec != "none"`` — coded hops fuse (that's where the staged
+    dequantize/add/requantize round trips are), uncoded plans keep the
+    plain-XLA adds so pre-fusion schedules (and the 512-device dryrun's
+    compile time) are byte-identical to before.
     """
     names = tuple(axis_names)
     sizes = tuple(int(s) for s in axis_sizes)
@@ -796,6 +851,7 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
     codec_mod.validate_spec(codec)
     if error_feedback and codec == "none":
         raise ValueError("error_feedback requires a wire codec")
+    fused = (codec != "none") if fused_hops is None else bool(fused_hops)
 
     switch: tuple[int, ...] = ()
     if selector is not None and fuse and align_buckets:
@@ -838,7 +894,8 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
                                intra=intra, inter=inter, codec=codec,
                                wire_itemsize=wire_itemsize,
                                model_axis=model_axis if bracket else None,
-                               model_axis_size=model_m if bracket else 1)
+                               model_axis_size=model_m if bracket else 1,
+                               fused=fused)
             if predicted is None:
                 predicted = sum(st.predicted_s for st in stages)
             buckets.append(BucketSchedule(
@@ -866,7 +923,8 @@ def plan(tree, *, axis_names: Sequence[str], axis_sizes: Sequence[int],
         link_key=(intra.alpha_s, intra.bandwidth,
                   inter.alpha_s, inter.bandwidth),
         codec=codec, error_feedback=error_feedback,
-        model_key=(model_axis, model_m) if may_bracket else None)
+        model_key=(model_axis, model_m) if may_bracket else None,
+        fused=fused)
     return cache.resolve(request, _resolve)
 
 
@@ -883,7 +941,8 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
               threshold_bytes: int = 0,
               codec: str = "none",
               model_axis: "str | None" = None,
-              model_axis_size: int = 1) -> ReduceSchedule:
+              model_axis_size: int = 1,
+              fused: bool = False) -> ReduceSchedule:
     """A DETACHED schedule for an analytic model's bucket list (the
     experiment matrix's stand-in for a FusionPlan): bucket i is the
     i-th variable-group from the START of the network, so readiness is
@@ -912,7 +971,8 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
                            intra=intra, inter=inter, codec=codec,
                            wire_itemsize=itemsize,
                            model_axis=model_axis if bracket else None,
-                           model_axis_size=model_m if bracket else 1)
+                           model_axis_size=model_m if bracket else 1,
+                           fused=fused)
         predicted = float(latency_fn(n_bytes)) if latency_fn is not None \
             else sum(st.predicted_s for st in stages)
         buckets.append(BucketSchedule(
@@ -926,3 +986,26 @@ def synthetic(bucket_bytes: Sequence[float], strategy: str,
         buckets=tuple(buckets), codec=codec,
         model_axis=model_axis if bracket else None,
         model_axis_size=model_m if bracket else 1, plan=None)
+
+
+def with_fused_hops(sched: ReduceSchedule,
+                    fused: bool = True) -> ReduceSchedule:
+    """The same schedule with the ``fused_hop`` flag set (or cleared)
+    on every stage that can fuse (accumulate ops whose algorithm is in
+    ``reducers.FUSED_HOP_ALGORITHMS``).  ONLY the execution route
+    changes: wire bytes, codecs, and predicted latencies are untouched
+    — the flag-flip identity SV009 verifies and the telemetry
+    closure's fused-vs-unfused replay relies on (same IR, two
+    executors)."""
+    def flip(st: Stage) -> Stage:
+        can = (st.op in ("allreduce", "reduce_scatter")
+               and st.algorithm in reducers.FUSED_HOP_ALGORITHMS)
+        want = bool(fused) and can
+        if st.fused_hop == want:
+            return st
+        return dataclasses.replace(st, fused_hop=want)
+
+    buckets = tuple(
+        dataclasses.replace(b, stages=tuple(flip(st) for st in b.stages))
+        for b in sched.buckets)
+    return dataclasses.replace(sched, buckets=buckets)

@@ -79,7 +79,8 @@ def predict_latency(strategy: str, n_bytes: float,
                     link: cost_model.LinkParams = cost_model.ICI,
                     inter_link: cost_model.LinkParams = cost_model.DCN,
                     codec: str = "none",
-                    wire_itemsize: int = 4) -> float:
+                    wire_itemsize: int = 4,
+                    fused: bool = False) -> float:
     """Cost-model latency of ``strategy`` (flat, composed, or the
     ``hierarchical`` alias) for one allreduce of ``n_bytes`` over
     ``axis_sizes`` (outermost/pod axis first, matching the aggregator's
@@ -93,7 +94,13 @@ def predict_latency(strategy: str, n_bytes: float,
     dp levels on the 1/m ``bracket_chunk_bytes`` chunk — the selector is
     simply asked about the chunk, and the terminal ``(m-1)/m``
     all-gather is a fixed toll identical across every dp strategy, so
-    it can never flip a choice and is not modelled."""
+    it can never flip a choice and is not modelled.
+
+    ``fused`` prices the quantize toll at the fused-hop γ
+    (``cost_model.quant_gamma(fused=True)``) on the stages that carry
+    the Pallas decode→accumulate→encode kernel — the selector must
+    re-price its crossovers when schedules will run fused or the argmin
+    would keep the slower unfused coded boundaries."""
     sizes = tuple(int(s) for s in axis_sizes)
     if len(sizes) > 2:
         raise ValueError(f"selector supports 1- or 2-axis meshes, "
@@ -101,7 +108,8 @@ def predict_latency(strategy: str, n_bytes: float,
     return schedule_mod.strategy_latency(strategy, n_bytes, sizes,
                                          intra=link, inter=inter_link,
                                          codec=codec,
-                                         wire_itemsize=wire_itemsize)
+                                         wire_itemsize=wire_itemsize,
+                                         fused=fused)
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +148,8 @@ class AnalyticSelector(Selector):
 
     def __init__(self, link=cost_model.ICI, inter_link=cost_model.DCN,
                  candidates: Sequence[str] = DEFAULT_CANDIDATES,
-                 codec: str = "none", wire_itemsize: int = 4):
+                 codec: str = "none", wire_itemsize: int = 4,
+                 fused: bool = False):
         self.link = resolve_link(link)
         self.inter_link = resolve_link(inter_link)
         for s in candidates:
@@ -156,6 +165,11 @@ class AnalyticSelector(Selector):
         self.codec = codec or "none"
         codec_mod.validate_spec(self.codec)
         self.wire_itemsize = int(wire_itemsize)
+        # Whether schedules will execute with the fused hop kernel:
+        # drops the quantize γ on codec-carrying candidates, so the
+        # coded crossovers move (cheaper toll -> coded RHD stays
+        # optimal to different boundaries than the unfused pricing).
+        self.fused = bool(fused)
         self._switch_cache: dict = {}
 
     def candidates_for(self, axis_sizes: Sequence[int]) -> tuple[str, ...]:
@@ -172,7 +186,8 @@ class AnalyticSelector(Selector):
         for s in self.candidates_for(sizes):
             t = predict_latency(s, n_bytes, sizes, self.link,
                                 self.inter_link, codec=self.codec,
-                                wire_itemsize=self.wire_itemsize)
+                                wire_itemsize=self.wire_itemsize,
+                                fused=self.fused)
             if t < best_t:            # strict: first-listed wins ties
                 best, best_t = s, t
         return Choice(best, best_t)
@@ -231,6 +246,9 @@ class AnalyticSelector(Selector):
         # and the plan-cache keys derived from it — is unchanged.
         if self.codec != "none":
             fp = fp + (self.codec, self.wire_itemsize)
+        # Same only-when-set convention for the fused-hop pricing.
+        if self.fused:
+            fp = fp + ("fused_hops",)
         return fp
 
 
@@ -442,15 +460,23 @@ def build_analytic_table(ps: Sequence[int], sizes: Sequence[int],
 def crossover_bytes(p: int, link=cost_model.ICI,
                     candidates: Sequence[str] = DEFAULT_CANDIDATES,
                     lo: int = 1, hi: int = 1 << 32,
-                    codec: str = "none") -> float:
+                    codec: str = "none", fused: bool = False) -> float:
     """Message size at which the analytic winner stops being the
     latency-optimal ``rhd_rsa``: 0 if RHD never wins (p=3, where the
     pre/post fold erases its step advantage), ``inf`` if it always wins
     (power-of-two p, where RHD dominates ring at every size).  A wire
     codec shrinks every coded candidate's β term while α stays put, so
     RHD stays competitive to LARGER messages: crossover(none) <=
-    crossover(int8) at non-pow2 p (pinned in tests/test_selector.py)."""
-    sel = AnalyticSelector(link=link, candidates=candidates, codec=codec)
+    crossover(int8) at non-pow2 p (pinned in tests/test_selector.py).
+
+    ``fused`` prices the fused-hop kernel's cheaper quantize γ.  The
+    toll scales with each algorithm's wire bytes, and RHD's pre-fold
+    moves ~2x the ring's wire volume at non-pow2 p — so the unfused
+    toll taxes RHD hardest, and fusing it back down extends RHD's
+    reign: crossover(codec, fused=False) <= crossover(codec,
+    fused=True) (also pinned in tests/test_selector.py)."""
+    sel = AnalyticSelector(link=link, candidates=candidates, codec=codec,
+                           fused=fused)
     if sel.select(lo, (p,)) != "rhd_rsa":
         return 0.0
     if sel.select(hi, (p,)) == "rhd_rsa":
@@ -468,16 +494,19 @@ def crossover_bytes(p: int, link=cost_model.ICI,
 def make_selector(mode: str = "analytic", table=None,
                   link=cost_model.ICI, inter_link=cost_model.DCN,
                   candidates: Sequence[str] = DEFAULT_CANDIDATES,
-                  codec: str = "none", wire_itemsize: int = 4
-                  ) -> Selector:
+                  codec: str = "none", wire_itemsize: int = 4,
+                  fused: bool = False) -> Selector:
     """Factory used by the aggregator: ``table`` may be a path or a
     parsed dict (empirical mode only).  ``codec`` makes the argmin
     price the coded wire (analytic) or read the codec'd table rows
-    (empirical)."""
+    (empirical); ``fused`` additionally prices the fused-hop γ
+    (analytic only — empirical rows already embody whatever execution
+    path they were measured under)."""
     if mode == "analytic":
         return AnalyticSelector(link=link, inter_link=inter_link,
                                 candidates=candidates, codec=codec,
-                                wire_itemsize=wire_itemsize)
+                                wire_itemsize=wire_itemsize,
+                                fused=fused)
     if mode == "empirical":
         if table is None:
             raise ValueError("empirical selector mode needs a tuning table "

@@ -299,7 +299,8 @@ def check_allreduce_artifact(path: str = ALLREDUCE_ARTIFACT) -> list[str]:
     currency means structure: it loads, validates against the selector
     table schema, and carries the wire-codec sweep (codec'd entries
     plus the measured-vs-modeled speedup report with every band cell
-    in band) — refreshed by a full-grid
+    in band) and the fused-hop sweep (fused executors no slower
+    everywhere, faster on a codec'd cell) — refreshed by a full-grid
     ``benchmarks/allreduce_micro.py --emit-table`` run."""
     from repro.core import selector as sel
     name = os.path.basename(path)
@@ -325,6 +326,23 @@ def check_allreduce_artifact(path: str = ALLREDUCE_ARTIFACT) -> list[str]:
         problems.append(f"{name}: measured codec speedup outside the "
                         f"cost model's band "
                         f"(x{codec_meta.get('band_factor')})")
+    # fused-hop sweep: the artifact must also carry the fused-vs-unfused
+    # execution story — fused no slower than the stage walk anywhere
+    # (up to the declared noise corridor) and strictly faster on at
+    # least one codec'd cell, or the fused default is mispriced
+    fused_meta = table.get("meta", {}).get("fused")
+    if not fused_meta:
+        problems.append(f"{name}: meta.fused speedup report missing "
+                        f"(stale pre-fused-hop sweep; rerun the full "
+                        f"measured grid)")
+    else:
+        if not fused_meta.get("no_slower_everywhere"):
+            problems.append(f"{name}: fused executor slower than the "
+                            f"stage walk on some cell (noise factor "
+                            f"x{fused_meta.get('noise_factor')})")
+        if not fused_meta.get("faster_codec_cell"):
+            problems.append(f"{name}: fused executor not measurably "
+                            f"faster on any codec'd cell")
     return problems
 
 

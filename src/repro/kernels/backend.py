@@ -1,0 +1,22 @@
+"""Backend detection shared by every Pallas kernel entry point.
+
+Every kernel in this package takes ``interpret: bool | None = None``:
+``None`` resolves from the runtime backend (interpreted everywhere but
+a real TPU, compiled Mosaic on TPU), and an explicit bool overrides —
+so the same call sites run on this CPU host and on TPU without edits,
+and a test can still force either mode.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> interpret unless running on a real TPU backend."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

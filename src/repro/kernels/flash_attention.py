@@ -21,6 +21,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -70,10 +72,13 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = True, return_lse: bool = False):
+                        interpret: bool | None = None,
+                        return_lse: bool = False):
     """q,k,v: (B, S, H, dh) with kv already head-repeated (H heads).
     Returns (B, S, H, dh) (+ lse (B,H,S) if return_lse) — pair with
-    flash_attention_bwd for the full training kernel."""
+    flash_attention_bwd for the full training kernel.
+    ``interpret=None`` auto-detects the backend."""
+    interpret = resolve_interpret(interpret)
     b, sq, h, dh = q.shape
     sk = k.shape[1]
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
@@ -196,9 +201,11 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 def flash_attention_bwd(q, k, v, out, lse, dout, *, causal: bool = True,
                         window: int = 0, block_q: int = 128,
-                        block_k: int = 128, interpret: bool = True):
+                        block_k: int = 128, interpret: bool | None = None):
     """FlashAttention-2 backward. All (B,S,H,dh) except lse (B,H,S).
-    Returns (dq, dk, dv)."""
+    Returns (dq, dk, dv).  ``interpret=None`` auto-detects the
+    backend."""
+    interpret = resolve_interpret(interpret)
     b, sq, h, dh = q.shape
     sk = k.shape[1]
     assert sq % block_q == 0 and sk % block_k == 0

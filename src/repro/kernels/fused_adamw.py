@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 
 def _adamw_kernel(s_ref, p_ref, g_ref, m_ref, v_ref,
                   po_ref, mo_ref, vo_ref):
@@ -37,9 +39,11 @@ def _adamw_kernel(s_ref, p_ref, g_ref, m_ref, v_ref,
 
 def adamw_update(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8,
                  weight_decay=0.1, count=1, block: int = 4096,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """One fused AdamW step over a flat (n,) tensor quartet.
-    Returns (p_new, m_new, v_new)."""
+    Returns (p_new, m_new, v_new).  ``interpret=None`` auto-detects
+    the backend (interpreted off-TPU, compiled on TPU)."""
+    interpret = resolve_interpret(interpret)
     n = p.shape[0]
     pad = (-n) % block
     c = jnp.asarray(count, jnp.float32)

@@ -20,21 +20,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 
 def _reduce_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
     o_ref[...] = jnp.sum(x, axis=0).astype(o_ref.dtype)
 
 
-def fused_reduce(x: jax.Array, *, out_dtype=None, block_n: int = 2048,
-                 interpret: bool = True) -> jax.Array:
+def fused_reduce(x: jax.Array, *, out_dtype=None,
+                 block_n: int | None = None,
+                 interpret: bool | None = None) -> jax.Array:
     """Sum k stacked chunks: (k, n) -> (n,) with fp32 accumulation.
 
-    ``interpret=True`` executes the kernel body in Python on CPU (this
-    host has no TPU); on a TPU runtime pass ``interpret=False``.
+    ``interpret=None`` auto-detects the backend (interpreted off-TPU,
+    compiled Mosaic on TPU); pass a bool to force either mode.
+    ``block_n=None`` tiles 2048 lanes compiled and covers the whole
+    row interpreted (the interpret-mode grid loop runs at trace time,
+    so a per-tile grid would make trace time O(n)).
     """
+    interpret = resolve_interpret(interpret)
     k, n = x.shape
     out_dtype = out_dtype or x.dtype
+    if block_n is None:
+        block_n = max(n, 1) if interpret else 2048
     pad = (-n) % block_n
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))

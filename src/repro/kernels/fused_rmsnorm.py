@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 
 def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
     x = x_ref[...].astype(jnp.float32)
@@ -23,8 +25,10 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
 
 
 def fused_rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
-                  interpret: bool = True):
-    """x: (..., d); scale: (d,). Returns rmsnorm(x) * (1 + scale)."""
+                  interpret: bool | None = None):
+    """x: (..., d); scale: (d,). Returns rmsnorm(x) * (1 + scale).
+    ``interpret=None`` auto-detects the backend."""
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     d = x.shape[-1]
     xf = x.reshape(-1, d)

@@ -13,20 +13,16 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .backend import on_tpu
 from .flash_attention import flash_attention_fwd
 from .fused_adamw import adamw_update as _adamw_pallas
 from .fused_reduce import fused_reduce as _reduce_pallas
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("use_pallas", "out_dtype"))
 def fused_reduce(x, use_pallas: bool = False, out_dtype=None):
     if use_pallas:
-        return _reduce_pallas(x, out_dtype=out_dtype,
-                              interpret=not on_tpu())
+        return _reduce_pallas(x, out_dtype=out_dtype)
     return ref.fused_reduce_ref(x, out_dtype=out_dtype)
 
 
@@ -38,7 +34,7 @@ def adamw_update(p, g, m, v, lr, count, use_pallas: bool = False,
     kw = dict(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
               count=count)
     if use_pallas:
-        return _adamw_pallas(p, g, m, v, interpret=not on_tpu(), **kw)
+        return _adamw_pallas(p, g, m, v, **kw)
     return ref.adamw_update_ref(p, g, m, v, **kw)
 
 
@@ -47,6 +43,5 @@ def adamw_update(p, g, m, v, lr, count, use_pallas: bool = False,
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     use_pallas: bool = False):
     if use_pallas:
-        return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                   interpret=not on_tpu())
+        return flash_attention_fwd(q, k, v, causal=causal, window=window)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -28,7 +28,8 @@ can import :mod:`repro.telemetry` without a cycle.
 """
 from . import metrics, trace
 from .metrics import REGISTRY as METRICS
-from .metrics import MetricsRegistry, record_plan_cache
+from .metrics import MetricsRegistry, record_executor_cache, \
+    record_plan_cache
 from .trace import (
     TRACE_SCHEMA,
     Span,
@@ -50,6 +51,7 @@ __all__ = [
     "enabled",
     "get_tracer",
     "metrics",
+    "record_executor_cache",
     "record_plan_cache",
     "trace",
 ]

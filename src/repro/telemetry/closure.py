@@ -183,6 +183,125 @@ def measure_schedule(sched, wire_dtype: str = "", reps: int = 3,
 
 
 # ---------------------------------------------------------------------------
+# fused-vs-unfused replay (DESIGN.md §3.13)
+# ---------------------------------------------------------------------------
+
+def measure_fused_replay(sched, reps: int = 3, devices=None) -> dict:
+    """Replay one schedule through BOTH execution routes and time them.
+
+    Unfused: every ``fused_hop`` flag cleared, each bucket's stage walk
+    as its own per-call jitted ``shard_map`` — the pre-§3.13 path.
+    Fused: every fusable flag set, executed through a cached
+    :class:`~repro.core.plan_cache.StageExecutor`.  BOTH routes donate
+    their input buffers and chain ``bufs = run(bufs)`` across reps:
+    donation is not free on every algorithm (a ring hop reads the
+    whole input at every step, so in-place reuse costs XLA a buffer
+    copy), and donating only one side would fold that
+    allocation-discipline toll into what should be a pure
+    execution-route comparison.
+
+    Returns measured best-of-reps seconds for both routes, the
+    speedup, a fused-vs-unfused numeric residual (absmax-relative —
+    the SV008/SV009 comparison discipline; bit-exact for
+    none/bf16 wires, FMA-contraction 1-ulp territory for int8/fp8),
+    and the executor-cache stats after the run."""
+    import jax
+    import numpy as np
+
+    from repro.core import compat, reducers
+    from repro.core import schedule as schedule_mod
+    from repro.core.plan_cache import GLOBAL_EXECUTOR_CACHE
+
+    p = 1
+    for s in sched.axis_sizes:
+        p *= int(s)
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < p:
+        raise ValueError(f"schedule needs {p} devices over axes "
+                         f"{sched.axis_names}; only {len(devs)} "
+                         f"available")
+    mesh = compat.make_mesh(tuple(int(s) for s in sched.axis_sizes),
+                            tuple(sched.axis_names), devices=devs[:p])
+    P = jax.sharding.PartitionSpec
+    spec = P(tuple(sched.axis_names))
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+    itemsize = np.dtype(sched.wire_dtype).itemsize
+    host = []
+    for b in sched.buckets:
+        n = max(int(b.n_bytes) // itemsize, 1)
+        host.append(((np.arange(p * n) % 13) - 6.0)
+                    .astype(sched.wire_dtype))
+
+    def fresh():
+        return [jax.device_put(np.array(h), sharding) for h in host]
+
+    fused = schedule_mod.with_fused_hops(sched, True)
+    unfused = schedule_mod.with_fused_hops(sched, False)
+
+    fns = [jax.jit(compat.shard_map(
+        lambda xl, _st=b.stages: reducers.execute_stages(xl, _st),
+        mesh, in_specs=spec, out_specs=spec,
+        axis_names=set(sched.axis_names), check_vma=False),
+        donate_argnums=0)
+        for b in unfused.buckets]
+
+    def run_unfused(bufs):
+        out = [fn(x) for fn, x in zip(fns, bufs)]
+        for o in out:
+            o.block_until_ready()
+        return out
+
+    # reference values for the residual: a NON-donated copy of the walk
+    # (run_unfused consumes its inputs)
+    ref = [np.array(jax.jit(compat.shard_map(
+        lambda xl, _st=b.stages: reducers.execute_stages(xl, _st),
+        mesh, in_specs=spec, out_specs=spec,
+        axis_names=set(sched.axis_names), check_vma=False))(x))
+        for b, x in zip(unfused.buckets, fresh())]
+    run_unfused(fresh())                    # warm-up: compile
+
+    ex = GLOBAL_EXECUTOR_CACHE.executor_for(fused, fresh(), mesh)
+    got = ex(*fresh())                      # warm-up: trace + compile
+    for o in got:
+        o.block_until_ready()
+
+    # INTERLEAVED best-of-reps: host-device wall clocks drift with
+    # ambient load, so timing one route's whole block before the
+    # other's folds that drift into the speedup; alternating reps
+    # samples both routes under the same conditions and best-of
+    # discards the pauses
+    best_u = best_f = float("inf")
+    bufs_u, bufs_f = fresh(), fresh()
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        bufs_u = run_unfused(bufs_u)        # donated chain
+        best_u = min(best_u, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bufs_f = ex(*bufs_f)                # donated chain
+        for o in bufs_f:
+            o.block_until_ready()
+        best_f = min(best_f, time.perf_counter() - t0)
+
+    max_ratio = 0.0
+    for r, g in zip(ref, got):
+        absmax = float(np.max(np.abs(np.asarray(r))))
+        diff = float(np.max(np.abs(np.asarray(g) - np.asarray(r))))
+        if absmax > 0:
+            max_ratio = max(max_ratio, diff / absmax)
+        elif diff > 0:
+            max_ratio = float("inf")
+    metrics_mod.record_executor_cache(GLOBAL_EXECUTOR_CACHE)
+    return {
+        "unfused_s": best_u,
+        "fused_s": best_f,
+        "speedup": (best_u / best_f) if best_f > 0 else float("inf"),
+        "residual_rel": max_ratio,
+        "executor_traces": ex.traces,
+        "executor_stats": GLOBAL_EXECUTOR_CACHE.stats(),
+    }
+
+
+# ---------------------------------------------------------------------------
 # calibration + residual table
 # ---------------------------------------------------------------------------
 

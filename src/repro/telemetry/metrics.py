@@ -189,6 +189,25 @@ def record_plan_cache(cache, registry: Optional[MetricsRegistry] = None,
     g.set(stats["n_builds"], field="n_builds")
 
 
+def record_executor_cache(cache,
+                          registry: Optional[MetricsRegistry] = None,
+                          name: str = "executor_cache") -> None:
+    """Mirror a :class:`StageExecutorCache`'s ``stats()`` into gauges —
+    the compiled-executor tier of the pointer cache, next to the
+    layout-tier ``plan_cache`` gauge.  ``traces`` vs ``calls`` is the
+    retrace health signal: a warm cache holds traces == interned while
+    calls grows."""
+    reg = registry if registry is not None else REGISTRY
+    stats = cache.stats()
+    g = reg.gauge(name, help="StageExecutorCache introspection (stats())")
+    g.set(stats["hits"], field="hits")
+    g.set(stats["misses"], field="misses")
+    g.set(stats["hit_rate"], field="hit_rate")
+    g.set(stats["interned"], field="interned")
+    g.set(stats["traces"], field="traces")
+    g.set(stats["calls"], field="calls")
+
+
 def record_schedule(sched, registry: Optional[MetricsRegistry] = None) -> None:
     """Count scheduled wire bytes by algorithm×codec for a resolution.
 

@@ -1,0 +1,203 @@
+"""Fused-hop execution wall (DESIGN.md §3.13), run as a SUBPROCESS by
+test_reducers_multidev.py with 8 host devices.
+
+Pins the fused execution route — the paper's MVAPICH2-GDR-Opt design:
+per-hop decode -> fp32-accumulate -> encode fused into single kernel
+passes (kernels/fused_hop.py) driven by cached, donated
+``StageExecutor``s — against the stage-by-stage walk it replaces:
+
+  * p ∈ {3, 4, 6, 8} × {ring_rsa, rhd_rsa} × every executable codec:
+    the fused route lands BIT-EXACTLY on the unfused one for uncoded
+    and bf16 wires (same ops, same order), and within 2^-20 · absmax
+    for int8/fp8 (FMA contraction on the fused multiply-accumulate —
+    the SV009 comparison discipline), which is far inside the derived
+    SV008 codec tolerance either way;
+  * the flag witness: the fused schedule really carries ``fused_hop``
+    on its accumulating stages (a silent fall-through to the unfused
+    permuter cannot pass);
+  * ``StageExecutor`` via ``GLOBAL_EXECUTOR_CACHE``: second identical
+    request is a cache HIT returning the SAME executor; two calls, ONE
+    trace (zero retraces); donated input buffers are consumed
+    (``is_deleted``) and never aliased into the output; ``donate=False``
+    preserves the input;
+  * the ring reduce-scatter's rotated-chunk walk (PR 10 switched
+    ``jnp.take(..., mode="wrap")`` to ``lax.dynamic_slice_in_dim``) is
+    bit-exact against the vendor ``psum`` on integer-valued data at
+    every p — sums ≤ 7p are exact in f32, so ANY summation-order or
+    chunk-indexing drift shows as a bit flip.
+
+Exit code 0 = all checks passed."""
+from devflags import force_host_devices
+
+force_host_devices(8)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import codec as codec_mod
+from repro.core import reducers
+from repro.core import schedule as S
+from repro.core.compat import shard_map
+from repro.core.plan_cache import GLOBAL_EXECUTOR_CACHE, StageExecutorCache
+
+# fused-vs-unfused comparison bound for quantized wires: the fused
+# decode+accumulate is ONE multiply-add the backend may contract (FMA),
+# a 1-ulp-of-absmax effect — not a codec-tolerance effect
+FMA_REL = 2.0 ** -20
+
+
+def executable_codecs():
+    out = ["none", "bf16", "int8"]
+    if codec_mod.available("fp8_e4m3"):
+        out.append("fp8_e4m3")
+    return out
+
+
+def bucket_host(p, n_bytes, seed):
+    """Continuous float32 payload, global shape (p * n,)."""
+    n = max(n_bytes // 4, 1)
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(p * n) * 3.0).astype(np.float32)
+
+
+def run_stages(sched, mesh, host):
+    spec = P(tuple(sched.axis_names))
+    sharding = NamedSharding(mesh, spec)
+    outs = []
+    for b in sched.buckets:
+        fn = jax.jit(shard_map(
+            lambda xl, _st=b.stages: reducers.execute_stages(xl, _st),
+            mesh, in_specs=spec, out_specs=spec,
+            axis_names=set(sched.axis_names), check_vma=False))
+        outs.append(np.asarray(
+            fn(jax.device_put(np.array(host), sharding))))
+    return outs
+
+
+def check_fused_matches_unfused():
+    devs = jax.devices()
+    n_bytes = 64 * 1024
+    for p in (3, 4, 6, 8):
+        mesh = Mesh(np.array(devs[:p]), ("data",))
+        host = bucket_host(p, n_bytes, seed=p)
+        for strat in ("ring_rsa", "rhd_rsa"):
+            for cname in executable_codecs():
+                sched = S.synthetic([n_bytes], strat, (p,),
+                                    axis_names=("data",), codec=cname)
+                fused = S.with_fused_hops(sched, True)
+                unfused = S.with_fused_hops(sched, False)
+                n_flagged = sum(st.fused_hop
+                                for b in fused.buckets
+                                for st in b.stages)
+                assert n_flagged > 0, \
+                    f"p={p} {strat}:{cname}: no stage took the " \
+                    f"fused_hop flag — fused route never engaged"
+                assert not any(st.fused_hop for b in unfused.buckets
+                               for st in b.stages)
+                (got,) = run_stages(fused, mesh, host)
+                (ref,) = run_stages(unfused, mesh, host)
+                if cname in ("none", "bf16"):
+                    assert (got == ref).all(), \
+                        f"p={p} {strat}:{cname}: fused != unfused " \
+                        f"bit-exactly (max diff " \
+                        f"{np.max(np.abs(got - ref))})"
+                else:
+                    absmax = float(np.max(np.abs(ref)))
+                    diff = float(np.max(np.abs(got - ref)))
+                    assert diff <= FMA_REL * absmax, \
+                        f"p={p} {strat}:{cname}: fused-vs-unfused " \
+                        f"diff {diff} > FMA bound " \
+                        f"{FMA_REL * absmax}"
+    print("fused == unfused per codec ok (p in 3,4,6,8)")
+
+
+def check_executor_cache_and_donation():
+    devs = jax.devices()
+    p = 8
+    n_bytes = 32 * 1024
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    sched = S.with_fused_hops(
+        S.synthetic([n_bytes, n_bytes // 2], "rhd_rsa", (p,),
+                    axis_names=("data",), codec="int8"), True)
+    sharding = NamedSharding(mesh, P(("data",)))
+    hosts = [bucket_host(p, n_bytes, 11), bucket_host(p, n_bytes // 2, 12)]
+
+    def fresh():
+        # device_put of an already-correctly-sharded array ALIASES, so
+        # rebuild from host numpy — each call donates a genuine copy
+        return [jax.device_put(np.array(h), sharding) for h in hosts]
+
+    cache = StageExecutorCache()
+    ex = cache.executor_for(sched, fresh(), mesh)
+    assert cache.executor_for(sched, fresh(), mesh) is ex, \
+        "second identical request missed the executor cache"
+    snap = cache.stats_snapshot()
+    assert snap["hits"] == 1 and snap["misses"] == 1, snap
+
+    bufs = fresh()
+    out1 = ex(*bufs)
+    assert ex.traces == 1
+    assert all(b.is_deleted() for b in bufs), \
+        "donate=True inputs survived the call — donation is off"
+    got_np = [np.array(o) for o in out1]    # before out1 is donated
+    out2 = ex(*out1)
+    assert ex.traces == 1, \
+        f"second call retraced (traces={ex.traces})"
+    assert ex.calls == 2
+    for o in out2:
+        assert not o.is_deleted()
+
+    # donate=False: same schedule, distinct cache entry, input intact
+    keep = StageExecutorCache().executor_for(sched, fresh(), mesh,
+                                             donate=False)
+    bufs = fresh()
+    keep(*bufs)
+    assert not any(b.is_deleted() for b in bufs), \
+        "donate=False still consumed its inputs"
+
+    # numerics: executor output == plain unfused stage walk
+    unfused = S.with_fused_hops(sched, False)
+    for got, h, b in zip(got_np, hosts, unfused.buckets):
+        fn = jax.jit(shard_map(
+            lambda xl, _st=b.stages: reducers.execute_stages(xl, _st),
+            mesh, in_specs=P(("data",)), out_specs=P(("data",)),
+            axis_names={"data"}, check_vma=False))
+        ref = np.asarray(fn(jax.device_put(np.array(h), sharding)))
+        absmax = float(np.max(np.abs(ref)))
+        diff = float(np.max(np.abs(np.asarray(got) - ref)))
+        assert diff <= FMA_REL * absmax, (diff, FMA_REL * absmax)
+    print("executor cache hit/trace/donation ok")
+
+
+def check_dynamic_slice_ring_bit_exact():
+    """Integer-valued data in [0, 8): every partial sum ≤ 7p ≤ 56 is
+    exact in f32, so the dynamic-slice ring must match psum to the
+    BIT — any chunk-rotation indexing error lands on the wrong shard
+    and flips bits, it cannot hide in rounding."""
+    devs = jax.devices()
+    for p in (3, 4, 6, 8):
+        mesh = Mesh(np.array(devs[:p]), ("data",))
+        host = (np.arange(p * 960, dtype=np.float32) % 8.0)
+        sched = S.synthetic([host.nbytes], "ring_rsa", (p,),
+                            axis_names=("data",))
+        (got,) = run_stages(sched, mesh, host)
+        spec = P(("data",))
+        ref_fn = jax.jit(shard_map(
+            lambda xl: jax.lax.psum(xl, "data"), mesh, in_specs=spec,
+            out_specs=spec, axis_names={"data"}, check_vma=False))
+        ref = np.asarray(ref_fn(jax.device_put(
+            host, NamedSharding(mesh, spec))))
+        assert (got == ref).all(), \
+            f"p={p}: dynamic-slice ring != psum bit-exactly on " \
+            f"integer data (max diff {np.max(np.abs(got - ref))})"
+    print("dynamic-slice ring bit-exact vs psum ok (p in 3,4,6,8)")
+
+
+if __name__ == "__main__":
+    check_fused_matches_unfused()
+    check_executor_cache_and_donation()
+    check_dynamic_slice_ring_bit_exact()
+    GLOBAL_EXECUTOR_CACHE.clear()
+    print("ALL FUSED HOP CHECKS PASSED")

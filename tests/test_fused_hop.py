@@ -1,0 +1,357 @@
+"""Fused reduction hops (kernels/fused_hop.py) + stage executors
+(core/plan_cache.StageExecutor): the §3.13 property wall.
+
+What must hold for the fused route to be a legal drop-in:
+
+  1. ``hop_encode``/``hop_decode_add`` are BIT-FOR-BIT twins of
+     ``core/codec.py`` — same scale scalar (safe absmax, subnormal
+     ``tiny`` clamp), same payload bits — across the nasty regimes
+     (all-zero buffers, subnormal absmax, a single outlier);
+  2. the direct lowering (auto-detected non-TPU: kernel bodies run on
+     whole arrays through ``_HostRef``) is bit-exact with the Pallas
+     interpreter for encode, and within 1 contracted FMA
+     (2^-20 · absmax) for decode+accumulate;
+  3. a fused loopback hop equals the unfused
+     ``add + decode(encode(x))`` composition bit-exactly for
+     none/bf16 and within the FMA bound for int8/fp8 — always far
+     inside the SV008 derived tolerance;
+  4. executors: cache keying (hit on identical request, miss on any
+     key component change), one trace across many calls, donation
+     consumes inputs and never aliases them into live outputs;
+  5. the analytic re-pricing shifts crossovers the right way
+     (``crossover_bytes(fused=True) >= unfused`` — cheaper coded hops
+     extend RHD's reign), and SV009/HL005 hold the IR side.
+
+The multidev wall (tests/multidev_fused_hop_checks.py) executes the
+same contracts through real 8-device schedules.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec, cost_model
+from repro.core import schedule as schedule_mod
+from repro.core import selector as sel
+from repro.kernels import fused_hop as fh
+
+# Only the property tests need hypothesis (dev extra); the executor,
+# pricing, and SV009/HL005 tests below run everywhere.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):                       # stand-in so decorators parse
+        return lambda f: pytest.mark.skip(
+            reason="property tests need the hypothesis dev extra")(f)
+
+    def settings(**kw):
+        return lambda f: f
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+CODED = [c for c in fh.HOP_CODECS
+         if c != "none" and codec.available(c)]
+FMA_REL = 2.0 ** -20
+
+
+def _buffer(n, regime, rng):
+    if regime == "zero":
+        return np.zeros(n, np.float32)
+    if regime == "subnormal":
+        # absmax below float32 tiny: the scale hits the tiny clamp
+        return (rng.standard_normal(n) * 1e-41).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    if regime == "outlier":
+        x[rng.integers(0, n)] = 1e4
+    return x
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel encode == codec.encode, bit for bit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(CODED),
+    n=st.integers(1, 4096),
+    regime=st.sampled_from(["normal", "zero", "subnormal", "outlier"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hop_encode_is_codec_encode_bitwise(name, n, regime, seed):
+    x = _buffer(n, regime, np.random.default_rng(seed))
+    kp, ks = fh.hop_encode(name, jnp.asarray(x))
+    cp, cs = codec.encode(name, jnp.asarray(x))
+    assert kp.dtype == cp.dtype
+    assert (np.asarray(kp).view(np.uint8)
+            == np.asarray(cp).view(np.uint8)).all(), \
+        f"{name}/{regime}: kernel payload bits != codec payload bits"
+    if ks is None:
+        assert cs is None
+    else:
+        assert float(ks) == float(cs), \
+            f"{name}/{regime}: scale {float(ks)} != codec {float(cs)}"
+
+
+# ---------------------------------------------------------------------------
+# 2. direct lowering == Pallas interpreter
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(["none"] + CODED),
+    n=st.integers(1, 4096),
+    with_add=st.booleans(),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_direct_lowering_matches_interpreter(name, n, with_add, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 3.0)
+    add = jnp.asarray(rng.standard_normal(n).astype(np.float32)) \
+        if with_add else None
+    pd, sd = fh.hop_encode(name, x)                   # direct
+    pi, si = fh.hop_encode(name, x, interpret=True)   # Pallas interp
+    if name != "none":
+        assert (np.asarray(pd).view(np.uint8)
+                == np.asarray(pi).view(np.uint8)).all()
+        if sd is not None:
+            assert float(sd) == float(si)
+    od = np.asarray(fh.hop_decode_add(name, pd, sd, add))
+    oi = np.asarray(fh.hop_decode_add(name, pi, si, add,
+                                      interpret=True))
+    if name in ("none", "bf16"):
+        assert (od == oi).all(), \
+            f"{name}: direct decode+add != interpreter bit-exactly"
+    else:
+        # the interpreter's compiled kernel may contract the
+        # multiply-accumulate into one FMA; 1 ulp of absmax covers it
+        absmax = max(float(np.max(np.abs(oi))), 1e-30)
+        assert float(np.max(np.abs(od - oi))) <= FMA_REL * absmax
+
+
+# ---------------------------------------------------------------------------
+# 3. fused loopback hop == unfused composition
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(["none", "bf16"] + CODED),
+    n=st.integers(1, 4096),
+    regime=st.sampled_from(["normal", "zero", "subnormal", "outlier"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fused_hop_matches_unfused_composition(name, n, regime, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_buffer(n, regime, rng))
+    add = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = np.asarray(fh.hop_roundtrip_add(name, x, add))
+    ref = np.asarray(add + codec.roundtrip(name, x)) if name != "none" \
+        else np.asarray(add + x)
+    if name in ("none", "bf16"):
+        assert (got == ref).all(), \
+            f"{name}/{regime}: fused loopback != unfused bit-exactly"
+    else:
+        absmax = float(np.max(np.abs(ref)))
+        diff = float(np.max(np.abs(got - ref)))
+        assert diff <= FMA_REL * max(absmax, 1e-30), \
+            f"{name}/{regime}: diff {diff} > FMA bound"
+        # ... and both sit far inside the SV008 per-quantize bound
+        eps = codec.get(name).eps
+        in_absmax = float(np.max(np.abs(np.asarray(x))))
+        if in_absmax > 0:
+            assert float(np.max(np.abs(
+                got - np.asarray(add + x)))) <= 1.5 * eps * in_absmax
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError, match="unknown hop codec"):
+        fh.hop_encode("int4", jnp.zeros(8))
+    with pytest.raises(ValueError, match="unknown hop codec"):
+        fh.hop_decode_add("q", jnp.zeros(8), None)
+
+
+def test_hop_add_shape_mismatch_rejected():
+    with pytest.raises(ValueError, match="shape"):
+        fh.hop_decode_add("none", jnp.zeros(8), None, jnp.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# 4. executors: cache keying, retrace health, donation
+# ---------------------------------------------------------------------------
+
+def _mesh_and_sched(n_bytes=4096, codec_name="int8", strat="ring_rsa"):
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    p = min(len(devs), 2) if len(devs) > 1 else 1
+    if p < 2:
+        pytest.skip("executor tests need >= 2 devices")
+    mesh = Mesh(np.array(devs[:p]), ("data",))
+    sched = schedule_mod.with_fused_hops(
+        schedule_mod.synthetic([n_bytes], strat, (p,),
+                               axis_names=("data",), codec=codec_name),
+        True)
+    return p, mesh, sched
+
+
+def _fresh(p, mesh, sched):
+    from jax.sharding import NamedSharding, PartitionSpec
+    sharding = NamedSharding(mesh, PartitionSpec(("data",)))
+    out = []
+    for b in sched.buckets:
+        n = max(b.n_bytes // 4, 1)
+        h = ((np.arange(p * n) % 11) - 5.0).astype(np.float32)
+        out.append(jax.device_put(h, sharding))
+    return out
+
+
+def test_executor_cache_hit_miss_and_key_components():
+    from repro.core.plan_cache import StageExecutorCache
+    p, mesh, sched = _mesh_and_sched()
+    cache = StageExecutorCache()
+    ex = cache.executor_for(sched, _fresh(p, mesh, sched), mesh)
+    assert cache.executor_for(sched, _fresh(p, mesh, sched), mesh) is ex
+    snap = cache.stats_snapshot()
+    assert snap["hits"] == 1 and snap["misses"] == 1
+    # any key component change misses: donate flag, codec, shapes
+    ex2 = cache.executor_for(sched, _fresh(p, mesh, sched), mesh,
+                             donate=False)
+    assert ex2 is not ex
+    other = schedule_mod.with_fused_hops(
+        schedule_mod.synthetic([8192], "ring_rsa", (p,),
+                               axis_names=("data",), codec="int8"), True)
+    ex3 = cache.executor_for(other, _fresh(p, mesh, other), mesh)
+    assert ex3 is not ex
+    assert cache.stats_snapshot()["misses"] == 3
+    cache.clear()
+    assert cache.stats_snapshot()["interned"] == 0
+
+
+def test_executor_zero_retraces_and_donation():
+    from repro.core.plan_cache import StageExecutorCache
+    p, mesh, sched = _mesh_and_sched()
+    ex = StageExecutorCache().executor_for(
+        sched, _fresh(p, mesh, sched), mesh)
+    bufs = _fresh(p, mesh, sched)
+    out1 = ex(*bufs)
+    assert ex.traces == 1 and ex.calls == 1
+    assert all(b.is_deleted() for b in bufs), \
+        "donated inputs survived the call"
+    out1_np = [np.array(o) for o in out1]
+    out2 = ex(*out1)
+    assert ex.traces == 1, "second call retraced"
+    assert ex.calls == 2
+    # outputs are live, never aliases of a deleted input
+    for o in out2:
+        assert not o.is_deleted()
+        np.array(o)                         # readable
+    assert all(np.all(np.isfinite(o)) for o in out1_np)
+
+
+def test_executor_donate_false_preserves_inputs():
+    from repro.core.plan_cache import StageExecutorCache
+    p, mesh, sched = _mesh_and_sched()
+    ex = StageExecutorCache().executor_for(
+        sched, _fresh(p, mesh, sched), mesh, donate=False)
+    bufs = _fresh(p, mesh, sched)
+    before = [np.array(b) for b in bufs]
+    ex(*bufs)
+    for b, ref in zip(bufs, before):
+        assert not b.is_deleted()
+        assert (np.array(b) == ref).all()
+
+
+def test_executor_wrong_arity_rejected():
+    from repro.core.plan_cache import StageExecutorCache
+    p, mesh, sched = _mesh_and_sched()
+    ex = StageExecutorCache().executor_for(
+        sched, _fresh(p, mesh, sched), mesh)
+    with pytest.raises(ValueError, match="bucket"):
+        ex(*(_fresh(p, mesh, sched) * 2))
+
+
+# ---------------------------------------------------------------------------
+# 5. pricing, SV009, HL005
+# ---------------------------------------------------------------------------
+
+def test_fused_gamma_cheaper_than_unfused():
+    assert cost_model.quant_gamma(fused=True) \
+        < cost_model.quant_gamma(fused=False)
+
+
+@pytest.mark.parametrize("p", [6, 12])
+def test_fused_crossover_extends_rhd_reign(p):
+    """Fused pricing makes the coded quantize toll cheaper per wire
+    byte; RHD's pre/post fold moves more wire bytes than ring, so the
+    toll relief favors RHD and the crossover moves OUT (or stays)."""
+    for cname in ("int8", "bf16"):
+        cu = sel.crossover_bytes(p, link=cost_model.ICI, codec=cname)
+        cf = sel.crossover_bytes(p, link=cost_model.ICI, codec=cname,
+                                 fused=True)
+        assert cf >= cu, \
+            f"p={p} {cname}: fused crossover {cf} < unfused {cu}"
+
+
+def test_sv009_fused_schedule_verifies_clean():
+    from repro.analysis import verify
+    for strat in ("ring_rsa", "rhd_rsa"):
+        sched = schedule_mod.with_fused_hops(
+            schedule_mod.synthetic([1 << 20], strat, (8,),
+                                   axis_names=("data",), codec="int8"),
+            True)
+        diags = verify.verify_schedule(sched)
+        assert not [d for d in diags if d.severity == "error"], \
+            [d.message for d in diags]
+        # same derived tolerance as the unfused twin (the SV009 claim)
+        unfused = schedule_mod.with_fused_hops(sched, False)
+        assert verify.codec_tolerance(sched) \
+            == verify.codec_tolerance(unfused)
+
+
+def test_sv009_flags_fused_nonaccumulating_stage():
+    import dataclasses
+    from repro.analysis import verify
+    sched = schedule_mod.synthetic([1 << 20], "psum", (8,),
+                                   axis_names=("data",))
+    st0 = sched.buckets[0].stages[0]
+    bad = dataclasses.replace(
+        sched, buckets=(dataclasses.replace(
+            sched.buckets[0],
+            stages=(dataclasses.replace(st0, fused_hop=True),)
+            + sched.buckets[0].stages[1:]),))
+    diags = verify.verify_schedule(bad)
+    assert any(d.rule_id == "SV009" and d.severity == "error"
+               for d in diags), [d.message for d in diags]
+
+
+def test_hl005_budget_charges_scale_scalars_only():
+    from repro.analysis import hlo_lint
+    sched = schedule_mod.with_fused_hops(
+        schedule_mod.synthetic([1 << 20], "rhd_rsa", (8,),
+                               axis_names=("data",), codec="int8"), True)
+    hops = sum(
+        hlo_lint.stage_permute_steps(st)
+        for b in sched.buckets for st in b.stages
+        if st.fused_hop and (st.codec or "none") != "none"
+        and st.hlo_kind == "collective-permute")
+    assert hlo_lint.fused_f32_permute_budget(sched) == hops * 4
+
+
+def test_hl005_flags_decayed_f32_wire():
+    from repro.analysis import hlo_lint
+    sched = schedule_mod.with_fused_hops(
+        schedule_mod.synthetic([1 << 20], "ring_rsa", (8,),
+                               axis_names=("data",), codec="int8"), True)
+    # a fat f32 permute that should have been int8-encoded
+    fake = ('  %collective-permute.1 = f32[32768] '
+            'collective-permute(f32[32768] %x), '
+            'source_target_pairs={{0,1}}')
+    diags = hlo_lint.lint_hlo(sched, hlo_text=fake, collective_bytes={})
+    assert any(d.rule_id == "HL005" and d.severity == "error"
+               for d in diags), [d.message for d in diags]

@@ -83,6 +83,19 @@ def test_multidev_codec_checks():
 
 
 @pytest.mark.timeout(900)
+def test_multidev_fused_hop_checks():
+    """Fused-hop execution wall (DESIGN.md §3.13) on p ∈ {3, 4, 6, 8}:
+    the fused decode→accumulate→encode route bit-exact vs the unfused
+    stage walk for none/bf16 wires and within 2^-20·absmax (FMA
+    contraction) for int8/fp8; StageExecutor cache hit on the second
+    identical request with zero retraces and donated inputs consumed;
+    and the dynamic-slice ring reduce-scatter bit-exact vs psum on
+    integer-valued data."""
+    _run_checks("multidev_fused_hop_checks.py", 8,
+                "ALL FUSED HOP CHECKS PASSED")
+
+
+@pytest.mark.timeout(900)
 def test_multidev_three_axis_checks():
     """Three-level composed schedules on the (2, 2, 2)
     (pod × data × model) mesh — the full-manual lowering's model
